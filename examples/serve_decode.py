@@ -1,0 +1,21 @@
+"""Serving example: batched prefill + greedy decode with ring-buffer KV caches.
+
+Uses the same decode step the decode_32k / long_500k dry-run cells lower; on SWA
+architectures (try --arch mixtral-8x7b) the cache is a ring bounded by the window.
+"""
+import sys
+
+from repro.launch import serve as serve_cli
+
+
+def main():
+    arch = sys.argv[sys.argv.index("--arch") + 1] if "--arch" in sys.argv \
+        else "h2o-danube-1.8b"
+    serve_cli.main([
+        "--arch", arch, "--reduced",
+        "--batch", "4", "--prompt-len", "32", "--gen-len", "32",
+    ])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""End-to-end driver: continual LM training through the production launcher.
+
+Runs the full stack — config -> mesh -> pjit step with fused async rehearsal ->
+prefetching data pipeline -> checkpointing -> per-task eval — via
+``repro.launch.train``. The default preset trains a ~5M-param llama-family model for
+a few hundred steps on CPU (~10 min); pass ``--full`` to use the real smollm-135m
+config (sized for a TPU slice; will be slow on CPU).
+"""
+import sys
+
+from repro.launch import train as train_cli
+
+
+def main():
+    full = "--full" in sys.argv
+    argv = [
+        "--arch", "smollm-135m",
+        "--tasks", "2",
+        "--steps-per-task", "150",
+        "--seq-len", "128",
+        "--global-batch", "8",
+        "--mode", "async",
+        "--ckpt-dir", "/tmp/repro_e2e_ckpt",
+        "--ckpt-every", "100",
+        "--log-every", "25",
+    ]
+    if not full:
+        argv.append("--reduced")
+    train_cli.main(argv)
+
+
+if __name__ == "__main__":
+    main()

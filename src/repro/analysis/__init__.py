@@ -1,0 +1,11 @@
+from repro.analysis.roofline import (
+    HBM_BW,
+    ICI_BW,
+    PEAK_FLOPS,
+    RooflineResult,
+    analyze,
+    parse_collectives,
+)
+
+__all__ = ["HBM_BW", "ICI_BW", "PEAK_FLOPS", "RooflineResult", "analyze",
+           "parse_collectives"]

@@ -1,0 +1,259 @@
+"""Roofline analysis from compiled dry-run artifacts (no hardware required).
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI (spec'd
+constants). The compiled module is post-SPMD-partitioning, so ``cost_analysis()``
+FLOPs/bytes and all HLO shapes are PER-DEVICE; terms are therefore per-chip step
+times directly:
+
+    compute    = flops / PEAK_FLOPS
+    memory     = bytes_accessed / HBM_BW
+    collective = sum over collective ops of wire_bytes(op) / ICI_BW
+
+wire_bytes uses ring-algorithm estimates on the per-device result shapes:
+  all-reduce 2·S·(g-1)/g | all-gather S·(g-1)/g | reduce-scatter S·(g-1)
+  all-to-all S·(g-1)/g   | collective-permute S
+(g = replica-group size parsed from the op; S = per-device result bytes; for
+all-gather S is the gathered size, for reduce-scatter the scattered size — both make
+the ring estimate ≈ the data actually crossing links per chip.)
+
+MODEL_FLOPS = 6·N_active·tokens (train) or 2·N_active·tokens (inference) per device
+group; the ratio MODEL_FLOPS / (flops·chips) exposes remat recompute and dispatch
+waste.
+"""
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import asdict, dataclass, field
+from typing import Dict, Optional, Tuple
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes/s / chip
+ICI_BW = 50e9  # bytes/s / link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+    "pred": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:\w+\[[0-9,]*\](?:\{[^}]*\})?))\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\("
+)
+_GROUPS_RE = re.compile(r"replica_groups=\{(\{[^}]*\}(?:,\{[^}]*\})*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_SRC_TGT_RE = re.compile(r"source_target_pairs=\{")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Bytes of an HLO type string (sums tuple elements)."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:  # iota format [num_groups,group_size]<=[...]
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        first = m.group(1).split("},")[0]
+        return max(1, first.count(",") + 1)
+    return 2  # unknown: conservative
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Per collective kind: summed per-chip wire bytes + op count."""
+    out: Dict[str, Dict[str, float]] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        type_str, kind = m.group(1), m.group(2)
+        size = _shape_bytes(type_str)
+        g = _group_size(line)
+        if kind == "all-reduce":
+            wire = 2 * size * (g - 1) / g
+        elif kind == "all-gather":
+            wire = size * (g - 1) / g
+        elif kind == "reduce-scatter":
+            wire = size * (g - 1)
+        elif kind == "all-to-all":
+            wire = size * (g - 1) / g
+        else:  # collective-permute
+            wire = size
+        d = out.setdefault(kind, {"bytes": 0.0, "count": 0})
+        d["bytes"] += wire
+        d["count"] += 1
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Ideal-time estimators (the "roofline" the fractions are measured against)
+# ---------------------------------------------------------------------------
+
+
+def _attn_layers(cfg) -> int:
+    return sum(1 for i in range(cfg.num_layers) if cfg.layer_kind(i) == "attn") + (
+        2 * cfg.num_encoder_layers  # whisper: enc self-attn + dec cross-attn
+    )
+
+
+def _ssm_layers(cfg) -> int:
+    return sum(1 for i in range(cfg.num_layers) if cfg.layer_kind(i) == "ssm")
+
+
+def estimate_model_flops(cfg, kind: str, tokens: int, ctx_len: int) -> float:
+    """Useful-math FLOPs: 6·N_active·D (train) / 2·N_active·D (inference) for the
+    linear layers, PLUS the attention score/value matmuls (dominant at long context;
+    causal halves the average context; SWA caps it) and the SSD state math."""
+    mult = 6 if kind == "train" else 2
+    total = float(mult * cfg.active_param_count() * tokens)
+    if cfg.num_heads:
+        if kind == "decode":
+            ctx = min(ctx_len, cfg.sliding_window) if cfg.sliding_window else ctx_len
+        else:
+            eff = min(ctx_len, cfg.sliding_window) if cfg.sliding_window else ctx_len
+            ctx = eff / 2  # causal average
+        attn_fwd = 4.0 * cfg.num_heads * cfg.head_dim * tokens * ctx
+        total += attn_fwd * (3 if kind == "train" else 1) * _attn_layers(cfg)
+    if cfg.ssm_state:
+        d_in = cfg.ssm_expand * cfg.d_model
+        # state inject + output read (~2·d_in·N each) + intra-chunk quadratic term
+        per_tok = 4.0 * d_in * cfg.ssm_state + 2.0 * d_in * (cfg.ssm_chunk / 2)
+        total += per_tok * tokens * (3 if kind == "train" else 1) * _ssm_layers(cfg)
+    return total
+
+
+def estimate_min_bytes_per_chip(cfg, kind: str, tokens: int, ctx_len: int,
+                                chips: int, model_size: int,
+                                cache_bytes_total: float = 0.0) -> float:
+    """HBM-traffic floor per chip per step (perfect fusion):
+
+      train:   20 B/param local (bf16 fwd+bwd reads, f32 grad + opt state r/w)
+               + ~8 activation tensors/layer streamed once each way
+      prefill: 2 B/param + 4 tensors/layer
+      decode:  2 B/param (whole model read per step) + the KV/SSM cache read+write
+    """
+    params_local = cfg.param_count() / max(model_size, 1)
+    tok_local = tokens / chips
+    act_width = cfg.d_model * 2  # bf16
+    layers = cfg.num_layers + cfg.num_encoder_layers
+    if kind == "train":
+        return 20.0 * params_local + 8 * layers * tok_local * act_width
+    if kind == "prefill":
+        return 2.0 * params_local + 4 * layers * tok_local * act_width
+    return 2.0 * params_local + 1.5 * cache_bytes_total / chips
+
+
+def cache_bytes_total(cfg, batch: int, seq_len: int) -> float:
+    """Decode-cache footprint (bf16 KV rings / f32 SSM states), whole model."""
+    total = 0.0
+    for i in range(cfg.num_layers):
+        if cfg.layer_kind(i) == "attn":
+            size = min(cfg.sliding_window, seq_len) if cfg.sliding_window else seq_len
+            total += 2 * batch * size * cfg.num_kv_heads * cfg.head_dim * 2
+        else:
+            d_in = cfg.ssm_expand * cfg.d_model
+            h = d_in // cfg.ssm_head_dim
+            total += batch * h * cfg.ssm_state * cfg.ssm_head_dim * 4
+    total += cfg.num_layers and 0.0
+    for _ in range(cfg.num_encoder_layers):  # whisper decoder: self + cross caches
+        total += 4 * batch * seq_len * cfg.num_kv_heads * cfg.head_dim * 2
+    return total
+
+
+def ideal_seconds(cfg, kind: str, tokens: int, ctx_len: int, chips: int,
+                  model_size: int, batch: int = 0) -> Tuple[float, float]:
+    """(ideal_compute_s, ideal_memory_s) per chip."""
+    cb = cache_bytes_total(cfg, batch, ctx_len) if kind == "decode" else 0.0
+    fl = estimate_model_flops(cfg, kind, tokens, ctx_len) / chips
+    by = estimate_min_bytes_per_chip(cfg, kind, tokens, ctx_len, chips, model_size, cb)
+    return fl / PEAK_FLOPS, by / HBM_BW
+
+
+@dataclass
+class RooflineResult:
+    arch: str
+    shape: str
+    mesh: str
+    kind: str  # train | prefill | decode
+    chips: int
+    flops_per_chip: float
+    bytes_per_chip: float
+    collective_bytes_per_chip: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: float  # useful-math FLOPs, global
+    useful_ratio: float  # model_flops / (flops_per_chip * chips)
+    roofline_fraction: float  # model-flops-time / dominant-term time
+    per_collective: Dict[str, Dict[str, float]] = field(default_factory=dict)
+    memory_per_device_bytes: Optional[float] = None
+    notes: str = ""
+
+    def to_json(self) -> str:
+        return json.dumps(asdict(self), indent=1)
+
+
+def analyze(
+    *,
+    arch: str,
+    shape: str,
+    mesh_name: str,
+    kind: str,
+    chips: int,
+    cost: Dict[str, float],
+    hlo_text: str,
+    active_params: int,
+    tokens_per_step: int,
+    memory_stats=None,
+    notes: str = "",
+) -> RooflineResult:
+    flops = float(cost.get("flops", 0.0))
+    bytes_accessed = float(cost.get("bytes accessed", 0.0))
+    coll = parse_collectives(hlo_text)
+    coll_bytes = sum(d["bytes"] for d in coll.values())
+
+    compute_s = flops / PEAK_FLOPS
+    memory_s = bytes_accessed / HBM_BW
+    collective_s = coll_bytes / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+
+    mult = 6 if kind == "train" else 2
+    model_flops = mult * active_params * tokens_per_step
+    global_flops = max(flops * chips, 1.0)
+    useful = model_flops / global_flops
+    # fraction of the dominant-term roofline that useful math occupies
+    ideal_s = (model_flops / chips) / PEAK_FLOPS
+    roofline_fraction = ideal_s / max(max(terms.values()), 1e-12)
+
+    mem_bytes = None
+    if memory_stats is not None:
+        try:
+            mem_bytes = float(memory_stats.output_size_in_bytes
+                              + memory_stats.temp_size_in_bytes)
+        except AttributeError:
+            pass
+    return RooflineResult(
+        arch=arch, shape=shape, mesh=mesh_name, kind=kind, chips=chips,
+        flops_per_chip=flops, bytes_per_chip=bytes_accessed,
+        collective_bytes_per_chip=coll_bytes,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        bottleneck=bottleneck, model_flops=model_flops, useful_ratio=useful,
+        roofline_fraction=roofline_fraction, per_collective=coll,
+        memory_per_device_bytes=mem_bytes, notes=notes,
+    )

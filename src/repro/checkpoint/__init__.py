@@ -1,0 +1,3 @@
+from repro.checkpoint.manager import CheckpointManager, reshard_buffer
+
+__all__ = ["CheckpointManager", "reshard_buffer"]

@@ -1,0 +1,145 @@
+"""Checkpoint manager: async save, atomic publish, retention, elastic restore.
+
+State = arbitrary pytree (params / optimizer / rehearsal buffer / PRNG key) + a JSON
+metadata blob (step, data cursor, worker count). Saves run on a background thread
+(training continues — matching the framework's overlap-everything philosophy); the
+checkpoint directory is written to a temp name and atomically renamed, so a crash
+mid-save never corrupts the latest checkpoint. ``restore`` reads the newest valid
+checkpoint; ``reshard_buffer`` redistributes rehearsal state when the worker count
+changes (elastic scaling).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(state) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(state)[0]:
+        flat[jax.tree_util.keystr(path)] = np.asarray(leaf)
+    return flat
+
+
+def _unflatten(template, arrays: Dict[str, np.ndarray]):
+    leaves = []
+    for path, leaf in jax.tree_util.tree_flatten_with_path(template)[0]:
+        key = jax.tree_util.keystr(path)
+        if key not in arrays:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = arrays[key]
+        leaves.append(arr.astype(leaf.dtype) if hasattr(leaf, "dtype") else arr)
+    treedef = jax.tree_util.tree_structure(template)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3, async_save: bool = True):
+        self.dir = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------------
+    def save(self, step: int, state, metadata: Optional[Dict] = None):
+        """Snapshot ``state`` at ``step``. Returns immediately if async."""
+        # materialise on host *before* handing to the thread (donation safety)
+        flat = _flatten(jax.tree_util.tree_map(np.asarray, state))
+        meta = dict(metadata or {}, step=int(step), time=time.time())
+        if self._thread is not None:
+            self._thread.join()  # one in-flight save at a time
+        if self.async_save:
+            self._thread = threading.Thread(target=self._write, args=(step, flat, meta))
+            self._thread.start()
+        else:
+            self._write(step, flat, meta)
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, flat: Dict[str, np.ndarray], meta: Dict):
+        final = os.path.join(self.dir, f"step_{step:010d}")
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        np.savez(os.path.join(tmp, "state.npz"), **{k: v for k, v in flat.items()})
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump(meta, f)
+        os.replace(tmp, final) if not os.path.exists(final) else shutil.rmtree(tmp)
+        self._gc()
+
+    def _gc(self):
+        steps = sorted(self.list_steps())
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:010d}"), ignore_errors=True)
+
+    # ------------------------------------------------------------------
+    def list_steps(self):
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                if os.path.exists(os.path.join(self.dir, name, "meta.json")):
+                    out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.list_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, template, step: Optional[int] = None) -> Tuple[Any, Dict]:
+        """Restore into the structure of ``template``. Returns (state, metadata)."""
+        self.wait()
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.dir}")
+        path = os.path.join(self.dir, f"step_{step:010d}")
+        arrays = dict(np.load(os.path.join(path, "state.npz"), allow_pickle=False))
+        with open(os.path.join(path, "meta.json")) as f:
+            meta = json.load(f)
+        return _unflatten(template, arrays), meta
+
+
+# ---------------------------------------------------------------------------
+# Elastic re-sharding of the distributed rehearsal buffer (N -> N' workers)
+# ---------------------------------------------------------------------------
+
+
+def reshard_buffer(data_leaves, counts: np.ndarray, n_new: int):
+    """Redistribute buffer contents across a new worker count.
+
+    ``data_leaves``: pytree of [N, K, slots, ...]; ``counts``: [N, K] valid entries.
+    Valid representatives are pooled per bucket and dealt round-robin to the new
+    workers (preserving the per-bucket capacity bound — excess representatives beyond
+    the shrunken aggregate capacity are dropped uniformly, matching the paper's
+    random-eviction semantics).
+    Returns (new_data_leaves [N', K, slots, ...], new_counts [N', K]).
+    """
+    counts = np.asarray(counts)
+    n_old, k = counts.shape
+    leaves, treedef = jax.tree_util.tree_flatten(data_leaves)
+    leaves = [np.asarray(l) for l in leaves]
+    slots = leaves[0].shape[2]
+
+    new_leaves = [np.zeros((n_new,) + l.shape[1:], l.dtype) for l in leaves]
+    new_counts = np.zeros((n_new, k), np.int64)
+    for b in range(k):
+        pool = [(w, s) for w in range(n_old) for s in range(int(counts[w, b]))]
+        for j, (w, s) in enumerate(pool):
+            dst_w, dst_s = j % n_new, j // n_new
+            if dst_s >= slots:
+                break  # aggregate capacity shrank: drop the tail (random order already)
+            for l_old, l_new in zip(leaves, new_leaves):
+                l_new[dst_w, b, dst_s] = l_old[w, b, s]
+            new_counts[dst_w, b] = max(new_counts[dst_w, b], dst_s + 1)
+    return jax.tree_util.tree_unflatten(treedef, new_leaves), new_counts.astype(np.int32)

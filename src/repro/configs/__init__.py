@@ -1,0 +1,71 @@
+"""Architecture registry: ``get_config(arch_id)`` / ``get_reduced(arch_id)`` / ``ARCHS``."""
+from repro.configs.base import (
+    MeshConfig,
+    ModelConfig,
+    RehearsalConfig,
+    RunConfig,
+    ShapeConfig,
+    SHAPES,
+    TrainConfig,
+    cell_applicable,
+    reduce_model,
+)
+from repro.configs import (
+    mixtral_8x7b,
+    phi35_moe,
+    smollm_135m,
+    h2o_danube_1_8b,
+    stablelm_3b,
+    gemma_2b,
+    whisper_tiny,
+    mamba2_370m,
+    jamba_v01,
+    qwen2_vl_72b,
+    resnet50_cl,
+)
+
+_MODULES = (
+    mixtral_8x7b,
+    phi35_moe,
+    smollm_135m,
+    h2o_danube_1_8b,
+    stablelm_3b,
+    gemma_2b,
+    whisper_tiny,
+    mamba2_370m,
+    jamba_v01,
+    qwen2_vl_72b,
+)
+
+REGISTRY = {m.ARCH_ID: m for m in _MODULES}
+ARCHS = tuple(REGISTRY)  # the 10 assigned LM-family architectures
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id not in REGISTRY:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(REGISTRY)}")
+    return REGISTRY[arch_id].full()
+
+
+def get_reduced(arch_id: str) -> ModelConfig:
+    if arch_id not in REGISTRY:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(REGISTRY)}")
+    return REGISTRY[arch_id].reduced()
+
+
+__all__ = [
+    "ARCHS",
+    "REGISTRY",
+    "SHAPES",
+    "MeshConfig",
+    "ModelConfig",
+    "RehearsalConfig",
+    "RunConfig",
+    "ShapeConfig",
+    "TrainConfig",
+    "cell_applicable",
+    "get_config",
+    "get_reduced",
+    "reduce_model",
+    "resnet50_cl",
+]

@@ -1,0 +1,42 @@
+"""Core: the paper's distributed rehearsal buffer + CL strategies."""
+from repro.core.rehearsal import (
+    BufferState,
+    augment_batch,
+    buffer_dims,
+    init_buffer,
+    local_sample,
+    local_update,
+    mask_invalid,
+)
+from repro.core.distributed import (
+    augment_global,
+    init_distributed_buffer,
+    make_sharded_update,
+    sample_global,
+    update_and_sample,
+)
+from repro.core.strategies import TrainCarry, carry_specs, init_carry, make_cl_step
+from repro.core.cl_loop import CLRunResult, run_continual, topk_accuracy
+
+__all__ = [
+    "BufferState",
+    "CLRunResult",
+    "TrainCarry",
+    "augment_batch",
+    "augment_global",
+    "buffer_dims",
+    "carry_specs",
+    "init_buffer",
+    "init_carry",
+    "init_distributed_buffer",
+    "init_distributed_buffer",
+    "local_sample",
+    "local_update",
+    "make_cl_step",
+    "make_sharded_update",
+    "mask_invalid",
+    "run_continual",
+    "sample_global",
+    "topk_accuracy",
+    "update_and_sample",
+]

@@ -1,0 +1,84 @@
+"""Compressed rehearsal-buffer records (paper §VII's suggested data reduction).
+
+Float record fields (VLM patch embeddings, audio frames — the fat records) are stored
+int8 row-quantized: 4x more representatives per byte of S_max. Integer fields (tokens,
+labels) pass through. The codec is applied at the strategy boundary: ``encode`` before
+Alg-1 insertion, ``decode`` after sampling — the buffer itself stays a dumb pytree
+store, and the all_to_all exchange moves the *compressed* bytes (4x wire saving too).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+
+def _is_float(leaf):
+    return jnp.issubdtype(jnp.asarray(leaf).dtype if not hasattr(leaf, "dtype")
+                          else leaf.dtype, jnp.floating)
+
+
+def compressed_spec(item_spec) -> Any:
+    """Transform a record ShapeDtypeStruct spec into its stored (compressed) form."""
+
+    def one(path, leaf):
+        if not _is_float(leaf):
+            return {"raw": leaf}
+        flat = 1
+        for d in leaf.shape:
+            flat *= d
+        return {
+            "q": jax.ShapeDtypeStruct((flat,), jnp.int8),
+            "scale": jax.ShapeDtypeStruct((1,), jnp.float32),
+        }
+
+    return jax.tree_util.tree_map_with_path(one, item_spec)
+
+
+def encode_batch(batch, item_spec):
+    """Quantize the float leaves of a [B, ...] record batch (per-record scales)."""
+
+    def one(path, spec_leaf, x):
+        if not _is_float(spec_leaf):
+            return {"raw": x}
+        b = x.shape[0]
+        q, s = ops.quantize(x.reshape(b, -1))
+        return {"q": q, "scale": s.reshape(b, 1)[:, 0:1]}
+
+    return jax.tree_util.tree_map_with_path(
+        lambda p, sl, xl: one(p, sl, xl), item_spec, batch
+    )
+
+
+def decode_batch(stored, item_spec):
+    """Inverse of encode_batch: [B, ...] stored records -> original dtypes/shapes."""
+
+    def one(spec_leaf, blob):
+        if "raw" in blob:
+            return blob["raw"]
+        b = blob["q"].shape[0]
+        x = ops.dequantize(blob["q"], blob["scale"], dtype=spec_leaf.dtype)
+        return x.reshape((b,) + tuple(spec_leaf.shape))
+
+    return jax.tree_util.tree_map(
+        one, item_spec, stored,
+        is_leaf=lambda n: isinstance(n, dict) and ("raw" in n or "q" in n),
+    )
+
+
+def compression_ratio(item_spec) -> float:
+    """Bytes(original) / bytes(stored)."""
+    import numpy as np
+
+    orig = stored = 0
+    for leaf in jax.tree_util.tree_leaves(item_spec):
+        n = int(np.prod(leaf.shape)) if leaf.shape else 1
+        b = np.dtype(leaf.dtype).itemsize
+        orig += n * b
+        stored += n * (1 if jnp.issubdtype(leaf.dtype, jnp.floating) else b)
+        if jnp.issubdtype(leaf.dtype, jnp.floating):
+            stored += 4  # scale
+    return orig / max(stored, 1)

@@ -1,0 +1,185 @@
+"""Training-step factories for the three strategies the paper evaluates (§VI-D):
+
+  * ``incremental``   — train on the new task only (lower bound: runtime; forgets).
+  * ``from_scratch``  — retrain on all accumulated data (upper bound: accuracy; slow).
+                        (Differs only in data selection + per-task re-init; same step.)
+  * ``rehearsal``     — the paper's contribution; ``RehearsalConfig.mode`` picks:
+      - ``async``: the augmented batch uses representatives prefetched during the
+        *previous* iteration (in-flight double buffering — the collectives for the next
+        sample carry no data dependency on this step's grads, so XLA's latency-hiding
+        scheduler overlaps them with the backward pass: the paper's Fig. 4 pipeline).
+      - ``sync``: sample → wait → augment → train, all on the critical path (the
+        blocking baseline of the paper's breakdown study, Fig. 6).
+
+Steps come in two flavours: single-device (CPU experiments) and manual-DP via
+``shard_map`` over a data axis, with optional int8 error-feedback gradient compression.
+The large-model pjit path lives in ``repro.launch.steps``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import rehearsal as rb
+from repro.core.distributed import sample_global
+from repro.optim.grad_compress import compressed_psum, plain_psum
+
+
+class TrainCarry(NamedTuple):
+    params: Any
+    opt: Any
+    buffer: Optional[rb.BufferState]
+    reps: Any  # in-flight representatives (async double buffer)
+    reps_valid: Any
+    ef: Any  # error-feedback state (int8 compression) or None
+
+
+def _add_worker_axis(tree, n_dp):
+    return jax.tree_util.tree_map(lambda x: jnp.broadcast_to(x, (n_dp,) + x.shape), tree)
+
+
+def init_carry(params, opt_state, item_spec=None, rcfg=None, ef=None, n_dp: int = 1,
+               label_field: str = "label"):
+    """Fresh carry. With rehearsal on, the buffer starts empty and the in-flight
+    representatives start invalid — the first iteration trains un-augmented, exactly
+    the paper's bootstrap (§IV-D)."""
+    buffer = reps = valid = None
+    if rcfg is not None and rcfg.enabled:
+        buffer = rb.init_buffer(item_spec, rcfg.num_buckets, rcfg.slots_per_bucket)
+        reps, valid = rb.local_sample(buffer, jax.random.PRNGKey(0), rcfg.num_representatives)
+        reps = rb.mask_invalid(reps, valid, label_field)
+        if n_dp > 1:
+            buffer = rb.BufferState(*_add_worker_axis(tuple(buffer), n_dp))
+            reps = _add_worker_axis(reps, n_dp)
+            valid = _add_worker_axis(valid, n_dp)
+    return TrainCarry(params, opt_state, buffer, reps, valid, ef)
+
+
+def carry_specs(carry: TrainCarry, dp_axis: Optional[str]) -> TrainCarry:
+    """Spec prefix-tree for shard_map / jit: params+opt replicated, buffer/reps
+    per-worker (leading worker axis sharded over the data axis)."""
+    rep = P()
+    per_worker = P(dp_axis) if dp_axis else P()
+    return TrainCarry(
+        params=rep,
+        opt=rep,
+        buffer=None if carry.buffer is None else per_worker,
+        reps=None if carry.reps is None else per_worker,
+        reps_valid=None if carry.reps_valid is None else per_worker,
+        ef=None if carry.ef is None else rep,
+    )
+
+
+def make_cl_step(
+    loss_fn: Callable,
+    opt_update: Callable,
+    rcfg,
+    *,
+    strategy: str = "rehearsal",
+    mesh=None,
+    dp_axis: str = "data",
+    exchange: str = "full",
+    compress: str = "none",
+    label_field: str = "label",
+    task_field: str = "task",
+    donate: bool = True,
+):
+    """Build ``step(carry, batch, key) -> (carry, metrics)`` (jitted).
+
+    ``loss_fn(params, batch) -> (loss, metrics_dict)``;
+    ``opt_update(grads, opt_state, params) -> (params, opt_state, metrics_dict)``.
+    With ``mesh``, the whole step runs in shard_map over ``dp_axis``: batch sharded,
+    params replicated, gradients explicitly psum'd (optionally int8-compressed).
+    """
+    rehearse = strategy == "rehearsal" and rcfg is not None and rcfg.enabled
+
+    def worker(carry: TrainCarry, batch, key, axis, n_workers):
+        buf, reps, valid = carry.buffer, carry.reps, carry.reps_valid
+        metrics = {}
+        if rehearse:
+            idx = jax.lax.axis_index(axis) if axis is not None else 0
+            k_up, k_s = jax.random.split(jax.random.fold_in(key, idx))
+            labels = batch[task_field]
+            new_buf = rb.local_update(buf, batch, labels, k_up, rcfg.num_candidates)
+            ex_axis = None if exchange == "local" else axis
+            new_reps, new_valid = sample_global(
+                new_buf, k_s, rcfg.num_representatives, ex_axis, exchange
+            )
+            new_reps = rb.mask_invalid(new_reps, new_valid, label_field)
+            if rcfg.mode == "async":
+                train_batch = rb.augment_batch(batch, reps, valid, label_field)
+            else:  # sync: this step's freshly sampled representatives, blocking
+                train_batch = rb.augment_batch(batch, new_reps, new_valid, label_field)
+            buf, reps, valid = new_buf, new_reps, new_valid
+            metrics["buffer_fill"] = jnp.sum(buf.counts).astype(jnp.float32)
+        else:
+            train_batch = batch
+
+        (loss, aux_metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            carry.params, train_batch
+        )
+        ef = carry.ef
+        if axis is not None:
+            if compress == "int8":
+                grads, ef = compressed_psum(grads, axis, ef, n_workers)
+            else:
+                grads = plain_psum(grads, axis, n_workers)
+            loss = jax.lax.pmean(loss, axis)
+        params, opt, opt_metrics = opt_update(grads, carry.opt, carry.params)
+        metrics.update(loss=loss, **aux_metrics, **opt_metrics)
+        if axis is not None:
+            metrics = jax.tree_util.tree_map(
+                lambda m: jax.lax.pmean(jnp.asarray(m, jnp.float32), axis), metrics
+            )
+        return TrainCarry(params, opt, buf, reps, valid, ef), metrics
+
+    if mesh is None:
+        @functools.partial(jax.jit, donate_argnums=(0,) if donate else ())
+        def step(carry, batch, key):
+            return worker(carry, batch, key, None, 1)
+
+        return step
+
+    n_workers = mesh.shape[dp_axis]
+
+    def body(carry, batch, key):
+        # strip the worker axis from per-worker carry fields
+        def squeeze(t):
+            return None if t is None else jax.tree_util.tree_map(lambda x: x[0], t)
+
+        local = TrainCarry(
+            carry.params, carry.opt,
+            None if carry.buffer is None else rb.BufferState(*squeeze(tuple(carry.buffer))),
+            squeeze(carry.reps), squeeze(carry.reps_valid), carry.ef,
+        )
+        new_c, metrics = worker(local, batch, key, dp_axis, n_workers)
+
+        def unsqueeze(t):
+            return None if t is None else jax.tree_util.tree_map(lambda x: x[None], t)
+
+        out = TrainCarry(
+            new_c.params, new_c.opt,
+            None if new_c.buffer is None else rb.BufferState(*unsqueeze(tuple(new_c.buffer))),
+            unsqueeze(new_c.reps), unsqueeze(new_c.reps_valid), new_c.ef,
+        )
+        return out, metrics
+
+    compiled = {}
+
+    def step(carry, batch, key):
+        if "fn" not in compiled:
+            cspecs = carry_specs(carry, dp_axis)
+            fn = jax.shard_map(
+                body, mesh=mesh,
+                in_specs=(cspecs, P(dp_axis), P()),
+                out_specs=(cspecs, P()),
+                check_vma=False,
+            )
+            compiled["fn"] = jax.jit(fn, donate_argnums=(0,) if donate else ())
+        return compiled["fn"](carry, batch, key)
+
+    return step

@@ -1,0 +1,16 @@
+from repro.data.pipeline import Cursor, Prefetcher
+from repro.data.synthetic import (
+    ClassIncrementalImages,
+    ImageStreamConfig,
+    TaskTokenStream,
+    TokenStreamConfig,
+)
+
+__all__ = [
+    "ClassIncrementalImages",
+    "Cursor",
+    "ImageStreamConfig",
+    "Prefetcher",
+    "TaskTokenStream",
+    "TokenStreamConfig",
+]

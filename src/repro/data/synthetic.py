@@ -1,0 +1,125 @@
+"""Synthetic continual-learning streams (deterministic, cursor-resumable).
+
+Two generators mirror the paper's setup at CPU scale:
+
+* ``ClassIncrementalImages`` — the paper's scenario: T disjoint tasks, each introducing
+  new classes (ImageNet-1K/4-task analogue). Every class is a fixed random prototype
+  image; samples are prototype + Gaussian noise, so a small CNN can learn/forget them
+  measurably fast.
+* ``TaskTokenStream`` — the LM continual-learning analogue: each task is a distinct
+  Markov-1 token distribution over a task-specific vocab range. Incremental training on
+  task t destroys perplexity on tasks < t; rehearsal retains it.
+
+Both are pure functions of (seed, cursor) — the pipeline checkpoints the cursor, and
+restart reproduces the exact sample sequence (fault-tolerance contract).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Iterator, Tuple
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class ImageStreamConfig:
+    num_tasks: int = 4
+    classes_per_task: int = 10
+    image_size: int = 32
+    channels: int = 3
+    noise: float = 0.35
+    samples_per_class: int = 256
+    eval_per_class: int = 16
+    seed: int = 1234
+
+
+class ClassIncrementalImages:
+    """Class-incremental image stream. Classes of task t: [t*C, (t+1)*C)."""
+
+    def __init__(self, cfg: ImageStreamConfig):
+        self.cfg = cfg
+        rng = np.random.default_rng(cfg.seed)
+        k = cfg.num_tasks * cfg.classes_per_task
+        self.prototypes = rng.normal(
+            0, 1, size=(k, cfg.image_size, cfg.image_size, cfg.channels)
+        ).astype(np.float32)
+
+    @property
+    def num_classes(self) -> int:
+        return self.cfg.num_tasks * self.cfg.classes_per_task
+
+    def task_classes(self, task: int) -> np.ndarray:
+        c = self.cfg.classes_per_task
+        return np.arange(task * c, (task + 1) * c)
+
+    def batch(self, task: int, batch_size: int, cursor: int) -> Dict[str, np.ndarray]:
+        """Deterministic mini-batch #cursor of task ``task``."""
+        rng = np.random.default_rng((self.cfg.seed, task, cursor))
+        classes = rng.choice(self.task_classes(task), size=batch_size)
+        noise = rng.normal(0, self.cfg.noise, size=(batch_size,) + self.prototypes.shape[1:])
+        images = self.prototypes[classes] + noise.astype(np.float32)
+        return {"images": images.astype(np.float32), "label": classes.astype(np.int32),
+                "task": np.full(batch_size, task, np.int32)}
+
+    def eval_set(self, task: int) -> Dict[str, np.ndarray]:
+        rng = np.random.default_rng((self.cfg.seed, 7919, task))
+        classes = np.repeat(self.task_classes(task), self.cfg.eval_per_class)
+        noise = rng.normal(0, self.cfg.noise, size=(len(classes),) + self.prototypes.shape[1:])
+        images = self.prototypes[classes] + noise.astype(np.float32)
+        return {"images": images.astype(np.float32), "label": classes.astype(np.int32)}
+
+    def cumulative_batch(self, upto_task: int, batch_size: int, cursor: int):
+        """Train-from-scratch baseline: sample uniformly from tasks [0, upto_task]."""
+        rng = np.random.default_rng((self.cfg.seed, 7727, upto_task, cursor))
+        tasks = rng.integers(0, upto_task + 1, size=batch_size)
+        out = {"images": [], "label": [], "task": []}
+        for i, t in enumerate(tasks):
+            b = self.batch(int(t), 1, cursor * batch_size + i)
+            for k in out:
+                out[k].append(b[k][0])
+        return {k: np.stack(v) for k, v in out.items()}
+
+
+@dataclass(frozen=True)
+class TokenStreamConfig:
+    num_tasks: int = 4
+    vocab_size: int = 512
+    seq_len: int = 64
+    shared_frac: float = 0.25  # fraction of vocab shared across tasks
+    seed: int = 99
+
+
+class TaskTokenStream:
+    """Markov-1 token streams with disjoint per-task vocab ranges."""
+
+    def __init__(self, cfg: TokenStreamConfig):
+        self.cfg = cfg
+        rng = np.random.default_rng(cfg.seed)
+        self.transition = []
+        span = int(cfg.vocab_size * (1 - cfg.shared_frac)) // cfg.num_tasks
+        for t in range(cfg.num_tasks):
+            lo = int(cfg.vocab_size * cfg.shared_frac) + t * span
+            # sparse row-stochastic transition over the task's span
+            trans = rng.dirichlet(np.full(span, 0.05), size=span).astype(np.float32)
+            self.transition.append((lo, span, trans))
+
+    def batch(self, task: int, batch_size: int, cursor: int) -> Dict[str, np.ndarray]:
+        lo, span, trans = self.transition[task]
+        rng = np.random.default_rng((self.cfg.seed, task, cursor))
+        s = self.cfg.seq_len
+        toks = np.zeros((batch_size, s + 1), np.int64)
+        toks[:, 0] = rng.integers(0, span, size=batch_size)
+        for i in range(s):
+            p = trans[toks[:, i]]
+            cdf = np.cumsum(p, axis=1)
+            u = rng.random((batch_size, 1))
+            toks[:, i + 1] = (u > cdf).sum(axis=1).clip(0, span - 1)
+        toks = toks + lo
+        return {
+            "tokens": toks[:, :-1].astype(np.int32),
+            "labels": toks[:, 1:].astype(np.int32),
+            "task": np.full(batch_size, task, np.int32),
+        }
+
+    def eval_set(self, task: int, n: int = 64):
+        return self.batch(task, n, cursor=10_000_019)  # held-out cursor region

@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Each kernel: <name>.py (pl.pallas_call + explicit BlockSpec VMEM tiling),
+ops.py (jit'd public wrappers), ref.py (pure-jnp oracles).
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,113 @@
+"""Flash attention Pallas-TPU kernel: blockwise causal/SWA attention, GQA-aware.
+
+TPU mapping (the adaptation of the classic GPU flash-attention tiling to the
+HBM→VMEM→MXU hierarchy):
+
+  * grid = (B, H, nQ, nK) — the innermost nK dimension revisits the same output
+    block, so the online-softmax running stats (m, l) and the f32 accumulator live in
+    VMEM scratch across grid steps (TPU grids execute sequentially in minor-to-major
+    order — this replaces the GPU's per-CTA shared-memory loop).
+  * BlockSpecs stage [block_q, head_dim] / [block_k, head_dim] tiles into VMEM;
+    Pallas double-buffers the HBM→VMEM DMAs across grid steps automatically.
+  * GQA is expressed in the index_map: head h reads KV head h // (H // KV) — no
+    repeated KV materialisation in HBM.
+  * block_q/block_k default to 128 — MXU-aligned (128x128 systolic array) and small
+    enough that q, k, v, p tiles + scratch fit VMEM comfortably
+    (3·128·hd·2B + 128·128·4B ≈ 0.3 MB at hd=128).
+
+Causal + sliding-window masking is positional (iota-based) inside the tile; fully
+masked tiles are cheap but not skipped (XLA-grid limitation; the cost model in
+EXPERIMENTS.md accounts for the 2x causal overcount).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+    *, scale: float, block_q: int, block_k: int, n_k: int, window: int, causal: bool,
+):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale  # [bq, hd]
+    k = k_ref[0, 0].astype(jnp.float32)  # [bk, hd]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # [bq, bk]
+
+    qpos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    kpos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    mask = jnp.ones((block_q, block_k), jnp.bool_)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]  # [bq, 1]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)  # [bq, bk]
+    corr = jnp.exp(m_prev - m_new)  # [bq, 1]
+    l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+    v = v_ref[0, 0].astype(jnp.float32)  # [bk, hd]
+    acc_scr[...] = acc_scr[...] * corr + jax.lax.dot(p, v)
+    m_scr[...] = m_new
+
+    @pl.when(ki == n_k - 1)
+    def _emit():
+        o_ref[0, 0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(
+    q, k, v, *, window: int = 0, causal: bool = True,
+    block_q: int = 128, block_k: int = 128, interpret: bool = False,
+):
+    """Kernel-layout entry: q [B,H,S,hd]; k/v [B,KV,T,hd]. Returns [B,H,S,hd]."""
+    b, h, s, hd = q.shape
+    kvh, t = k.shape[1], k.shape[2]
+    g = h // kvh
+    block_q = min(block_q, s)
+    block_k = min(block_k, t)
+    assert s % block_q == 0 and t % block_k == 0, (s, t, block_q, block_k)
+    n_q, n_k = s // block_q, t // block_k
+    grid = (b, h, n_q, n_k)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=hd ** -0.5, block_q=block_q, block_k=block_k,
+        n_k=n_k, window=window, causal=causal,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd), lambda bb, hh, qi, ki: (bb, hh, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, hd), lambda bb, hh, qi, ki: (bb, hh // g, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, hd), lambda bb, hh, qi, ki: (bb, hh // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd), lambda bb, hh, qi, ki: (bb, hh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, s, hd), q.dtype),
+        scratch_shapes=[
+            _vmem((block_q, 1), jnp.float32),  # m: running row max
+            _vmem((block_q, 1), jnp.float32),  # l: running row sum
+            _vmem((block_q, hd), jnp.float32),  # acc: un-normalised output
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+def _vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, dtype)

@@ -1,0 +1,102 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+Layout adaptation + padding + interpret-mode dispatch live here; model code calls
+these, never the kernels directly. On CPU (this container) ``interpret=True`` runs the
+kernel bodies in Python for correctness validation; on TPU the same calls lower to
+Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import quantize as _qz
+from repro.kernels import rehearsal_ops as _ro
+from repro.kernels import ssd_scan as _ssd
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("window", "causal", "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q, k, v, *, window: int = 0, causal: bool = True,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool | None = None):
+    """q [B,S,H,hd]; k/v [B,T,KV,hd] -> [B,S,H,hd] (model layout, GQA-aware)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    qt = jnp.swapaxes(q, 1, 2)  # [B,H,S,hd]
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    out = _fa.flash_attention_bhsd(
+        qt, kt, vt, window=window, causal=causal,
+        block_q=block_q, block_k=block_k, interpret=interpret,
+    )
+    return jnp.swapaxes(out, 1, 2)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "head_block", "interpret"))
+def ssd_scan(x, dt, a_head, bmat, cmat, *, chunk: int = 128, head_block: int = 8,
+             interpret: bool | None = None):
+    """Model layout: x [B,S,H,P]; dt [B,S,H]; a [H]; b/c [B,S,N] -> y [B,S,H,P]."""
+    interpret = _default_interpret() if interpret is None else interpret
+    b, s, h, p = x.shape
+    q = min(chunk, s)
+    assert s % q == 0, (s, q)
+    nc = s // q
+    a = dt.astype(jnp.float32) * a_head.astype(jnp.float32)
+    cum = jnp.cumsum(a.reshape(b, nc, q, h), axis=2)
+    y = _ssd.ssd_scan_chunked(
+        x.reshape(b, nc, q, h, p),
+        dt.reshape(b, nc, q, h),
+        cum,
+        bmat.reshape(b, nc, q, -1),
+        cmat.reshape(b, nc, q, -1),
+        a_head,
+        chunk=q,
+        head_block=head_block,
+        interpret=interpret,
+    )
+    return y.reshape(b, s, h, p)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def rehearsal_update_sample(buffer, cands, cand_rows, samp_rows,
+                            interpret: bool | None = None):
+    """buffer [R, L]; cands [C, L]; cand_rows i32[C]; samp_rows i32[S]."""
+    interpret = _default_interpret() if interpret is None else interpret
+    return _ro.rehearsal_update_sample(buffer, cands, cand_rows, samp_rows,
+                                       interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def quantize(x, *, block_rows: int = 8, interpret: bool | None = None):
+    """Row-wise int8 quantization: x [R, L] -> (q int8, scales f32 [R, 1]).
+    Rows padded to the block multiple internally."""
+    interpret = _default_interpret() if interpret is None else interpret
+    r, l = x.shape
+    br = min(block_rows, r) if r % min(block_rows, r) == 0 else 1
+    pad = (-r) % br
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad, l), x.dtype)])
+    q, s = _qz.quantize_rows(x, block_rows=br, interpret=interpret)
+    return q[:r], s[:r]
+
+
+@functools.partial(jax.jit, static_argnames=("dtype", "block_rows", "interpret"))
+def dequantize(q, scales, dtype=jnp.float32, *, block_rows: int = 8,
+               interpret: bool | None = None):
+    """Inverse of ``quantize``."""
+    interpret = _default_interpret() if interpret is None else interpret
+    r, l = q.shape
+    br = min(block_rows, r) if r % min(block_rows, r) == 0 else 1
+    pad = (-r) % br
+    if pad:
+        q = jnp.concatenate([q, jnp.zeros((pad, l), q.dtype)])
+        scales = jnp.concatenate([scales, jnp.ones((pad, 1), scales.dtype)])
+    x = _qz.dequantize_rows(q, scales, dtype=dtype, block_rows=br, interpret=interpret)
+    return x[:r]

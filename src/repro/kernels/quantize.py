@@ -1,0 +1,72 @@
+"""Row-wise int8 quantize/dequantize Pallas-TPU kernels (buffer compression).
+
+The paper's §VII: "many additional data reduction techniques can be applied (e.g.,
+compression)" to the rehearsal buffer. These kernels implement symmetric row-wise
+int8 quantization — 4x more representatives per byte of buffer budget (float
+records) at <0.4% RMS error, used by ``repro.core.compression``.
+
+TPU mapping: grid over rows; each step stages one [block_rows, L] tile HBM→VMEM,
+computes the row max-abs on the VPU, scales, rounds, and writes the int8 tile + f32
+scales back. Dequant is the inverse. Tiles default to (8, L) — the f32 sublane count.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _quant_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)  # [br, L]
+    amax = jnp.max(jnp.abs(x), axis=1, keepdims=True)  # [br, 1]
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q_ref[...] = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    s_ref[...] = scale
+
+
+def _dequant_kernel(q_ref, s_ref, x_ref):
+    x_ref[...] = (q_ref[...].astype(jnp.float32) * s_ref[...]).astype(x_ref.dtype)
+
+
+def quantize_rows(x, *, block_rows: int = 8, interpret: bool = False):
+    """x [R, L] float -> (q int8 [R, L], scales f32 [R, 1])."""
+    r, l = x.shape
+    block_rows = min(block_rows, r)
+    assert r % block_rows == 0, (r, block_rows)
+    grid = (r // block_rows,)
+    return pl.pallas_call(
+        _quant_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, l), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((block_rows, l), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((r, l), jnp.int8),
+            jax.ShapeDtypeStruct((r, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x)
+
+
+def dequantize_rows(q, scales, dtype=jnp.float32, *, block_rows: int = 8,
+                    interpret: bool = False):
+    """(q int8 [R, L], scales [R, 1]) -> x [R, L] ``dtype``."""
+    r, l = q.shape
+    block_rows = min(block_rows, r)
+    assert r % block_rows == 0, (r, block_rows)
+    grid = (r // block_rows,)
+    return pl.pallas_call(
+        _dequant_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, l), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, l), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, l), dtype),
+        interpret=interpret,
+    )(q, scales)

@@ -1,0 +1,98 @@
+"""Fused rehearsal-buffer update+sample Pallas-TPU kernel — the paper's hot spot.
+
+The paper spends §IV-C/§V on making buffer updates + representative reads cheap under
+concurrency (RDMA registration, RPC consolidation, fine-grain locks, Argobots). The
+TPU-native translation:
+
+  * The buffer is an HBM-resident [rows, L] table (rows = K·slots flattened records).
+  * One kernel performs the paper's whole ``update`` primitive: scatter the accepted
+    candidates into their target rows, THEN gather the sampled representative rows —
+    the sequential TPU grid (phase-major order) *is* the lock: writes complete before
+    any read, replacing the paper's fine-grain locking with a static schedule.
+  * Dynamic row targeting uses scalar prefetch (``PrefetchScalarGridSpec``): the
+    row-index vectors are prefetched to SMEM and drive the BlockSpec index_maps —
+    the canonical TPU pattern for data-dependent DMA (the RDMA-offset analogue).
+  * ``input_output_aliases`` updates the buffer in place — no copy of the (large)
+    table, mirroring the paper's in-place pinned-memory buffers.
+
+Grid = (C + S,): programs [0, C) scatter candidates, programs [C, C+S) gather
+representatives. Each step moves one [1, L] record HBM→VMEM→HBM; Pallas pipelines
+the DMAs across steps (the paper's "progressive assembly" of augmented batches).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(cand_rows, samp_rows, buf_ref, cands_ref, out_buf_ref, reps_ref,
+            *, n_cand: int):
+    i = pl.program_id(0)
+    in_scatter = i < n_cand
+
+    @pl.when(in_scatter)
+    def _scatter():
+        # drop candidates with row < 0 (rejected by the c/b lottery)
+        row = cand_rows[jnp.minimum(i, n_cand - 1)]
+
+        @pl.when(row >= 0)
+        def _():
+            out_buf_ref[0] = cands_ref[0]
+
+    @pl.when(jnp.logical_not(in_scatter))
+    def _gather():
+        reps_ref[0] = out_buf_ref[0]
+
+
+def rehearsal_update_sample(buffer, cands, cand_rows, samp_rows, *,
+                            interpret: bool = False):
+    """buffer [R, L]; cands [C, L]; cand_rows i32[C] (<0 ⇒ dropped); samp_rows i32[S].
+    Returns (new_buffer [R, L], reps [S, L]). In-place on ``buffer`` (aliased)."""
+    r, l = buffer.shape
+    c = cands.shape[0]
+    s = samp_rows.shape[0]
+
+    def buf_index(i, cand_rows_ref, samp_rows_ref):
+        # scatter phase: target the candidate's row; gather phase: the sampled row.
+        in_scatter = i < c
+        ci = jnp.minimum(i, c - 1)
+        gi = jnp.clip(i - c, 0, s - 1)
+        row = jnp.where(in_scatter,
+                        jnp.clip(cand_rows_ref[ci], 0, r - 1),
+                        jnp.clip(samp_rows_ref[gi], 0, r - 1))
+        return (row, 0)
+
+    def cand_index(i, cand_rows_ref, samp_rows_ref):
+        return (jnp.minimum(i, c - 1), 0)
+
+    def reps_index(i, cand_rows_ref, samp_rows_ref):
+        return (jnp.clip(i - c, 0, s - 1), 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(c + s,),
+        in_specs=[
+            pl.BlockSpec((1, l), buf_index),
+            pl.BlockSpec((1, l), cand_index),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, l), buf_index),
+            pl.BlockSpec((1, l), reps_index),
+        ],
+    )
+    kernel = functools.partial(_kernel, n_cand=c)
+    new_buf, reps = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((r, l), buffer.dtype),
+            jax.ShapeDtypeStruct((s, l), buffer.dtype),
+        ],
+        input_output_aliases={2: 0},  # buffer (after the 2 prefetch args) -> out 0
+        interpret=interpret,
+    )(cand_rows, samp_rows, buffer, cands)
+    return new_buf, reps

@@ -1,0 +1,31 @@
+"""Production mesh construction.
+
+Single pod: 16x16 = 256 chips, axes ('data', 'model').
+Multi-pod:  2x16x16 = 512 chips, axes ('pod', 'data', 'model') — the 'pod' axis
+composes with 'data' for batch/buffer sharding, so data-parallel workers span pods
+and rehearsal exchange modes can choose whether to cross the inter-pod links
+(DESIGN.md §2, exchange='full' vs 'pod_local').
+
+Defined as functions (never module-level constants): importing this module must not
+touch jax device state — the dry-run sets XLA_FLAGS before the first jax call.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape, axes):
+    """Arbitrary mesh for tests/benchmarks (Auto axis types)."""
+    return jax.make_mesh(tuple(shape), tuple(axes),
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def describe(mesh) -> str:
+    return " x ".join(f"{a}={s}" for a, s in mesh.shape.items())

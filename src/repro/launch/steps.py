@@ -1,0 +1,350 @@
+"""pjit step builders: train (with fused async/sync rehearsal), prefill, decode.
+
+The train step is the paper's Fig. 4 pipeline compiled into ONE XLA program:
+
+  async (default, the paper's contribution):
+      grads  <- loss(params, batch ⊕ inflight_reps)         # reps sampled at t-1
+      buffer <- Alg-1(buffer, batch)                        # no dep on grads
+      reps'  <- global_sample(buffer')                      # all_to_all, no dep on grads
+      params <- opt(params, grads)
+    The rehearsal collectives share no data dependency with the backward pass, so
+    XLA's latency-hiding scheduler overlaps them with compute — the in-graph
+    equivalent of the paper's background Argobots threads.
+
+  sync (the paper's blocking baseline, Fig. 6):
+      buffer, reps' <- update+sample(buffer, batch)
+      grads <- loss(params, batch ⊕ reps')                  # exchange on critical path
+
+All functions here are mesh-parameterised and return (fn, in_state, shardings) ready
+for ``jax.jit(...).lower(...).compile()`` — the dry-run contract.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import RunConfig, ShapeConfig
+from repro.core import distributed as dist
+from repro.core import rehearsal as rb
+from repro.models import StackCtx, build_model
+from repro.optim import make_optimizer
+from repro.parallel import (
+    batch_shardings,
+    buffer_shardings,
+    cache_shardings,
+    dp_axes,
+    make_shard_fn,
+    params_shardings,
+)
+from repro.parallel.sharding import make_moe_apply
+from repro.utils.trees import tree_cast
+
+MAX_SLOTS = 1024
+
+
+def _cast_struct(tree_s, dtype):
+    return jax.tree_util.tree_map(
+        lambda l: jax.ShapeDtypeStruct(l.shape, dtype)
+        if jnp.issubdtype(l.dtype, jnp.floating) else l, tree_s)
+
+
+def slots_for_budget(item_spec, num_buckets: int, budget_bytes: int) -> int:
+    """Paper §VII: per-worker buffer memory S_max is a fixed budget; slots = S_max/K."""
+    item_bytes = 0
+    for leaf in jax.tree_util.tree_leaves(item_spec):
+        item_bytes += int(np.prod(leaf.shape)) * np.dtype(leaf.dtype).itemsize
+    return max(1, min(MAX_SLOTS, budget_bytes // max(1, num_buckets * item_bytes)))
+
+
+def _rep_sharding(reps_struct, mesh):
+    dp = dp_axes(mesh)
+
+    def one(leaf):
+        return NamedSharding(mesh, P(dp, *([None] * (len(leaf.shape) - 1))))
+
+    return jax.tree_util.tree_map(one, reps_struct)
+
+
+@dataclass
+class BuiltStep:
+    """Everything needed to run — or dry-run — one step function."""
+
+    fn: Any  # jitted
+    args: Tuple  # ShapeDtypeStructs (dry-run) in the fn's argument order
+    shardings: Tuple  # in_shardings matching args
+    meta: Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Train step
+# ---------------------------------------------------------------------------
+
+
+def build_train_step(
+    run: RunConfig,
+    mesh,
+    *,
+    rehearsal_mode: Optional[str] = None,  # None -> run.rehearsal.mode
+    exchange: str = "full",
+    buffer_budget_bytes: int = 64 << 20,
+    donate: bool = True,
+) -> BuiltStep:
+    cfg, shape, tcfg, rcfg = run.model, run.shape, run.train, run.rehearsal
+    mode = rehearsal_mode if rehearsal_mode is not None else rcfg.mode
+    model = build_model(cfg)
+    dp = dp_axes(mesh)
+    n_dp = int(np.prod([mesh.shape[a] for a in dp]))
+    compute_dtype = jnp.bfloat16 if tcfg.compute_dtype == "bfloat16" else jnp.float32
+    from repro.models.attention import ATTN_IMPL
+    ATTN_IMPL["mode"] = tcfg.attn_impl
+    ctx = StackCtx(cfg=cfg, shard=make_shard_fn(mesh, tcfg.sequence_parallel),
+                   compute_dtype=compute_dtype,
+                   remat=tcfg.remat, scan_layers=tcfg.scan_layers, dp_shards=n_dp,
+                   moe_apply=make_moe_apply(mesh, cfg) if cfg.is_moe else None)
+    opt_init, opt_update = make_optimizer(tcfg, n_workers=n_dp)
+
+    # --- abstract state (no allocation) ---
+    key0 = jax.random.PRNGKey(0)
+    params_s = jax.eval_shape(lambda k: model.init(k, shape.seq_len), key0)
+    if tcfg.param_dtype == "bfloat16":  # bf16 storage: halves the grad all-reduce
+        params_s = jax.tree_util.tree_map(
+            lambda l: jax.ShapeDtypeStruct(l.shape, jnp.bfloat16)
+            if jnp.issubdtype(l.dtype, jnp.floating) else l, params_s)
+    opt_s = jax.eval_shape(opt_init, params_s)
+    batch_s = model.input_specs(shape)
+    item_s = jax.tree_util.tree_map(
+        lambda l: jax.ShapeDtypeStruct(l.shape[1:], l.dtype), batch_s
+    )
+    use_rehearsal = mode != "off"
+    r = rcfg.num_representatives
+    if use_rehearsal:
+        slots = slots_for_budget(item_s, rcfg.num_buckets, buffer_budget_bytes)
+        buffer_s = jax.eval_shape(
+            functools.partial(dist.init_distributed_buffer, item_s, rcfg.num_buckets,
+                              slots, n_dp)
+        )
+        buffer_s = rb.BufferState(*buffer_s)
+        reps_s = jax.tree_util.tree_map(
+            lambda l: jax.ShapeDtypeStruct((n_dp, r) + l.shape, l.dtype), item_s
+        )
+        valid_s = jax.ShapeDtypeStruct((n_dp, r), jnp.bool_)
+        sharded_update = dist.make_sharded_update(mesh, dp, rcfg, exchange=exchange)
+    else:
+        slots = 0
+        buffer_s = reps_s = valid_s = None
+    key_s = jax.ShapeDtypeStruct(key0.shape, key0.dtype)
+
+    # --- step fn ---
+    def loss_of(params, batch):
+        return model.loss(tree_cast(params, compute_dtype), batch, ctx)
+
+    grad_fn = jax.value_and_grad(loss_of, has_aux=True)
+
+    if not use_rehearsal:
+
+        def step(params, opt_state, batch, key):
+            (loss, metrics), grads = grad_fn(params, batch)
+            params, opt_state, om = opt_update(grads, opt_state, params)
+            return params, opt_state, dict(metrics, **om, loss=loss)
+
+        args = (params_s, opt_s, batch_s, key_s)
+        shardings = (
+            params_shardings(params_s, cfg, mesh),
+            _opt_shardings(opt_s, params_s, cfg, mesh, zero1=tcfg.zero1),
+            batch_shardings(batch_s, mesh),
+            NamedSharding(mesh, P()),
+        )
+    elif mode == "sync":
+
+        def step(params, opt_state, buffer, reps, valid, batch, key):
+            # paper's blocking baseline: exchange on the critical path
+            buffer, new_reps, new_valid = sharded_update(
+                buffer, batch, batch["task"], key
+            )
+            aug = dist.augment_global(batch, new_reps, new_valid, n_dp)
+            (loss, metrics), grads = grad_fn(params, aug)
+            params, opt_state, om = opt_update(grads, opt_state, params)
+            return params, opt_state, buffer, new_reps, new_valid, dict(
+                metrics, **om, loss=loss
+            )
+
+        args = (params_s, opt_s, buffer_s, reps_s, valid_s, batch_s, key_s)
+        shardings = _rehearsal_shardings(params_s, opt_s, buffer_s, reps_s, batch_s,
+                                         cfg, mesh, zero1=tcfg.zero1)
+    else:  # async — the paper's contribution
+
+        def step(params, opt_state, buffer, reps, valid, batch, key):
+            # consume representatives prefetched at t-1 (double buffer)
+            aug = dist.augment_global(batch, reps, valid, n_dp)
+            (loss, metrics), grads = grad_fn(params, aug)
+            # update + next sample: independent of grads -> overlaps with backward
+            buffer, next_reps, next_valid = sharded_update(
+                buffer, batch, batch["task"], key
+            )
+            params, opt_state, om = opt_update(grads, opt_state, params)
+            return params, opt_state, buffer, next_reps, next_valid, dict(
+                metrics, **om, loss=loss
+            )
+
+        args = (params_s, opt_s, buffer_s, reps_s, valid_s, batch_s, key_s)
+        shardings = _rehearsal_shardings(params_s, opt_s, buffer_s, reps_s, batch_s,
+                                         cfg, mesh, zero1=tcfg.zero1)
+
+    donate_argnums = tuple(range(len(args) - 2)) if donate else ()
+    fn = jax.jit(step, in_shardings=shardings, donate_argnums=donate_argnums)
+    meta = {
+        "kind": "train",
+        "mode": mode if use_rehearsal else "off",
+        "n_dp": n_dp,
+        "slots_per_bucket": slots,
+        "augmented_global_batch": shape.global_batch + (n_dp * r if use_rehearsal else 0),
+        "tokens_per_step": (shape.global_batch + (n_dp * r if use_rehearsal else 0))
+        * shape.seq_len,
+    }
+    return BuiltStep(fn=fn, args=args, shardings=shardings, meta=meta)
+
+
+def _opt_shardings(opt_s, params_s, cfg, mesh, zero1: bool = False):
+    """Optimizer moments mirror the param tree: same sharding where shapes match
+    (momentum / adam moments), replicated for scalar placeholders (sgd's nu).
+
+    ``zero1=True`` additionally shards each moment over the 'data' axis on its
+    largest still-unsharded divisible dim (ZeRO stage 1: optimizer state partitioned
+    across data-parallel workers; GSPMD turns the gradient all-reduce into
+    reduce-scatter + the update's param all-gather)."""
+    pshard = params_shardings(params_s, cfg, mesh)
+    rep = NamedSharding(mesh, P())
+    flat_p = jax.tree_util.tree_leaves(pshard)
+    flat_ps = jax.tree_util.tree_leaves(params_s)
+    data_size = mesh.shape.get("data", 1)
+
+    def zero1_spec(spec, shape):
+        parts = list(spec)
+        while len(parts) < len(shape):
+            parts.append(None)
+        best = -1
+        for i, (ax, dim) in enumerate(zip(parts, shape)):
+            if ax is None and dim % data_size == 0:
+                if best < 0 or dim > shape[best]:
+                    best = i
+        if best >= 0:
+            parts[best] = "data"
+        return NamedSharding(mesh, P(*parts))
+
+    def moment(tree_s):
+        flat_m, treedef = jax.tree_util.tree_flatten(tree_s)
+        leaves = []
+        for m, sref, p in zip(flat_m, flat_ps, flat_p):
+            if m.shape != sref.shape:
+                leaves.append(rep)
+            elif zero1:
+                leaves.append(zero1_spec(p.spec, m.shape))
+            else:
+                leaves.append(p)
+        return jax.tree_util.tree_unflatten(treedef, leaves)
+
+    return type(opt_s)(rep, moment(opt_s.mu), moment(opt_s.nu))
+
+
+def _rehearsal_shardings(params_s, opt_s, buffer_s, reps_s, batch_s, cfg, mesh,
+                         zero1: bool = False):
+    dp = dp_axes(mesh)
+    return (
+        params_shardings(params_s, cfg, mesh),
+        _opt_shardings(opt_s, params_s, cfg, mesh, zero1=zero1),
+        rb.BufferState(*buffer_shardings(tuple(buffer_s), mesh)),
+        _rep_sharding(reps_s, mesh),
+        NamedSharding(mesh, P(dp, None)),
+        batch_shardings(batch_s, mesh),
+        NamedSharding(mesh, P()),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+
+def build_prefill_step(run: RunConfig, mesh) -> BuiltStep:
+    cfg, shape = run.model, run.shape
+    model = build_model(cfg)
+    compute_dtype = jnp.bfloat16 if run.train.compute_dtype == "bfloat16" else jnp.float32
+    n_dp = int(np.prod([mesh.shape[a] for a in dp_axes(mesh)]))
+    dp_sh = n_dp if (shape.global_batch * shape.seq_len) % n_dp == 0 else 1
+    from repro.models.attention import ATTN_IMPL
+    ATTN_IMPL["mode"] = run.train.attn_impl
+    ctx = StackCtx(cfg=cfg, shard=make_shard_fn(mesh, run.train.sequence_parallel),
+                   compute_dtype=compute_dtype,
+                   remat="none", scan_layers=run.train.scan_layers, dp_shards=dp_sh,
+                   moe_apply=make_moe_apply(mesh, cfg) if cfg.is_moe else None)
+    params_s = jax.eval_shape(lambda k: model.init(k, shape.seq_len),
+                              jax.random.PRNGKey(0))
+    params_s = _cast_struct(params_s, compute_dtype)  # serving: bf16 weight storage
+    batch_s = model.input_specs(shape)
+    batch_s = {k: v for k, v in batch_s.items() if k not in ("labels",)}
+
+    def prefill(params, batch):
+        logits, _ = model.forward(tree_cast(params, compute_dtype), batch, ctx)
+        return logits
+
+    shardings = (params_shardings(params_s, cfg, mesh), batch_shardings(batch_s, mesh))
+    fn = jax.jit(prefill, in_shardings=shardings)
+    meta = {"kind": "prefill", "tokens_per_step": shape.global_batch * shape.seq_len}
+    return BuiltStep(fn=fn, args=(params_s, batch_s), shardings=shardings, meta=meta)
+
+
+def build_decode_step(run: RunConfig, mesh) -> BuiltStep:
+    cfg, shape = run.model, run.shape
+    model = build_model(cfg)
+    compute_dtype = jnp.bfloat16 if run.train.compute_dtype == "bfloat16" else jnp.float32
+    n_dp = int(np.prod([mesh.shape[a] for a in dp_axes(mesh)]))
+    dp_sh = n_dp if shape.global_batch % n_dp == 0 else 1
+    from repro.models.attention import ATTN_IMPL
+    ATTN_IMPL["mode"] = run.train.attn_impl
+    ctx = StackCtx(cfg=cfg, shard=make_shard_fn(mesh), compute_dtype=compute_dtype,
+                   remat="none", scan_layers=run.train.scan_layers, dp_shards=dp_sh,
+                   moe_apply=make_moe_apply(mesh, cfg) if cfg.is_moe else None)
+    b = shape.global_batch
+    params_s = jax.eval_shape(lambda k: model.init(k, shape.seq_len),
+                              jax.random.PRNGKey(0))
+    params_s = _cast_struct(params_s, compute_dtype)  # serving: bf16 weight storage
+    kv_dtype = jnp.dtype(run.train.kv_dtype)
+    caches_s = jax.eval_shape(
+        functools.partial(model.init_cache, None, b, shape.seq_len, dtype=kv_dtype)
+    ) if cfg.family != "encdec" else jax.eval_shape(
+        lambda p: model.init_cache(p, b, shape.seq_len, dtype=kv_dtype), params_s
+    )
+    batch_s = model.decode_specs(shape)
+    idx_s = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def decode(params, caches, batch, index):
+        logits, new_caches = model.decode(
+            tree_cast(params, compute_dtype), batch, caches, index, ctx
+        )
+        return logits, new_caches
+
+    shardings = (
+        params_shardings(params_s, cfg, mesh),
+        cache_shardings(caches_s, mesh, cfg, b),
+        batch_shardings(batch_s, mesh),
+        NamedSharding(mesh, P()),
+    )
+    fn = jax.jit(decode, in_shardings=shardings, donate_argnums=(1,))
+    meta = {"kind": "decode", "tokens_per_step": b,
+            "cache_len": shape.seq_len}
+    return BuiltStep(fn=fn, args=(params_s, caches_s, batch_s, idx_s),
+                     shardings=shardings, meta=meta)
+
+
+def build_step(run: RunConfig, mesh, **kw) -> BuiltStep:
+    if run.shape.kind == "train":
+        return build_train_step(run, mesh, **kw)
+    if run.shape.kind == "prefill":
+        return build_prefill_step(run, mesh)
+    return build_decode_step(run, mesh)

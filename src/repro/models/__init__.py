@@ -1,0 +1,5 @@
+"""Model zoo: composable JAX definitions for every assigned architecture."""
+from repro.models.model_zoo import LM, build_model, cross_entropy
+from repro.models.transformer import StackCtx
+
+__all__ = ["LM", "StackCtx", "build_model", "cross_entropy"]

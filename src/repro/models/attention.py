@@ -1,0 +1,211 @@
+"""Attention: GQA / MQA, causal + sliding-window masking, KV caches for decode.
+
+Three entry points:
+  * ``attend_full``  — training / prefill over a whole sequence (XLA path; the Pallas
+    flash-attention kernel in ``repro.kernels`` is the TPU drop-in, selected via
+    ``use_kernel``).
+  * ``attend_decode`` — one new token against a (possibly ring-buffered) KV cache.
+  * ``init_attention`` / cache constructors.
+
+Shapes: x [B, S, d]; q [B, S, H, hd]; k/v [B, S, KV, hd]; GQA groups G = H // KV are
+kept factored (no KV materialised repeats) — scores are computed with grouped einsums.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, dense_init
+
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg, cross: bool = False):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    return {
+        "wq": dense_init(k1, d, h * hd),
+        "wk": dense_init(k2, d, kv * hd),
+        "wv": dense_init(k3, d, kv * hd),
+        "wo": dense_init(k4, h * hd, d),
+    }
+
+
+def _split_heads(x, n, hd):
+    return x.reshape(x.shape[:-1] + (n, hd))
+
+
+def qkv(params, x, cfg, kv_input=None):
+    """Project to q [B,S,H,hd], k/v [B,T,KV,hd]. ``kv_input`` overrides for cross-attn."""
+    kv_src = x if kv_input is None else kv_input
+    q = _split_heads(x @ params["wq"].astype(x.dtype), cfg.num_heads, cfg.head_dim)
+    k = _split_heads(kv_src @ params["wk"].astype(x.dtype), cfg.num_kv_heads, cfg.head_dim)
+    v = _split_heads(kv_src @ params["wv"].astype(x.dtype), cfg.num_kv_heads, cfg.head_dim)
+    return q, k, v
+
+
+def _grouped_scores(q, k):
+    """[B,S,H,hd] x [B,T,KV,hd] -> [B, KV, G, S, T] without repeating KV heads."""
+    b, s, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, s, kvh, g, hd)
+    return jnp.einsum("bskgd,btkd->bkgst", qg, k)
+
+
+def _grouped_out(probs, v):
+    """[B,KV,G,S,T] x [B,T,KV,hd] -> [B,S,H,hd]."""
+    b, kvh, g, s, t = probs.shape
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return out.reshape(b, s, kvh * g, -1)
+
+
+def causal_mask(s: int, t: int, window: int = 0, q_offset: int = 0):
+    """[S, T] bool mask; query i (global pos i+q_offset) sees keys j <= pos, within window."""
+    qpos = jnp.arange(s)[:, None] + q_offset
+    kpos = jnp.arange(t)[None, :]
+    m = kpos <= qpos
+    if window:
+        m &= kpos > qpos - window
+    return m
+
+
+# Attention implementation knobs (set by the launcher / dry-run; module-level so the
+# model stack stays context-free). 'auto' switches to the blocked flash-style path
+# when the KV length reaches ``block_threshold`` — naive [S,T] score materialisation
+# at 32k+ is both an HBM-traffic and a peak-memory disaster (see EXPERIMENTS.md §Perf).
+ATTN_IMPL = {"mode": "auto", "block_k": 1024, "block_threshold": 8192}
+
+
+def attend_blocked(q, k, v, cfg, causal: bool = True, block_k: int = 1024):
+    """Flash-style blocked attention in pure XLA: lax.scan over KV blocks with an
+    online softmax — no [S, T] tensor ever materialises. This is the TPU-realistic
+    XLA fallback; the Pallas kernel (repro.kernels.flash_attention) is the same
+    algorithm with explicit VMEM tiling."""
+    b, s, h, hd = q.shape
+    t = k.shape[1]
+    kvh = k.shape[2]
+    g = h // kvh
+    block_k = min(block_k, t)
+    assert t % block_k == 0, (t, block_k)
+    nb = t // block_k
+    scale = hd ** -0.5
+    qg = (q * scale).reshape(b, s, kvh, g, hd)
+    kb = jnp.moveaxis(k.reshape(b, nb, block_k, kvh, hd), 1, 0)
+    vb = jnp.moveaxis(v.reshape(b, nb, block_k, kvh, hd), 1, 0)
+    qpos = jnp.arange(s)
+
+    def body(carry, inp):
+        m, l, acc = carry  # [B,KV,G,S], [B,KV,G,S], [B,KV,G,S,hd]
+        kc, vc, jb = inp  # [B,block,KV,hd] x2, block index
+        scores = jnp.einsum("bskgd,btkd->bkgst", qg, kc).astype(jnp.float32)
+        kpos = jb * block_k + jnp.arange(block_k)
+        mask = jnp.ones((s, block_k), bool)
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if cfg.sliding_window:
+            mask &= kpos[None, :] > qpos[:, None] - cfg.sliding_window
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(scores, axis=-1))
+        p = jnp.exp(scores - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bkgst,btkd->bkgsd", p.astype(vc.dtype), vc
+        ).astype(jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    init = (
+        jnp.full((b, kvh, g, s), NEG_INF, jnp.float32),
+        jnp.zeros((b, kvh, g, s), jnp.float32),
+        jnp.zeros((b, kvh, g, s, hd), jnp.float32),
+    )
+    (m, l, acc), _ = jax.lax.scan(body, init, (kb, vb, jnp.arange(nb)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = jnp.moveaxis(out, 3, 1).reshape(b, s, h, hd)  # [B,KV,G,S,hd] -> [B,S,H,hd]
+    return out.astype(q.dtype)
+
+
+def attend_full(
+    params,
+    x,
+    cfg,
+    angles=None,
+    causal: bool = True,
+    kv_input=None,
+    kv_angles=None,
+    use_kernel: bool = False,
+):
+    """Full-sequence attention (train / prefill / encoder). Returns [B, S, d]."""
+    q, k, v = qkv(params, x, cfg, kv_input=kv_input)
+    if angles is not None:
+        q = apply_rope(q, angles)
+        k = apply_rope(k, angles if kv_angles is None else kv_angles)
+    mode = ATTN_IMPL["mode"]
+    blocked = mode == "blocked" or (
+        mode == "auto" and k.shape[1] >= ATTN_IMPL["block_threshold"]
+    )
+    if use_kernel and causal and kv_input is None:
+        from repro.kernels import ops  # deferred: kernels are optional at import time
+
+        out = ops.flash_attention(q, k, v, window=cfg.sliding_window)
+    elif blocked:
+        out = attend_blocked(q, k, v, cfg, causal=causal, block_k=ATTN_IMPL["block_k"])
+    else:
+        scale = cfg.head_dim ** -0.5
+        scores = _grouped_scores(q * scale, k).astype(jnp.float32)
+        if causal:
+            m = causal_mask(q.shape[1], k.shape[1], cfg.sliding_window)
+            scores = jnp.where(m[None, None, None], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+        out = _grouped_out(probs, v)
+    return out.reshape(out.shape[:2] + (-1,)) @ params["wo"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Decode path — one token against a cache
+# ---------------------------------------------------------------------------
+
+
+def make_kv_cache(cfg, batch: int, seq_len: int, dtype=jnp.bfloat16):
+    """Preallocated cache. SWA archs get a ring buffer bounded by the window size
+    (the long_500k enabler: a 524288-token context costs only ``window`` cache slots)."""
+    size = min(cfg.sliding_window, seq_len) if cfg.sliding_window else seq_len
+    shape = (batch, size, cfg.num_kv_heads, cfg.head_dim)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+    }
+
+
+def attend_decode(params, x, cache, index, cfg, angles=None):
+    """One-step decode. ``x`` [B, 1, d]; ``index`` scalar global position of the new
+    token; cache holds all previous tokens. Returns (out [B,1,d], new_cache)."""
+    q, k_new, v_new = qkv(params, x, cfg)
+    if angles is not None:
+        q = apply_rope(q, angles)
+        k_new = apply_rope(k_new, angles)
+    size = cache["k"].shape[1]
+    slot = jnp.mod(index, size)  # ring position (== index when cache is full-length)
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), slot, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), slot, axis=1)
+
+    scale = cfg.head_dim ** -0.5
+    scores = _grouped_scores(q * scale, k.astype(q.dtype)).astype(jnp.float32)  # [B,KV,G,1,T]
+    # Validity: ring slot t holds global position p(t) = index - ((index - t) mod size),
+    # the most recent position congruent to t. Visible iff p(t) >= 0. Window exclusion is
+    # automatic: positions older than index - size + 1 were overwritten. With a full-length
+    # cache (size = seq_len > index) this reduces to t <= index.
+    t = jnp.arange(size)
+    pos = index - jnp.mod(index - t, size)
+    scores = jnp.where((pos >= 0)[None, None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = _grouped_out(probs, v.astype(x.dtype))
+    out = out.reshape(out.shape[:2] + (-1,)) @ params["wo"].astype(x.dtype)
+    return out, {"k": k, "v": v}
+
+
+def cache_logical_len(cfg, index):
+    return jnp.minimum(index, cfg.sliding_window) if cfg.sliding_window else index

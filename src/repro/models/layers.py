@@ -1,0 +1,140 @@
+"""Core layers: norms, gated MLPs, embeddings, RoPE / M-RoPE.
+
+Pure-functional style: every block is an ``init_*`` returning a params dict and an
+``apply`` taking (params, inputs). Param dict keys are stable — the sharding rules in
+``repro/parallel/sharding.py`` match on key paths.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32):
+    scale = 1.0 / np.sqrt(d_in)
+    return jax.random.normal(key, (d_in, d_out), dtype) * scale
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32):
+    return jax.random.normal(key, (vocab, d), dtype) * 0.02
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def init_norm(cfg, d=None):
+    d = d or cfg.d_model
+    if cfg.norm == "layernorm":
+        return {"scale": jnp.ones((d,)), "bias": jnp.zeros((d,))}
+    return {"scale": jnp.ones((d,))}
+
+
+def apply_norm(params, x, eps: float = 1e-6):
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    if "bias" in params:  # LayerNorm
+        mu = jnp.mean(x32, axis=-1, keepdims=True)
+        var = jnp.var(x32, axis=-1, keepdims=True)
+        y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+        y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    else:  # RMSNorm
+        ms = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+        y = x32 * jax.lax.rsqrt(ms + eps) * params["scale"].astype(jnp.float32)
+    return y.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU / GeGLU / plain GeLU)
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, cfg, d_ff=None):
+    d_ff = d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    params = {
+        "wi": dense_init(k1, cfg.d_model, d_ff),
+        "wo": dense_init(k2, d_ff, cfg.d_model),
+    }
+    if cfg.activation in ("swiglu", "geglu"):
+        params["wg"] = dense_init(k3, cfg.d_model, d_ff)
+    return params
+
+
+def apply_mlp(params, x, activation: str):
+    h = x @ params["wi"].astype(x.dtype)
+    if activation == "swiglu":
+        g = x @ params["wg"].astype(x.dtype)
+        h = jax.nn.silu(g) * h
+    elif activation == "geglu":
+        g = x @ params["wg"].astype(x.dtype)
+        h = jax.nn.gelu(g, approximate=True) * h
+    else:
+        h = jax.nn.gelu(h, approximate=True)
+    return h @ params["wo"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE (+ M-RoPE for VLM backbones)
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    """Inverse frequencies, shape [head_dim // 2] (float32)."""
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def rope_angles(positions, head_dim: int, theta: float, m_rope_sections=None):
+    """Angles [..., S, head_dim//2] from positions.
+
+    ``positions``: [..., S] int for standard RoPE, or [..., S, 3] for M-RoPE where the
+    trailing axis is (t, h, w). With M-RoPE the frequency channels are partitioned into
+    sections driven by the respective position component (Qwen2-VL §3).
+    """
+    inv = rope_freqs(head_dim, theta)  # [half]
+    if m_rope_sections is None:
+        return positions[..., None].astype(jnp.float32) * inv
+    sections = m_rope_sections
+    assert sum(sections) == head_dim // 2, (sections, head_dim)
+    parts = []
+    start = 0
+    for comp, sec in enumerate(sections):
+        p = positions[..., comp].astype(jnp.float32)  # [..., S]
+        parts.append(p[..., None] * inv[start : start + sec])
+        start += sec
+    return jnp.concatenate(parts, axis=-1)
+
+
+def apply_rope(x, angles):
+    """Rotate ``x`` [..., S, H, D] by ``angles`` [..., S, D//2] (broadcast over heads)."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    cos = jnp.cos(angles)[..., None, :]  # add head axis
+    sin = jnp.sin(angles)[..., None, :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Learned absolute positions (whisper-style)
+# ---------------------------------------------------------------------------
+
+
+def init_learned_pos(key, max_len: int, d: int):
+    return {"pos": jax.random.normal(key, (max_len, d)) * 0.02}
+
+
+def apply_learned_pos(params, x, offset=0):
+    s = x.shape[-2]
+    pos = jax.lax.dynamic_slice_in_dim(params["pos"], offset, s, axis=0)
+    return x + pos.astype(x.dtype)

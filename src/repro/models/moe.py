@@ -1,0 +1,148 @@
+"""Mixture-of-Experts FFN with top-k routing and sort-based capacity dispatch.
+
+Sharding-agnostic by construction: the same global math supports
+  * EP  — expert weights sharded on the expert axis (``P('model', None, None)``), used
+    when ``E % model_axis == 0`` (phi3.5-moe, jamba). The dispatch buffer is sharded on
+    experts; GSPMD partitions the gather/scatter and inserts the combine all-reduce.
+  * TP-MoE — expert weights sharded on the hidden axis (``P(None, None, 'model')``), used
+    otherwise (mixtral: 8 experts on a 16-way axis). Experts are replicated; each shard
+    computes its hidden slice of every expert; the contraction-dim sharding yields one
+    psum, exactly like a dense Megatron FFN.
+
+The choice lives in ``repro/parallel/sharding.py`` — this module never sees the mesh.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+def init_moe(key, cfg):
+    e, d, f = cfg.num_experts, cfg.d_model, cfg.d_ff
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    scale_in = 1.0 / math.sqrt(d)
+    scale_out = 1.0 / math.sqrt(f)
+    params = {
+        "router": dense_init(k1, d, e),
+        "wi": jax.random.normal(k2, (e, d, f)) * scale_in,
+        "wo": jax.random.normal(k3, (e, f, d)) * scale_out,
+    }
+    if cfg.activation in ("swiglu", "geglu"):
+        params["wg"] = jax.random.normal(k4, (e, d, f)) * scale_in
+    return params
+
+
+def expert_capacity(num_tokens: int, cfg) -> int:
+    """Static per-expert capacity, padded to a multiple of 8 for layout friendliness."""
+    c = math.ceil(num_tokens * cfg.num_experts_per_tok * cfg.capacity_factor / cfg.num_experts)
+    return max(8, -(-c // 8) * 8)
+
+
+def route(params, x, cfg):
+    """Top-k routing. Returns (gates [T,k] f32, experts [T,k] i32, aux_loss scalar)."""
+    logits = (x.astype(jnp.float32)) @ params["router"].astype(jnp.float32)  # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, experts = jax.lax.top_k(probs, cfg.num_experts_per_tok)
+    gates = gates / jnp.sum(gates, axis=-1, keepdims=True)  # renormalise over top-k
+    # Switch-style load-balance auxiliary loss: E * sum_e f_e * P_e
+    k = cfg.num_experts_per_tok
+    f_e = jnp.mean(
+        jnp.sum(jax.nn.one_hot(experts, cfg.num_experts, dtype=jnp.float32), axis=1), axis=0
+    ) / k
+    p_e = jnp.mean(probs, axis=0)
+    aux = cfg.num_experts * jnp.sum(f_e * p_e)
+    return gates, experts, aux
+
+
+def moe_ffn_local(params_local, x, cfg, e_offset, f_frac: float = 1.0):
+    """Per-shard MoE body for the shard_map path (see parallel.sharding.make_moe_apply).
+
+    ``params_local``: this shard's expert weights — EP: [E_local, d, f] slice of the
+    expert axis (e_offset = first owned expert); TP-MoE: [E, d, f_local] slice of the
+    hidden axis (e_offset = 0). ``x``: this data shard's tokens [t, d]. Returns the
+    PARTIAL output [t, d]; the caller psums over 'model' (completing the sum over
+    experts for EP, over hidden for TP — same combine either way).
+    """
+    t, d = x.shape
+    e_glob, k = cfg.num_experts, cfg.num_experts_per_tok
+    e_loc = params_local["wi"].shape[0]
+    cap = expert_capacity(t, cfg)
+    gates, experts, aux = route(params_local, x, cfg)  # router replicated: global ids
+
+    local_e = experts - e_offset
+    in_shard = (local_e >= 0) & (local_e < e_loc)
+    flat_e = jnp.where(in_shard.reshape(-1), local_e.reshape(-1), e_loc)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    pos = jnp.arange(t * k) - jnp.searchsorted(sorted_e, sorted_e, side="left")
+    keep = (pos < cap) & (sorted_e < e_loc)
+    dest = jnp.where(keep, sorted_e * cap + pos, e_loc * cap)
+    token_of = order // k
+
+    xb = jnp.zeros((e_loc * cap + 1, d), x.dtype).at[dest].set(x[token_of])
+    xb = xb[: e_loc * cap].reshape(e_loc, cap, d)
+    h = jnp.einsum("ecd,edf->ecf", xb, params_local["wi"].astype(x.dtype))
+    if "wg" in params_local:
+        g = jnp.einsum("ecd,edf->ecf", xb, params_local["wg"].astype(x.dtype))
+        act = jax.nn.silu if cfg.activation == "swiglu" else (
+            lambda v: jax.nn.gelu(v, approximate=True))
+        h = act(g) * h
+    else:
+        h = jax.nn.gelu(h, approximate=True)
+    yb = jnp.einsum("ecf,efd->ecd", h, params_local["wo"].astype(x.dtype))
+
+    y_flat = yb.reshape(e_loc * cap, d)
+    pair_gate = gates.reshape(-1)[order].astype(x.dtype)
+    contrib = y_flat[jnp.minimum(dest, e_loc * cap - 1)] * (pair_gate * keep)[:, None]
+    y = jnp.zeros((t, d), x.dtype).at[token_of].add(contrib)
+    return y, aux
+
+
+def moe_ffn(params, x, cfg, capacity: int | None = None):
+    """Apply the MoE FFN to ``x`` [T, d]. Returns (y [T, d], aux_loss).
+
+    Sort-based dispatch: (token, choice) pairs are grouped by expert via a stable
+    argsort; each expert processes its first ``capacity`` tokens, the rest are dropped
+    (standard capacity-factor semantics). All shapes static.
+    """
+    t, d = x.shape
+    e = cfg.num_experts
+    k = cfg.num_experts_per_tok
+    cap = capacity or expert_capacity(t, cfg)
+    gates, experts, aux = route(params, x, cfg)
+
+    flat_e = experts.reshape(-1)  # [T*k]
+    order = jnp.argsort(flat_e, stable=True)  # group by expert, preserve token priority
+    sorted_e = flat_e[order]
+    # Position of each pair within its expert group.
+    pos = jnp.arange(t * k) - jnp.searchsorted(sorted_e, sorted_e, side="left")
+    keep = pos < cap
+    dest = jnp.where(keep, sorted_e * cap + pos, e * cap)  # overflow slot e*cap is dropped
+    token_of = order // k
+
+    # Gather tokens into the capacity buffer [E, cap, d] (+1 overflow row, sliced off).
+    xb = jnp.zeros((e * cap + 1, d), x.dtype).at[dest].set(x[token_of])
+    xb = xb[: e * cap].reshape(e, cap, d)
+
+    # Per-expert gated FFN (einsum over the expert axis keeps EP/TP sharding choices open).
+    h = jnp.einsum("ecd,edf->ecf", xb, params["wi"].astype(x.dtype))
+    if "wg" in params:
+        g = jnp.einsum("ecd,edf->ecf", xb, params["wg"].astype(x.dtype))
+        act = jax.nn.silu if cfg.activation == "swiglu" else (
+            lambda v: jax.nn.gelu(v, approximate=True)
+        )
+        h = act(g) * h
+    else:
+        h = jax.nn.gelu(h, approximate=True)
+    yb = jnp.einsum("ecf,efd->ecd", h, params["wo"].astype(x.dtype))
+
+    # Combine: gather each pair's expert output, weight by its gate, scatter-add to tokens.
+    y_flat = yb.reshape(e * cap, d)
+    pair_gate = gates.reshape(-1)[order].astype(x.dtype)
+    contrib = y_flat[jnp.minimum(dest, e * cap - 1)] * (pair_gate * keep)[:, None]
+    y = jnp.zeros((t, d), x.dtype).at[token_of].add(contrib)
+    return y, aux

@@ -1,0 +1,226 @@
+"""Mamba-2 (SSD — state-space duality) mixer block.
+
+Train/prefill use the chunked SSD algorithm (arXiv:2405.21060 §6): quadratic attention-like
+intra-chunk term + linear inter-chunk state recurrence; chunk length ``cfg.ssm_chunk`` keeps
+the [Q, P] working set VMEM-resident on TPU (the Pallas kernel in ``repro.kernels.ssd_scan``
+is the drop-in; this module is the XLA path and the numerical reference basis).
+
+Decode is the O(1) recurrence: h' = exp(dt·A)·h + dt·(B ⊗ x); y = C·h' + D·x — the reason
+SSM/hybrid archs run the long_500k cell.
+
+Projections are kept as separate matrices (w_z/w_x/w_B/w_C/w_dt instead of a packed
+in_proj) so tensor parallelism can shard the head-indexed outputs (z, x, dt — over
+'model') while keeping the head-shared B/C replicated; XLA fuses the matmuls back
+together. Single B/C group (G=1), matching Mamba-2 defaults at these scales.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+def ssm_dims(cfg):
+    d_in = cfg.ssm_expand * cfg.d_model
+    nheads = d_in // cfg.ssm_head_dim
+    conv_ch = d_in + 2 * cfg.ssm_state
+    return d_in, nheads, conv_ch
+
+
+def init_ssm(key, cfg):
+    d_in, nheads, _ = ssm_dims(cfg)
+    n = cfg.ssm_state
+    k = jax.random.split(key, 6)
+    w = cfg.ssm_conv_dim
+    return {
+        "w_z": dense_init(k[0], cfg.d_model, d_in),
+        "w_x": dense_init(k[1], cfg.d_model, d_in),
+        "w_B": dense_init(k[2], cfg.d_model, n),
+        "w_C": dense_init(k[3], cfg.d_model, n),
+        "w_dt": dense_init(k[4], cfg.d_model, nheads),
+        "conv_x": jax.random.normal(k[5], (w, d_in)) * 0.2,
+        "conv_B": jax.random.normal(jax.random.fold_in(k[5], 1), (w, n)) * 0.2,
+        "conv_C": jax.random.normal(jax.random.fold_in(k[5], 2), (w, n)) * 0.2,
+        "conv_bias_x": jnp.zeros((d_in,)),
+        "conv_bias_B": jnp.zeros((n,)),
+        "conv_bias_C": jnp.zeros((n,)),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nheads)),
+        "D": jnp.ones((nheads,)),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((nheads,), 0.01))),  # softplus^-1(0.01)
+        "norm_scale": jnp.ones((d_in,)),
+        "out_proj": dense_init(jax.random.fold_in(k[0], 7), d_in, cfg.d_model),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Causal depthwise conv (width w, channels last)
+# ---------------------------------------------------------------------------
+
+
+def causal_conv(x, w, b):
+    """x [B,S,C], w [K,C], b [C] -> [B,S,C]; left-padded causal depthwise conv."""
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i : i + x.shape[1], :] * w[i].astype(x.dtype) for i in range(k))
+    return out + b.astype(x.dtype)
+
+
+def causal_conv_step(x_new, conv_state, w, b):
+    """One-token conv. x_new [B,C]; conv_state [B,K-1,C] (previous inputs, oldest first)."""
+    hist = jnp.concatenate([conv_state, x_new[:, None, :]], axis=1)  # [B, K, C]
+    out = jnp.einsum("bkc,kc->bc", hist, w.astype(x_new.dtype)) + b.astype(x_new.dtype)
+    return out, hist[:, 1:, :]
+
+
+# ---------------------------------------------------------------------------
+# SSD core
+# ---------------------------------------------------------------------------
+
+
+def ssd_chunked(x, dt, a_head, bmat, cmat, chunk: int, initial_state=None):
+    """Chunked SSD. x [B,S,H,P]; dt [B,S,H]; a_head [H] (negative); bmat/cmat [B,S,N].
+
+    Returns (y [B,S,H,P], final_state [B,H,N,P]).
+    """
+    b, s, h, p = x.shape
+    n = bmat.shape[-1]
+    q = min(chunk, s)
+    assert s % q == 0, f"seq {s} not divisible by chunk {q}"
+    nc = s // q
+
+    f32 = jnp.float32
+    a = dt.astype(f32) * a_head.astype(f32)  # [B,S,H] decay exponents (<= 0)
+    a = a.reshape(b, nc, q, h)
+    cum = jnp.cumsum(a, axis=2)  # [B,nc,Q,H]
+    xc = x.reshape(b, nc, q, h, p)
+    dtc = dt.reshape(b, nc, q, h).astype(f32)
+    bc = bmat.reshape(b, nc, q, n).astype(f32)
+    cc = cmat.reshape(b, nc, q, n).astype(f32)
+
+    # --- intra-chunk (quadratic in Q): Y[i] = sum_{j<=i} C_i·B_j exp(cum_i-cum_j) dt_j x_j
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    cb = jnp.einsum("bcin,bcjn->bcij", cc, bc)  # [B,nc,Q,Q]
+    decay = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])  # [B,nc,Qi,Qj,H]
+    w = cb[..., None] * jnp.where(tri[None, None, :, :, None], decay, 0.0)
+    w = w * dtc[:, :, None, :, :]  # multiply dt_j
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", w, xc.astype(f32))
+
+    # --- per-chunk input states: S_c = sum_j exp(cum_last - cum_j) dt_j B_j ⊗ x_j
+    sdecay = jnp.exp(cum[:, :, -1:, :] - cum)  # [B,nc,Q,H]
+    s_c = jnp.einsum("bcjn,bcjh,bcjhp->bchnp", bc, sdecay * dtc, xc.astype(f32))
+
+    # --- inter-chunk recurrence over nc
+    lam = jnp.exp(cum[:, :, -1, :])  # [B,nc,H] total chunk decay
+    h0 = (
+        jnp.zeros((b, h, n, p), f32)
+        if initial_state is None
+        else initial_state.astype(f32)
+    )
+
+    def step(carry, inp):
+        lam_c, s_cc = inp  # [B,H], [B,H,N,P]
+        new = lam_c[:, :, None, None] * carry + s_cc
+        return new, carry  # emit state *entering* the chunk
+
+    final, h_in = jax.lax.scan(
+        step, h0, (jnp.moveaxis(lam, 1, 0), jnp.moveaxis(s_c, 1, 0))
+    )
+    h_in = jnp.moveaxis(h_in, 0, 1)  # [B,nc,H,N,P]
+
+    # --- inter-chunk output: Y[i] += exp(cum_i) C_i · H_entering
+    y_inter = jnp.einsum("bcin,bcih,bchnp->bcihp", cc, jnp.exp(cum), h_in)
+
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    return y.astype(x.dtype), final
+
+
+def ssd_decode_step(x, dt, a_head, bvec, cvec, state):
+    """One token. x [B,H,P]; dt [B,H]; bvec/cvec [B,N]; state [B,H,N,P]."""
+    f32 = jnp.float32
+    lam = jnp.exp(dt.astype(f32) * a_head.astype(f32))  # [B,H]
+    inject = jnp.einsum("bn,bhp,bh->bhnp", bvec.astype(f32), x.astype(f32), dt.astype(f32))
+    new_state = lam[:, :, None, None] * state.astype(f32) + inject
+    y = jnp.einsum("bn,bhnp->bhp", cvec.astype(f32), new_state)
+    return y.astype(x.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# Full mixer block
+# ---------------------------------------------------------------------------
+
+
+def _project(params, u):
+    z = u @ params["w_z"].astype(u.dtype)
+    x = u @ params["w_x"].astype(u.dtype)
+    bmat = u @ params["w_B"].astype(u.dtype)
+    cmat = u @ params["w_C"].astype(u.dtype)
+    dt = u @ params["w_dt"].astype(u.dtype)
+    return z, x, bmat, cmat, dt
+
+
+def _gated_norm(params, y, z, eps=1e-6):
+    g = y * jax.nn.silu(z)
+    ms = jnp.mean(jnp.square(g.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = g.astype(jnp.float32) * jax.lax.rsqrt(ms + eps)
+    return (out * params["norm_scale"].astype(jnp.float32)).astype(y.dtype)
+
+
+def apply_ssm(params, u, cfg, use_kernel: bool = False):
+    """Full-sequence Mamba-2 mixer. u [B,S,d] -> [B,S,d]."""
+    b, s, _ = u.shape
+    d_in, nheads, _ = ssm_dims(cfg)
+    z, x, bmat, cmat, dt = _project(params, u)
+    x = jax.nn.silu(causal_conv(x, params["conv_x"], params["conv_bias_x"]))
+    bmat = jax.nn.silu(causal_conv(bmat, params["conv_B"], params["conv_bias_B"]))
+    cmat = jax.nn.silu(causal_conv(cmat, params["conv_C"], params["conv_bias_C"]))
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    a_head = -jnp.exp(params["A_log"].astype(jnp.float32))
+    xh = x.reshape(b, s, nheads, cfg.ssm_head_dim)
+    if use_kernel:
+        from repro.kernels import ops
+
+        y = ops.ssd_scan(xh, dt, a_head, bmat, cmat, chunk=cfg.ssm_chunk)
+    else:
+        y, _ = ssd_chunked(xh, dt, a_head, bmat, cmat, cfg.ssm_chunk)
+    y = y + params["D"].astype(y.dtype)[None, None, :, None] * xh
+    y = y.reshape(b, s, d_in)
+    y = _gated_norm(params, y, z)
+    return y @ params["out_proj"].astype(u.dtype)
+
+
+def make_ssm_cache(cfg, batch: int, dtype=jnp.float32):
+    """Decode cache. Conv history follows ``dtype``; the SSM state stays f32 — the
+    recurrence h' = λh + δBx accumulates over the whole context and bf16 drift
+    compounds (same reason attention keeps softmax stats in f32)."""
+    d_in, nheads, _ = ssm_dims(cfg)
+    w = cfg.ssm_conv_dim
+    return {
+        "conv_x": jnp.zeros((batch, w - 1, d_in), dtype),
+        "conv_B": jnp.zeros((batch, w - 1, cfg.ssm_state), dtype),
+        "conv_C": jnp.zeros((batch, w - 1, cfg.ssm_state), dtype),
+        "state": jnp.zeros((batch, nheads, cfg.ssm_state, cfg.ssm_head_dim), jnp.float32),
+    }
+
+
+def apply_ssm_decode(params, u, cache, cfg):
+    """One-token mixer step. u [B,1,d]; returns (y [B,1,d], new_cache)."""
+    b = u.shape[0]
+    d_in, nheads, _ = ssm_dims(cfg)
+    z, x, bmat, cmat, dt = _project(params, u[:, 0, :])
+    dtype = u.dtype
+    x, conv_x = causal_conv_step(x, cache["conv_x"], params["conv_x"], params["conv_bias_x"])
+    bmat, conv_b = causal_conv_step(bmat, cache["conv_B"], params["conv_B"], params["conv_bias_B"])
+    cmat, conv_c = causal_conv_step(cmat, cache["conv_C"], params["conv_C"], params["conv_bias_C"])
+    x, bmat, cmat = (jax.nn.silu(x).astype(dtype), jax.nn.silu(bmat).astype(dtype),
+                     jax.nn.silu(cmat).astype(dtype))
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    a_head = -jnp.exp(params["A_log"].astype(jnp.float32))
+    xh = x.reshape(b, nheads, cfg.ssm_head_dim)
+    y, state = ssd_decode_step(xh, dt, a_head, bmat, cmat, cache["state"].astype(jnp.float32))
+    y = y + params["D"].astype(y.dtype)[None, :, None] * xh
+    y = y.reshape(b, d_in)
+    y = _gated_norm(params, y, z)
+    out = (y @ params["out_proj"].astype(u.dtype))[:, None, :]
+    return out, {"conv_x": conv_x, "conv_B": conv_b, "conv_C": conv_c,
+                 "state": state.astype(cache["state"].dtype)}

@@ -1,0 +1,464 @@
+"""Decoder-stack assembly for every LM family in the zoo.
+
+Layers are grouped into *scan units*: the smallest repeating structural pattern
+(1 layer for uniform stacks; 8 for jamba's 1:7 attn:mamba interleave with MoE every
+2nd layer). Unit params are stacked on a leading axis and iterated with ``lax.scan`` —
+this keeps the lowered HLO size O(unit) instead of O(num_layers), which matters for the
+80-layer dry-run cells, and gives remat a natural boundary.
+
+The stack is mesh-agnostic: an optional ``shard(x, logical_name)`` hook lets the launch
+layer inject ``with_sharding_constraint`` at the canonical activation cut points.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.layers import (
+    apply_learned_pos,
+    apply_mlp,
+    apply_norm,
+    embed_init,
+    init_learned_pos,
+    init_mlp,
+    init_norm,
+    rope_angles,
+)
+
+
+def _identity_shard(x, name):  # default no-op sharding hook
+    return x
+
+
+@dataclass
+class StackCtx:
+    cfg: Any
+    shard: Callable = _identity_shard
+    use_kernel: bool = False
+    remat: str = "dots"
+    compute_dtype: Any = jnp.float32
+    # scan_layers=True keeps HLO O(unit) (production default); False unrolls the stack —
+    # required for honest dry-run cost analysis: XLA's HloCostAnalysis counts while-loop
+    # bodies ONCE, so scanned stacks under-report FLOPs/bytes/collectives by the trip
+    # count (verified empirically; see EXPERIMENTS.md §Dry-run).
+    scan_layers: bool = True
+    # Number of data-parallel shards the MoE dispatch is partitioned into. The sort-
+    # based dispatch argsorts the token axis; a GLOBAL argsort is unpartitionable and
+    # makes GSPMD replicate the whole MoE block per data row (measured 14x compute
+    # waste — EXPERIMENTS.md §Perf iteration 0). vmapping the dispatch over dp shards
+    # keeps routing local to each shard and the einsums sharded.
+    dp_shards: int = 1
+    # Explicit shard_map MoE apply (parallel.sharding.make_moe_apply): the fully
+    # deterministic sharding of the dispatch; set by the launch layer when a model
+    # axis exists. None -> plain (vmap/local) path.
+    moe_apply: Any = None
+
+
+# ---------------------------------------------------------------------------
+# Unit structure
+# ---------------------------------------------------------------------------
+
+
+def unit_period(cfg) -> int:
+    p = 1
+    if cfg.family == "hybrid":
+        p = cfg.attn_layer_period or 8
+    if cfg.is_moe:
+        p = _lcm(p, cfg.moe_layer_period)
+    return p
+
+
+def _lcm(a, b):
+    import math
+
+    return a * b // math.gcd(a, b)
+
+
+def num_units(cfg) -> int:
+    p = unit_period(cfg)
+    assert cfg.num_layers % p == 0, (cfg.num_layers, p)
+    return cfg.num_layers // p
+
+
+# ---------------------------------------------------------------------------
+# Single layer
+# ---------------------------------------------------------------------------
+
+
+def init_layer(key, cfg, i: int):
+    kind = cfg.layer_kind(i)
+    keys = jax.random.split(key, 4)
+    p = {"norm1": init_norm(cfg)}
+    if kind == "attn":
+        p["attn"] = attn.init_attention(keys[0], cfg)
+    else:
+        p["ssm"] = ssm_lib.init_ssm(keys[1], cfg)
+    if cfg.d_ff:
+        p["norm2"] = init_norm(cfg)
+        if cfg.layer_is_moe(i):
+            p["moe"] = moe_lib.init_moe(keys[2], cfg)
+        else:
+            p["mlp"] = init_mlp(keys[3], cfg)
+    return p
+
+
+def apply_layer(params, x, i: int, ctx: StackCtx, angles=None, causal=True):
+    """Full-sequence layer application. Returns (x, aux_loss)."""
+    cfg = ctx.cfg
+    aux = jnp.zeros((), jnp.float32)
+    h = apply_norm(params["norm1"], x)
+    if "attn" in params:
+        h = attn.attend_full(
+            params["attn"], h, cfg, angles=angles, causal=causal, use_kernel=ctx.use_kernel
+        )
+    else:
+        h = ssm_lib.apply_ssm(params["ssm"], h, cfg, use_kernel=ctx.use_kernel)
+    x = x + ctx.shard(h, "act_btd")
+    if "norm2" in params:
+        h = apply_norm(params["norm2"], x)
+        if "moe" in params:
+            h, aux_moe = _apply_moe(params["moe"], h, cfg, ctx)
+            aux = aux + aux_moe
+        else:
+            h = apply_mlp(params["mlp"], h, cfg.activation)
+        x = x + ctx.shard(h, "act_btd")
+    return x, aux
+
+
+def _apply_moe(moe_params, h, cfg, ctx: StackCtx):
+    """MoE FFN with the token dispatch partitioned over data-parallel shards: each
+    shard routes and sorts only its local tokens (see StackCtx.dp_shards/moe_apply)."""
+    b, s, d = h.shape
+    t = b * s
+    if ctx.moe_apply is not None and t % max(ctx.dp_shards, 1) == 0:
+        # explicit shard_map path (production meshes); batch-1 decode falls through
+        y, aux = ctx.moe_apply(moe_params, h.reshape(t, d))
+        return y.reshape(b, s, d), aux
+    shards = ctx.dp_shards if t % max(ctx.dp_shards, 1) == 0 else 1
+    if shards <= 1:
+        y, aux = moe_lib.moe_ffn(moe_params, h.reshape(t, d), cfg)
+        return y.reshape(b, s, d), aux
+    hs = ctx.shard(h.reshape(shards, t // shards, d), "moe_tokens")
+    y, aux = jax.vmap(lambda xx: moe_lib.moe_ffn(moe_params, xx, cfg))(hs)
+    y = ctx.shard(y, "moe_tokens")
+    return y.reshape(b, s, d), jnp.mean(aux)
+
+
+def apply_layer_decode(params, x, cache, index, i: int, ctx: StackCtx, angles=None):
+    """One-token layer step. Returns (x, new_cache, aux)."""
+    cfg = ctx.cfg
+    aux = jnp.zeros((), jnp.float32)
+    h = apply_norm(params["norm1"], x)
+    if "attn" in params:
+        h, new_cache = attn.attend_decode(params["attn"], h, cache, index, cfg, angles=angles)
+    else:
+        h, new_cache = ssm_lib.apply_ssm_decode(params["ssm"], h, cache, cfg)
+    x = x + h
+    if "norm2" in params:
+        h = apply_norm(params["norm2"], x)
+        if "moe" in params:
+            h, aux = _apply_moe(params["moe"], h, cfg, ctx)
+        else:
+            h = apply_mlp(params["mlp"], h, cfg.activation)
+        x = x + h
+    return x, new_cache, aux
+
+
+def init_layer_cache(cfg, i: int, batch: int, seq_len: int, dtype=jnp.bfloat16):
+    """``dtype`` applies to attention K/V storage (bf16 or fp8 — the decode-cache
+    compression lever); SSM conv history stays bf16 and the SSM state f32 (the
+    recurrence accumulates; see make_ssm_cache)."""
+    if cfg.layer_kind(i) == "attn":
+        return attn.make_kv_cache(cfg, batch, seq_len, dtype)
+    return ssm_lib.make_ssm_cache(cfg, batch, dtype=jnp.bfloat16)
+
+
+# ---------------------------------------------------------------------------
+# Full decoder stack
+# ---------------------------------------------------------------------------
+
+
+def init_decoder(key, cfg, max_seq: int):
+    p = unit_period(cfg)
+    n_units = num_units(cfg)
+    keys = jax.random.split(key, n_units + 3)
+    units = []
+    for u in range(n_units):
+        lkeys = jax.random.split(keys[u], p)
+        units.append({f"layer{i}": init_layer(lkeys[i], cfg, u * p + i) for i in range(p)})
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *units)
+    params = {
+        "embed": embed_init(keys[-3], cfg.vocab_size, cfg.d_model),
+        "units": stacked,
+        "final_norm": init_norm(cfg),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = embed_init(keys[-2], cfg.vocab_size, cfg.d_model)
+    if not cfg.use_rope and cfg.family != "ssm" and cfg.family != "hybrid":
+        params["pos"] = init_learned_pos(keys[-1], max_seq, cfg.d_model)
+    return params
+
+
+def _angles_for(cfg, positions):
+    if not cfg.use_rope or cfg.num_heads == 0:
+        return None
+    sections = cfg.m_rope_sections if cfg.m_rope else None
+    return rope_angles(positions, cfg.head_dim, cfg.rope_theta, m_rope_sections=sections)
+
+
+def embed_inputs(params, batch, cfg, ctx: StackCtx):
+    """Token ids or precomputed embeddings (stub frontends) -> [B,S,d]."""
+    if "embeddings" in batch:
+        x = batch["embeddings"].astype(ctx.compute_dtype)
+    else:
+        x = jnp.take(params["embed"], batch["tokens"], axis=0).astype(ctx.compute_dtype)
+    if "pos" in params:
+        x = apply_learned_pos(params["pos"], x)
+    return ctx.shard(x, "act_btd")
+
+
+def logits_from(params, x, cfg, ctx: StackCtx):
+    table = params.get("lm_head", params["embed"])
+    out = jnp.einsum("bsd,vd->bsv", x, table.astype(x.dtype))
+    return ctx.shard(out, "act_btv")
+
+
+def _remat_wrap(fn, policy: str):
+    if policy == "none":
+        return fn
+    if policy == "dots":
+        pol = jax.checkpoint_policies.checkpoint_dots
+    elif policy == "dots_no_batch":
+        pol = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+    elif policy == "full":
+        pol = jax.checkpoint_policies.nothing_saveable
+    else:
+        raise ValueError(f"unknown remat policy {policy!r}")
+    return jax.checkpoint(fn, policy=pol)
+
+
+def forward_decoder(params, batch, cfg, ctx: StackCtx, positions=None, causal=True):
+    """Full-sequence forward. Returns (logits [B,S,V], aux_loss)."""
+    x = embed_inputs(params, batch, cfg, ctx)
+    b, s, _ = x.shape
+    if positions is None:
+        positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+        if cfg.m_rope:  # text-only default: (t, h, w) all follow the sequence index
+            positions = jnp.broadcast_to(positions[..., None], (b, s, 3))
+    angles = _angles_for(cfg, positions)
+    p = unit_period(cfg)
+
+    def unit_fn(carry, unit_params):
+        x, aux = carry
+        for i in range(p):
+            x, a = apply_layer(unit_params[f"layer{i}"], x, i, ctx, angles=angles, causal=causal)
+            aux = aux + a
+        return (x, aux), None
+
+    unit = _remat_wrap(lambda c, w: unit_fn(c, w)[0], ctx.remat)
+    carry = (x, jnp.zeros((), jnp.float32))
+    if ctx.scan_layers:
+        carry, _ = jax.lax.scan(lambda c, w: (unit(c, w), None), carry, params["units"])
+    else:
+        for u in range(num_units(cfg)):
+            unit_params = jax.tree_util.tree_map(lambda t: t[u], params["units"])
+            carry = unit(carry, unit_params)
+    x, aux = carry
+    x = apply_norm(params["final_norm"], x)
+    return logits_from(params, x, cfg, ctx), aux
+
+
+def init_decoder_cache(cfg, batch: int, seq_len: int, dtype=jnp.bfloat16):
+    p = unit_period(cfg)
+    n_units = num_units(cfg)
+    unit_cache = {
+        f"layer{i}": init_layer_cache(cfg, i, batch, seq_len, dtype) for i in range(p)
+    }
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x, (n_units,) + x.shape), unit_cache
+    )
+
+
+def decode_step(params, batch, caches, index, cfg, ctx: StackCtx):
+    """One-token decode. ``batch`` has 'token' [B,1] (or 'embedding' [B,1,d]);
+    ``index`` scalar global position. Returns (logits [B,1,V], new_caches)."""
+    bb = {"tokens": batch["token"]} if "token" in batch else {"embeddings": batch["embedding"]}
+    x = embed_inputs(params, bb, cfg, ctx)
+    b = x.shape[0]
+    positions = jnp.broadcast_to(index, (b, 1))
+    if cfg.m_rope:
+        positions = jnp.broadcast_to(positions[..., None], (b, 1, 3))
+    angles = _angles_for(cfg, positions)
+    p = unit_period(cfg)
+
+    def unit_fn(x, scanned):
+        unit_params, unit_cache = scanned
+        new_cache = {}
+        for i in range(p):
+            x, nc, _ = apply_layer_decode(
+                unit_params[f"layer{i}"], x, unit_cache[f"layer{i}"], index, i, ctx, angles=angles
+            )
+            new_cache[f"layer{i}"] = nc
+        return x, new_cache
+
+    if ctx.scan_layers:
+        x, new_caches = jax.lax.scan(unit_fn, x, (params["units"], caches))
+    else:
+        outs = []
+        for u in range(num_units(cfg)):
+            sel = jax.tree_util.tree_map(lambda t: t[u], (params["units"], caches))
+            x, nc = unit_fn(x, sel)
+            outs.append(nc)
+        new_caches = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *outs)
+    x = apply_norm(params["final_norm"], x)
+    return logits_from(params, x, cfg, ctx), new_caches
+
+
+# ---------------------------------------------------------------------------
+# Encoder-decoder (whisper)
+# ---------------------------------------------------------------------------
+
+
+def init_encdec(key, cfg, max_seq: int):
+    keys = jax.random.split(key, 3 * (cfg.num_encoder_layers + cfg.num_layers) + 8)
+    ki = iter(keys)
+    enc_layers = []
+    for _ in range(cfg.num_encoder_layers):
+        enc_layers.append(
+            {
+                "norm1": init_norm(cfg),
+                "attn": attn.init_attention(next(ki), cfg),
+                "norm2": init_norm(cfg),
+                "mlp": init_mlp(next(ki), cfg),
+            }
+        )
+    dec_layers = []
+    for _ in range(cfg.num_layers):
+        dec_layers.append(
+            {
+                "norm1": init_norm(cfg),
+                "attn": attn.init_attention(next(ki), cfg),
+                "norm_x": init_norm(cfg),
+                "cross": attn.init_attention(next(ki), cfg),
+                "norm2": init_norm(cfg),
+                "mlp": init_mlp(next(ki), cfg),
+            }
+        )
+    return {
+        "embed": embed_init(next(ki), cfg.vocab_size, cfg.d_model),
+        "enc_pos": init_learned_pos(next(ki), max_seq, cfg.d_model),
+        "dec_pos": init_learned_pos(next(ki), max_seq, cfg.d_model),
+        "enc_layers": jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *enc_layers),
+        "dec_layers": jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *dec_layers),
+        "enc_norm": init_norm(cfg),
+        "final_norm": init_norm(cfg),
+        "lm_head": embed_init(next(ki), cfg.vocab_size, cfg.d_model),
+    }
+
+
+def encode(params, frames, cfg, ctx: StackCtx):
+    """frames [B,S,d] (precomputed frame embeddings — conv frontend stubbed per spec)."""
+    x = apply_learned_pos(params["enc_pos"], frames.astype(ctx.compute_dtype))
+
+    def layer_fn(x, lp):
+        h = apply_norm(lp["norm1"], x)
+        x = x + attn.attend_full(lp["attn"], h, cfg, causal=False)
+        h = apply_norm(lp["norm2"], x)
+        x = x + apply_mlp(lp["mlp"], h, cfg.activation)
+        return x, None
+
+    unit = _remat_wrap(lambda c, w: layer_fn(c, w)[0], ctx.remat)
+    if ctx.scan_layers:
+        x, _ = jax.lax.scan(lambda c, w: (unit(c, w), None), x, params["enc_layers"])
+    else:
+        for u in range(cfg.num_encoder_layers):
+            x = unit(x, jax.tree_util.tree_map(lambda t: t[u], params["enc_layers"]))
+    return apply_norm(params["enc_norm"], x)
+
+
+def decode_train_encdec(params, tokens, enc_out, cfg, ctx: StackCtx):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(ctx.compute_dtype)
+    x = apply_learned_pos(params["dec_pos"], x)
+
+    def layer_fn(x, lp):
+        h = apply_norm(lp["norm1"], x)
+        x = x + attn.attend_full(lp["attn"], h, cfg, causal=True)
+        h = apply_norm(lp["norm_x"], x)
+        x = x + attn.attend_full(lp["cross"], h, cfg, causal=False, kv_input=enc_out)
+        h = apply_norm(lp["norm2"], x)
+        x = x + apply_mlp(lp["mlp"], h, cfg.activation)
+        return x, None
+
+    if ctx.scan_layers:
+        x, _ = jax.lax.scan(layer_fn, x, params["dec_layers"])
+    else:
+        for u in range(cfg.num_layers):
+            x, _ = layer_fn(x, jax.tree_util.tree_map(lambda t: t[u], params["dec_layers"]))
+    x = apply_norm(params["final_norm"], x)
+    return jnp.einsum("bsd,vd->bsv", x, params["lm_head"].astype(x.dtype))
+
+
+def init_encdec_cache(params, cfg, batch: int, seq_len: int, enc_out=None, dtype=jnp.bfloat16):
+    """Self-attn KV ring + precomputed cross-attention K/V per decoder layer."""
+
+    def one_layer(lp):
+        cache = attn.make_kv_cache(cfg, batch, seq_len, dtype)
+        if enc_out is not None:
+            _, ck, cv = attn.qkv(lp["cross"], enc_out, cfg)
+            cache = dict(cache, cross_k=ck.astype(dtype), cross_v=cv.astype(dtype))
+        else:
+            shape = (batch, seq_len, cfg.num_kv_heads, cfg.head_dim)
+            cache = dict(cache, cross_k=jnp.zeros(shape, dtype), cross_v=jnp.zeros(shape, dtype))
+        return cache
+
+    # dec_layers params are stacked [L, ...]; build the cache per layer via vmap-free map
+    n = cfg.num_layers
+    caches = []
+    for i in range(n):
+        lp = jax.tree_util.tree_map(lambda x: x[i], params["dec_layers"])
+        caches.append(one_layer(lp))
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *caches)
+
+
+def decode_step_encdec(params, batch, caches, index, cfg, ctx: StackCtx):
+    x = jnp.take(params["embed"], batch["token"], axis=0).astype(ctx.compute_dtype)
+    x = apply_learned_pos(params["dec_pos"], x, offset=index)
+
+    def layer_fn(x, scanned):
+        lp, cache = scanned
+        h = apply_norm(lp["norm1"], x)
+        h, new_kv = attn.attend_decode(lp["attn"], h, {"k": cache["k"], "v": cache["v"]},
+                                       index, cfg)
+        x = x + h
+        h = apply_norm(lp["norm_x"], x)
+        # cross-attention against the precomputed encoder K/V (non-causal, all valid)
+        q, _, _ = attn.qkv(lp["cross"], h, cfg)
+        scale = cfg.head_dim ** -0.5
+        scores = attn._grouped_scores(q * scale, cache["cross_k"].astype(q.dtype))
+        probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(x.dtype)
+        o = attn._grouped_out(probs, cache["cross_v"].astype(x.dtype))
+        x = x + o.reshape(o.shape[:2] + (-1,)) @ lp["cross"]["wo"].astype(x.dtype)
+        h = apply_norm(lp["norm2"], x)
+        x = x + apply_mlp(lp["mlp"], h, cfg.activation)
+        return x, dict(cache, k=new_kv["k"], v=new_kv["v"])
+
+    if ctx.scan_layers:
+        x, new_caches = jax.lax.scan(layer_fn, x, (params["dec_layers"], caches))
+    else:
+        outs = []
+        for u in range(cfg.num_layers):
+            sel = jax.tree_util.tree_map(lambda t: t[u], (params["dec_layers"], caches))
+            x, nc = layer_fn(x, sel)
+            outs.append(nc)
+        new_caches = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *outs)
+    x = apply_norm(params["final_norm"], x)
+    return jnp.einsum("bsd,vd->bsv", x, params["lm_head"].astype(x.dtype)), new_caches

@@ -1,0 +1,12 @@
+from repro.optim.optimizers import OptState, lr_schedule, make_optimizer, clip_by_global_norm
+from repro.optim.grad_compress import compressed_psum, init_error_feedback, plain_psum
+
+__all__ = [
+    "OptState",
+    "clip_by_global_norm",
+    "compressed_psum",
+    "init_error_feedback",
+    "lr_schedule",
+    "make_optimizer",
+    "plain_psum",
+]

@@ -1,0 +1,19 @@
+from repro.parallel.sharding import (
+    batch_shardings,
+    buffer_shardings,
+    cache_shardings,
+    dp_axes,
+    make_shard_fn,
+    param_spec,
+    params_shardings,
+)
+
+__all__ = [
+    "batch_shardings",
+    "buffer_shardings",
+    "cache_shardings",
+    "dp_axes",
+    "make_shard_fn",
+    "param_spec",
+    "params_shardings",
+]

@@ -1,0 +1,275 @@
+"""Sharding rules: parameter and activation PartitionSpecs by logical role.
+
+Megatron-style tensor parallelism over the 'model' axis, data parallelism over
+('pod','data'):
+
+  * embeddings / lm_head       [V, d]     -> P('model', None)       (vocab-sharded:
+      the embed lookup psums a [T, d] partial; logits stay vocab-sharded into the
+      parallel cross-entropy — no [T, V] collective ever materialises)
+  * attn wq/wk/wv              [d, H*hd]  -> P(None, 'model')        (head-sharded;
+      KV replicated when kv_heads don't divide the axis — MQA)
+  * attn wo                    [H*hd, d]  -> P('model', None)        (row-parallel)
+  * mlp wi/wg                  [d, ff]    -> P(None, 'model'); wo row-parallel
+  * MoE experts [E, d, f]: EP P('model', None, None) when E % axis == 0
+      (phi3.5/jamba: 16e), else TP-MoE P(None, None, 'model') (mixtral: 8e)
+  * SSM: head-indexed projections (w_z/w_x/w_dt, conv_x, A/D/dt_bias, norm, out_proj)
+      shard over heads/d_in; B/C projections replicated (head-shared, G=1)
+
+Divisibility is always checked; non-divisible dims fall back to replication.
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def _div(n: int, size: int) -> bool:
+    return size > 0 and n % size == 0
+
+
+def param_spec(path: str, shape: Tuple[int, ...], cfg, model_size: int) -> P:
+    """PartitionSpec for one parameter, identified by its pytree key path."""
+    name = path.split("'")[-2] if "'" in path else path  # last dict key
+    ep = cfg.is_moe and _div(cfg.num_experts, model_size)
+
+    # --- embeddings / heads ---
+    if name in ("embed", "lm_head"):
+        return P("model", None) if _div(shape[0], model_size) else P(None, None)
+    if name == "pos":
+        return P(None, None)
+
+    # --- attention ---
+    if name == "wq":
+        return P(None, "model") if _div(cfg.num_heads * cfg.head_dim, model_size) else P()
+    if name in ("wk", "wv"):
+        kv_dim = cfg.num_kv_heads * cfg.head_dim
+        return P(None, "model") if _div(kv_dim, model_size) else P(None, None)
+    if name == "wo" and len(shape) == 2 and shape[0] == cfg.num_heads * cfg.head_dim:
+        return P("model", None) if _div(shape[0], model_size) else P(None, None)
+
+    # --- MoE experts ---
+    if name == "router":
+        return P(None, None)
+    if len(shape) == 3:  # [E, d, f] / [E, f, d]
+        if ep:
+            return P("model", None, None)
+        # TP-MoE: shard the ff dim (axis with size d_ff)
+        if shape[1] == cfg.d_ff and _div(cfg.d_ff, model_size):
+            return P(None, "model", None)
+        if shape[2] == cfg.d_ff and _div(cfg.d_ff, model_size):
+            return P(None, None, "model")
+        return P(None, None, None)
+
+    # --- dense MLP ---
+    if name in ("wi", "wg"):
+        return P(None, "model") if _div(shape[-1], model_size) else P(None, None)
+    if name == "wo":
+        return P("model", None) if _div(shape[0], model_size) else P(None, None)
+
+    # --- SSM (head-sharded; B/C head-shared -> replicated) ---
+    if name in ("w_z", "w_x"):
+        return P(None, "model") if _div(shape[-1], model_size) else P(None, None)
+    if name == "w_dt":
+        return P(None, "model") if _div(shape[-1], model_size) else P(None, None)
+    if name in ("w_B", "w_C", "conv_B", "conv_C", "conv_bias_B", "conv_bias_C"):
+        return P(*([None] * len(shape)))
+    if name == "conv_x":
+        return P(None, "model") if _div(shape[-1], model_size) else P(None, None)
+    if name in ("conv_bias_x", "norm_scale"):
+        return P("model") if _div(shape[0], model_size) else P(None)
+    if name in ("A_log", "D", "dt_bias"):
+        return P("model") if _div(shape[0], model_size) else P(None)
+    if name == "out_proj":
+        return P("model", None) if _div(shape[0], model_size) else P(None, None)
+
+    # --- norms, biases, scalars: replicate ---
+    return P(*([None] * len(shape)))
+
+
+def stacked_param_spec(path: str, shape, cfg, model_size: int) -> P:
+    """Params under 'units'/'enc_layers'/'dec_layers' carry a leading scan axis."""
+    inner = param_spec(path, shape[1:], cfg, model_size)
+    return P(None, *inner)
+
+
+def params_shardings(params, cfg, mesh):
+    """Full NamedSharding tree for a params pytree."""
+    model_size = mesh.shape.get("model", 1)
+
+    def one(path, leaf):
+        pstr = jax.tree_util.keystr(path)
+        stacked = any(f"'{k}'" in pstr for k in ("units", "enc_layers", "dec_layers"))
+        spec = (
+            stacked_param_spec(pstr, leaf.shape, cfg, model_size)
+            if stacked
+            else param_spec(pstr, leaf.shape, cfg, model_size)
+        )
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+# ---------------------------------------------------------------------------
+# Activations / inputs / caches
+# ---------------------------------------------------------------------------
+
+
+def dp_axes(mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def make_shard_fn(mesh, sequence_parallel: bool = False):
+    """The StackCtx ``shard(x, name)`` hook: logical activation constraints.
+
+    ``sequence_parallel=True`` shards the residual stream's SEQUENCE dim over
+    'model' (Megatron-SP): GSPMD then turns each TP block's output all-reduce into
+    reduce-scatter + all-gather around the (now seq-sharded) norm/residual region —
+    half the wire bytes, and norms compute on 1/model_size of the tokens."""
+    dp = dp_axes(mesh)
+    seq = "model" if sequence_parallel else None
+
+    def shard(x, name):
+        if name == "act_btd":
+            spec = P(dp, seq, None)
+        elif name == "act_btv":
+            spec = P(dp, None, "model")
+        elif name == "moe_tokens":  # [dp_shards, T_local, d]: dispatch per data shard
+            spec = P(dp, None, None)
+        else:
+            return x
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    return shard
+
+
+def make_moe_apply(mesh, cfg):
+    """Explicit shard_map MoE: the sort-based dispatch runs per (data x model) shard
+    with deterministic sharding — GSPMD cannot partition a data-dependent scatter
+    whose indices cross shards and silently replicates the whole block over the data
+    axis instead (measured 12-16x compute waste; EXPERIMENTS.md §Perf iteration 0).
+
+    Weight layout per shard follows params_shardings: EP slices the expert axis
+    (E % model == 0), TP-MoE slices the hidden axis. Either way each shard computes a
+    partial [t_local, d] output and one psum over 'model' combines — identical
+    collective volume to a dense Megatron FFN.
+    """
+    from repro.models import moe as moe_lib
+
+    dp = dp_axes(mesh)
+    model_size = mesh.shape.get("model", 1)
+    ep = _div(cfg.num_experts, model_size)
+    if model_size == 1:
+        return None  # single-shard: plain moe_ffn path
+
+    if ep:
+        w3 = P("model", None, None)
+        wo3 = P("model", None, None)
+    elif _div(cfg.d_ff, model_size):
+        w3 = P(None, None, "model")
+        wo3 = P(None, "model", None)
+    else:
+        return None  # unshardable experts: fall back
+
+    param_specs = {"router": P(None, None), "wi": w3, "wo": wo3}
+    # wg present for gated activations
+    if cfg.activation in ("swiglu", "geglu"):
+        param_specs["wg"] = w3
+
+    def body(moe_params, x_local):
+        e_loc = moe_params["wi"].shape[0]
+        m_idx = jax.lax.axis_index("model")
+        e_offset = m_idx * e_loc if e_loc < cfg.num_experts else 0
+        y_partial, aux = moe_lib.moe_ffn_local(moe_params, x_local, cfg, e_offset)
+        y = jax.lax.psum(y_partial, "model")
+        return y, jax.lax.pmean(aux, "model")
+
+    fn = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(param_specs, P(dp, None)),
+        out_specs=(P(dp, None), P()),
+        check_vma=False,
+    )
+    n_dp = 1
+    for a in dp:
+        n_dp *= mesh.shape[a]
+
+    def apply(moe_params, x_flat):
+        if x_flat.shape[0] % n_dp:  # batch-1 decode etc: plain (replicated) path
+            return moe_lib.moe_ffn(moe_params, x_flat, cfg)
+        return fn(moe_params, x_flat)
+
+    return apply
+
+
+def batch_shardings(batch_specs, mesh, batch_divisible: bool = True):
+    """Inputs: leading (global-batch) axis over dp when divisible, else replicated."""
+    dp = dp_axes(mesh)
+
+    def one(leaf):
+        n_dp = 1
+        for a in dp:
+            n_dp *= mesh.shape[a]
+        if leaf.shape and _div(leaf.shape[0], n_dp):
+            return NamedSharding(mesh, P(dp, *([None] * (len(leaf.shape) - 1))))
+        return NamedSharding(mesh, P(*([None] * len(leaf.shape))))
+
+    return jax.tree_util.tree_map(one, batch_specs)
+
+
+def buffer_shardings(buffer, mesh):
+    """Rehearsal buffer: leading worker axis over dp; everything else local."""
+    dp = dp_axes(mesh)
+
+    def one(leaf):
+        return NamedSharding(mesh, P(dp, *([None] * (len(leaf.shape) - 1))))
+
+    return jax.tree_util.tree_map(one, buffer)
+
+
+def cache_shardings(caches, mesh, cfg, batch: int):
+    """Decode caches. Batch over dp when divisible; KV heads / SSM heads over 'model'
+    when divisible; for batch=1 long-context cells, the KV *sequence* dim shards over
+    'data' instead (flash-decode style sequence parallelism)."""
+    dp = dp_axes(mesh)
+    n_dp = 1
+    for a in dp:
+        n_dp *= mesh.shape[a]
+    model_size = mesh.shape.get("model", 1)
+    batch_ok = _div(batch, n_dp)
+
+    def one(path, leaf):
+        pstr = jax.tree_util.keystr(path)
+        shape = leaf.shape
+        # stacked caches carry a leading unit axis [U, B, ...] (decoder stacks)
+        lead = (None,)
+        body = shape[1:]
+        b_spec = dp if batch_ok else None
+        if "'k'" in pstr or "'v'" in pstr or "cross_k" in pstr or "cross_v" in pstr:
+            # [U, B, S, KV, hd] — prefer KV heads on 'model'; when kv doesn't divide
+            # (GQA kv=8 on a 16-way axis), shard the cache SEQUENCE over 'model'
+            # instead (flash-decode style: partial attention + psum'd softmax stats);
+            # batch=1 long-context cells shard seq over 'data' too.
+            kv_spec = "model" if _div(cfg.num_kv_heads, model_size) else None
+            s_spec = None
+            if kv_spec is None and _div(body[1], model_size):
+                s_spec = "model"
+            if not batch_ok and "data" in mesh.shape and _div(
+                    body[1], mesh.shape["data"] * (model_size if s_spec else 1)):
+                s_spec = ("data", s_spec) if s_spec else "data"
+            return NamedSharding(mesh, P(None, b_spec, s_spec, kv_spec, None))
+        if "'state'" in pstr:  # [U, B, H, N, Pd]
+            d_in = cfg.ssm_expand * cfg.d_model
+            h = d_in // cfg.ssm_head_dim if cfg.ssm_head_dim else 1
+            h_spec = "model" if _div(h, model_size) else None
+            return NamedSharding(mesh, P(None, b_spec, h_spec, None, None))
+        if "conv_x" in pstr:  # [U, B, w-1, d_in]
+            d_in = cfg.ssm_expand * cfg.d_model
+            c_spec = "model" if _div(d_in, model_size) else None
+            return NamedSharding(mesh, P(None, b_spec, None, c_spec))
+        return NamedSharding(mesh, P(None, b_spec, *([None] * (len(body) - 1))))
+
+    return jax.tree_util.tree_map_with_path(one, caches)

@@ -1,0 +1,4 @@
+from repro.runtime.fault_tolerance import InjectedFailure, ResilientLoop, StragglerPolicy
+from repro.runtime.elastic import reshard_carry
+
+__all__ = ["InjectedFailure", "ResilientLoop", "StragglerPolicy", "reshard_carry"]

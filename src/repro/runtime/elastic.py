@@ -1,0 +1,49 @@
+"""Elastic scaling: resume a run on a different worker count.
+
+The contract: everything in the carry is either *replicated* (params, optimizer — a
+new worker count changes only how GSPMD lays them out) or *per-worker* (rehearsal
+buffer, in-flight representatives — redistributed by ``reshard_buffer``). The data
+pipeline re-shards trivially (cursor-deterministic streams).
+
+Shrink (N→N′<N): buffer contents are pooled per bucket and re-dealt; aggregate
+capacity drops to N′·S_max exactly as the paper's scaling law predicts.
+Grow (N→N′>N): new workers start with partially-filled buffers and fill via Alg-1.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import reshard_buffer
+from repro.core.rehearsal import BufferState
+from repro.core.strategies import TrainCarry
+
+
+def reshard_carry(carry: TrainCarry, n_new: int) -> TrainCarry:
+    """Adapt a TrainCarry saved with N workers to ``n_new`` workers."""
+    if carry.buffer is None:
+        return carry
+    new_data, new_counts = reshard_buffer(carry.buffer.data, np.asarray(carry.buffer.counts),
+                                          n_new)
+    n_old, k = np.asarray(carry.buffer.counts).shape
+    seen = np.asarray(carry.buffer.seen).sum(axis=0, keepdims=True)
+    new_seen = np.broadcast_to(seen // n_new, (n_new, k)).copy()
+    buffer = BufferState(
+        data=jax.tree_util.tree_map(jnp.asarray, new_data),
+        counts=jnp.asarray(new_counts),
+        seen=jnp.asarray(new_seen.astype(np.int32)),
+    )
+
+    def resize_reps(x):
+        x = np.asarray(x)
+        if n_new <= x.shape[0]:
+            return jnp.asarray(x[:n_new])
+        reps = np.concatenate([x] + [x[: n_new - x.shape[0]]], axis=0)
+        return jnp.asarray(reps)
+
+    reps = None if carry.reps is None else jax.tree_util.tree_map(resize_reps, carry.reps)
+    valid = None if carry.reps_valid is None else resize_reps(carry.reps_valid)
+    return TrainCarry(carry.params, carry.opt, buffer, reps, valid, carry.ef)

@@ -1,0 +1,19 @@
+"""Small shared utilities: pytree helpers, RNG plumbing, logging, timing."""
+from repro.utils.trees import (
+    tree_bytes,
+    tree_count_params,
+    tree_zeros_like,
+    tree_cast,
+    tree_global_norm,
+)
+from repro.utils.logging import get_logger, CSVWriter
+
+__all__ = [
+    "tree_bytes",
+    "tree_count_params",
+    "tree_zeros_like",
+    "tree_cast",
+    "tree_global_norm",
+    "get_logger",
+    "CSVWriter",
+]

@@ -1,0 +1,43 @@
+"""Minimal structured logging + CSV emission for benchmarks."""
+from __future__ import annotations
+
+import logging
+import sys
+import time
+from typing import Iterable
+
+
+def get_logger(name: str = "repro") -> logging.Logger:
+    logger = logging.getLogger(name)
+    if not logger.handlers:
+        handler = logging.StreamHandler(sys.stderr)
+        handler.setFormatter(
+            logging.Formatter("%(asctime)s %(name)s %(levelname)s %(message)s", "%H:%M:%S")
+        )
+        logger.addHandler(handler)
+        logger.setLevel(logging.INFO)
+        logger.propagate = False
+    return logger
+
+
+class CSVWriter:
+    """Print ``name,us_per_call,derived`` style CSV rows to stdout (benchmarks contract)."""
+
+    def __init__(self, header: Iterable[str] = ("name", "us_per_call", "derived")):
+        self._header = tuple(header)
+        print(",".join(self._header))
+
+    def row(self, *values) -> None:
+        print(",".join(str(v) for v in values), flush=True)
+
+
+class Timer:
+    """Wall-clock timer with a context-manager interface."""
+
+    def __enter__(self):
+        self.start = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        self.elapsed = time.perf_counter() - self.start
+        return False

@@ -1,0 +1,9 @@
+"""Shared pytest fixtures. NOTE: no XLA_FLAGS here — smoke tests must see 1 device;
+only the dry-run (its own subprocess) requests 512 placeholder devices."""
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

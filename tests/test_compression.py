@@ -1,0 +1,76 @@
+"""Buffer compression: int8 quant kernels vs oracle + codec roundtrip + CL impact."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import compression as C
+from repro.core import rehearsal as rb
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("r,l", [(8, 32), (13, 37), (1, 128), (64, 16)])
+def test_quantize_kernel_matches_oracle(r, l):
+    x = jax.random.normal(jax.random.PRNGKey(r * l), (r, l)) * 3
+    q, s = ops.quantize(x)
+    qr, sr = ref.quantize_rows_ref(x)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(qr))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-6)
+    deq = ops.dequantize(q, s)
+    deqr = ref.dequantize_rows_ref(qr, sr)
+    np.testing.assert_allclose(np.asarray(deq), np.asarray(deqr), rtol=1e-6)
+
+
+@settings(deadline=None, max_examples=20)
+@given(st.integers(1, 32), st.integers(1, 64), st.floats(0.01, 100.0))
+def test_quantization_error_bound(r, l, scale):
+    """Row-wise int8: |x - deq| <= row_maxabs / 127 / 2 elementwise."""
+    x = jax.random.normal(jax.random.PRNGKey(r + l), (r, l)) * scale
+    q, s = ops.quantize(x)
+    deq = ops.dequantize(q, s)
+    bound = np.asarray(jnp.max(jnp.abs(x), axis=1, keepdims=True)) / 127.0 * 0.5 + 1e-6
+    assert (np.abs(np.asarray(deq - x)) <= bound).all()
+
+
+def test_codec_roundtrip_mixed_records():
+    spec = {"embeddings": jax.ShapeDtypeStruct((8, 16), jnp.float32),
+            "tokens": jax.ShapeDtypeStruct((8,), jnp.int32),
+            "task": jax.ShapeDtypeStruct((), jnp.int32)}
+    batch = {"embeddings": jax.random.normal(jax.random.PRNGKey(1), (4, 8, 16)),
+             "tokens": jnp.arange(32, dtype=jnp.int32).reshape(4, 8),
+             "task": jnp.zeros((4,), jnp.int32)}
+    enc = C.encode_batch(batch, spec)
+    dec = C.decode_batch(enc, spec)
+    # ints exact, floats within the int8 grid
+    np.testing.assert_array_equal(np.asarray(dec["tokens"]), np.asarray(batch["tokens"]))
+    np.testing.assert_array_equal(np.asarray(dec["task"]), np.asarray(batch["task"]))
+    err = float(jnp.max(jnp.abs(dec["embeddings"] - batch["embeddings"])))
+    assert err < 0.06
+    assert C.compression_ratio(spec) > 2.0  # float-dominated record: ~4x
+
+
+def test_compressed_records_through_buffer():
+    """Compressed records insert/sample through Alg-1 unchanged (dumb store)."""
+    spec = {"frames": jax.ShapeDtypeStruct((4, 8), jnp.float32),
+            "labels": jax.ShapeDtypeStruct((4,), jnp.int32),
+            "task": jax.ShapeDtypeStruct((), jnp.int32)}
+    cspec = C.compressed_spec(spec)
+    buf = rb.init_buffer(cspec, num_buckets=2, slots=4)
+    batch = {"frames": jax.random.normal(jax.random.PRNGKey(0), (6, 4, 8)),
+             "labels": jnp.ones((6, 4), jnp.int32),
+             "task": jnp.asarray([0, 1, 0, 1, 0, 1], jnp.int32)}
+    enc = C.encode_batch(batch, spec)
+    buf = rb.local_update(buf, enc, batch["task"], jax.random.PRNGKey(1), 6)
+    assert int(buf.counts.sum()) == 6
+    stored, valid = rb.local_sample(buf, jax.random.PRNGKey(2), 3)
+    assert bool(valid.all())
+    dec = C.decode_batch(stored, spec)
+    assert dec["frames"].shape == (3, 4, 8)
+    assert dec["labels"].shape == (3, 4)
+    # every sampled record decodes to (a quantized version of) an inserted one
+    orig = np.asarray(batch["frames"]).reshape(6, -1)
+    got = np.asarray(dec["frames"]).reshape(3, -1)
+    for row in got:
+        dists = np.abs(orig - row).max(axis=1)
+        assert dists.min() < 0.06, dists

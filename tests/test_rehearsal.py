@@ -1,0 +1,151 @@
+"""Unit + property tests for the local rehearsal buffer (the paper's Alg. 1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import rehearsal as rb
+
+
+def make_items(b, seq=8):
+    return {
+        "tokens": jnp.arange(b * seq, dtype=jnp.int32).reshape(b, seq),
+        "labels": jnp.arange(b * seq, dtype=jnp.int32).reshape(b, seq),
+        "task": jnp.zeros((b,), jnp.int32),
+    }
+
+
+def spec(seq=8):
+    return {
+        "tokens": jax.ShapeDtypeStruct((seq,), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((seq,), jnp.int32),
+        "task": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def test_init_shapes():
+    buf = rb.init_buffer(spec(), num_buckets=4, slots=8)
+    assert buf.data["tokens"].shape == (4, 8, 8)
+    assert buf.counts.shape == (4,)
+    assert rb.buffer_dims(buf) == (4, 8)
+
+
+def test_update_fills_in_order():
+    buf = rb.init_buffer(spec(), 2, 4)
+    items = make_items(4)
+    labels = jnp.array([0, 0, 1, 0], jnp.int32)
+    # c == b: accept every candidate
+    buf = rb.local_update(buf, items, labels, jax.random.PRNGKey(0), num_candidates=4)
+    assert buf.counts.tolist() == [3, 1]
+    # bucket 0 got rows 0,1,3 in order
+    np.testing.assert_array_equal(np.asarray(buf.data["tokens"][0, 0]),
+                                  np.asarray(items["tokens"][0]))
+    np.testing.assert_array_equal(np.asarray(buf.data["tokens"][0, 1]),
+                                  np.asarray(items["tokens"][1]))
+    np.testing.assert_array_equal(np.asarray(buf.data["tokens"][0, 2]),
+                                  np.asarray(items["tokens"][3]))
+    np.testing.assert_array_equal(np.asarray(buf.data["tokens"][1, 0]),
+                                  np.asarray(items["tokens"][2]))
+
+
+@settings(deadline=None, max_examples=25)
+@given(
+    b=st.integers(2, 16),
+    k=st.integers(1, 5),
+    cap=st.integers(1, 8),
+    c=st.integers(1, 16),
+    seed=st.integers(0, 2**31 - 1),
+    steps=st.integers(1, 4),
+)
+def test_capacity_never_exceeded(b, k, cap, c, seed, steps):
+    """Invariant: counts <= cap and counts equals the true number of filled slots."""
+    buf = rb.init_buffer(spec(4), k, cap)
+    key = jax.random.PRNGKey(seed)
+    for s in range(steps):
+        items = {
+            "tokens": jnp.full((b, 4), s + 1, jnp.int32),
+            "labels": jnp.full((b, 4), s + 1, jnp.int32),
+            "task": jnp.zeros((b,), jnp.int32),
+        }
+        labels = jax.random.randint(jax.random.fold_in(key, s), (b,), 0, k)
+        buf = rb.local_update(buf, items, labels, jax.random.fold_in(key, 100 + s),
+                              min(c, b))
+    assert (np.asarray(buf.counts) <= cap).all()
+    assert (np.asarray(buf.counts) >= 0).all()
+    # filled slots are non-zero (we only ever insert non-zero payloads)
+    for bucket in range(k):
+        n = int(buf.counts[bucket])
+        filled = np.asarray(buf.data["tokens"][bucket, :n])
+        if n:
+            assert (filled > 0).all()
+
+
+def test_acceptance_rate_matches_c_over_b():
+    """Alg. 1: each sample enters with probability c/b."""
+    b, c, trials = 64, 16, 200
+    buf = rb.init_buffer(spec(2), 1, 100000)
+    key = jax.random.PRNGKey(42)
+    accepted = 0
+    for t in range(trials):
+        buf0 = rb.init_buffer(spec(2), 1, 100000)
+        items = {"tokens": jnp.ones((b, 2), jnp.int32), "labels": jnp.ones((b, 2), jnp.int32),
+                 "task": jnp.zeros((b,), jnp.int32)}
+        buf0 = rb.local_update(buf0, items, jnp.zeros((b,), jnp.int32),
+                               jax.random.fold_in(key, t), c)
+        accepted += int(buf0.counts[0])
+    rate = accepted / (trials * b)
+    assert abs(rate - c / b) < 0.02, rate
+
+
+def test_eviction_keeps_class_balance():
+    """Full buckets evict only within the same class: counts stay pinned at cap."""
+    buf = rb.init_buffer(spec(2), 2, 2)
+    key = jax.random.PRNGKey(0)
+    for s in range(20):
+        items = {"tokens": jnp.full((4, 2), s + 10, jnp.int32),
+                 "labels": jnp.full((4, 2), s, jnp.int32),
+                 "task": jnp.zeros((4,), jnp.int32)}
+        labels = jnp.array([0, 0, 1, 1], jnp.int32)
+        buf = rb.local_update(buf, items, labels, jax.random.fold_in(key, s), 4)
+    assert buf.counts.tolist() == [2, 2]
+
+
+def test_local_sample_uniform_over_filled():
+    buf = rb.init_buffer(spec(1), 2, 8)
+    items = {"tokens": jnp.arange(12, dtype=jnp.int32)[:, None] + 1,
+             "labels": jnp.zeros((12, 1), jnp.int32),
+             "task": jnp.zeros((12,), jnp.int32)}
+    labels = (jnp.arange(12) % 2).astype(jnp.int32)
+    buf = rb.local_update(buf, items, labels, jax.random.PRNGKey(1), 12)
+    counts = np.zeros(13)
+    for t in range(300):
+        s, valid = rb.local_sample(buf, jax.random.PRNGKey(t), 4)
+        assert bool(valid.all())
+        for v in np.asarray(s["tokens"][:, 0]):
+            counts[v] += 1
+    assert counts[0] == 0  # never sample empty slots
+    filled = counts[1:13]
+    assert filled.min() > 0.4 * filled.mean()  # roughly uniform
+
+
+def test_empty_buffer_sample_invalid():
+    buf = rb.init_buffer(spec(2), 2, 4)
+    s, valid = rb.local_sample(buf, jax.random.PRNGKey(0), 3)
+    assert not bool(valid.any())
+    aug = rb.augment_batch(make_items(2, 2), s, valid)
+    assert aug["tokens"].shape == (5, 2)
+    # invalid reps have labels masked to -1 => zero loss contribution
+    assert (np.asarray(aug["labels"][2:]) == -1).all()
+
+
+@settings(deadline=None, max_examples=20)
+@given(b=st.integers(1, 8), r=st.integers(1, 8))
+def test_augment_shapes(b, r):
+    buf = rb.init_buffer(spec(4), 2, 4)
+    items = make_items(b, 4)
+    buf = rb.local_update(buf, items, jnp.zeros((b,), jnp.int32), jax.random.PRNGKey(0), b)
+    s, valid = rb.local_sample(buf, jax.random.PRNGKey(1), r)
+    aug = rb.augment_batch(items, s, valid)
+    assert aug["tokens"].shape == (b + r, 4)
+    assert aug["task"].shape == (b + r,)

@@ -1,0 +1,82 @@
+"""Sharding rules: param PartitionSpecs by role, divisibility fallbacks, ZeRO-1."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config, get_reduced
+from repro.parallel.sharding import param_spec
+
+
+M = 16  # production model-axis size
+
+
+def spec(arch, name, shape):
+    return param_spec(f"['{name}']", shape, get_config(arch), M)
+
+
+def test_embeddings_vocab_sharded():
+    cfg = get_config("gemma-2b")
+    assert spec("gemma-2b", "embed", (cfg.vocab_size, cfg.d_model)) == P("model", None)
+
+
+def test_attention_megatron_pattern():
+    cfg = get_config("stablelm-3b")
+    h = cfg.num_heads * cfg.head_dim
+    assert spec("stablelm-3b", "wq", (cfg.d_model, h)) == P(None, "model")
+    assert spec("stablelm-3b", "wo", (h, cfg.d_model)) == P("model", None)
+
+
+def test_kv_projection_sharding_rule():
+    """KV projections shard on the packed (kv*hd) dim when divisible — GSPMD treats
+    it as layout even when it splits head boundaries (MQA included); odd dims
+    replicate."""
+    cfg = get_config("gemma-2b")  # kv=1, hd=256: 256 % 16 == 0 -> sharded (MQA split)
+    kv = cfg.num_kv_heads * cfg.head_dim
+    assert spec("gemma-2b", "wk", (cfg.d_model, kv)) == P(None, "model")
+    c2 = get_config("smollm-135m")  # 3*64 = 192 % 16 == 0 -> sharded
+    kv2 = c2.num_kv_heads * c2.head_dim
+    assert param_spec("['wk']", (c2.d_model, kv2), c2, M) == P(None, "model")
+    # a genuinely non-divisible kv width replicates (192 on a 7-way axis)
+    assert param_spec("['wk']", (c2.d_model, kv2), c2, 7) == P(None, None)
+
+
+def test_moe_ep_vs_tp():
+    phi = get_config("phi3.5-moe-42b-a6.6b")  # 16 experts % 16 == 0 -> EP
+    assert param_spec("['wi']", (16, phi.d_model, phi.d_ff), phi, M) == \
+        P("model", None, None)
+    mix = get_config("mixtral-8x7b")  # 8 experts -> TP-MoE on d_ff
+    assert param_spec("['wi']", (8, mix.d_model, mix.d_ff), mix, M) == \
+        P(None, None, "model")
+    assert param_spec("['wo']", (8, mix.d_ff, mix.d_model), mix, M) == \
+        P(None, "model", None)
+
+
+def test_ssm_head_sharding_bc_replicated():
+    cfg = get_config("mamba2-370m")
+    d_in = cfg.ssm_expand * cfg.d_model
+    assert param_spec("['w_x']", (cfg.d_model, d_in), cfg, M) == P(None, "model")
+    assert param_spec("['w_B']", (cfg.d_model, cfg.ssm_state), cfg, M) == P(None, None)
+    assert param_spec("['A_log']", (d_in // cfg.ssm_head_dim,), cfg, M) == P("model")
+
+
+def test_norms_replicated():
+    cfg = get_config("stablelm-3b")
+    assert param_spec("['scale']", (cfg.d_model,), cfg, M) == P(None)
+
+
+def test_zero1_opt_sharding_adds_data_axis():
+    import numpy as np
+    from repro.launch.steps import _opt_shardings
+    from repro.launch.mesh import make_mesh
+    from repro.optim import make_optimizer
+    from repro.configs.base import TrainConfig
+
+    # needs >= data*model devices: use a tiny 1x1 mesh logic check via spec math only
+    cfg = get_reduced("smollm-135m")
+    mesh = make_mesh((1, 1), ("data", "model"))
+    opt_init, _ = make_optimizer(TrainConfig(optimizer="adamw"))
+    params_s = {"w": jax.ShapeDtypeStruct((64, 32), jnp.float32)}
+    opt_s = jax.eval_shape(opt_init, params_s)
+    sh = _opt_shardings(opt_s, params_s, cfg, mesh, zero1=True)
+    assert "data" in str(sh.mu["w"].spec)
