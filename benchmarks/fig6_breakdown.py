@@ -1,4 +1,5 @@
-"""Paper Fig. 6: rehearsal-buffer management breakdown vs Load + Train.
+"""Paper Fig. 6: rehearsal-buffer management breakdown vs Load + Train,
+plus the sync-vs-pipelined exchange comparison (DESIGN.md §3).
 
 The paper's criterion: the background work (Populate buffer + Augment batch) must be
 smaller than Load + Train so the async design fully hides it. We measure each
@@ -14,6 +15,15 @@ the paper's Fig. 6 condition). CPU has no async streams, so the fused step costs
 ~Train + Populate; on TPU the XLA latency-hiding scheduler overlaps the rehearsal
 collectives with the backward pass (the structural evidence — independence of the
 rehearsal subgraph from the grad subgraph — is checked in tests/test_dryrun_cells.py).
+
+The sync-vs-pipelined section measures the overlap that IS observable on CPU:
+the pipelined step dispatches the train program (which consumes the pending reps
+sampled at t−1, so the loss has no data dependency on this step's exchange) and
+the issue program separately; the issue program's device execution then overlaps
+the host-side load of the next batch. The sync baseline must finish the exchange
+before the loss is available, so its per-step wall-clock serialises
+load + exchange + train. derived = pipelined/sync per-step ratio (< 1 ⇒ the
+exchange left the critical path — the paper's headline effect).
 """
 import time
 
@@ -22,7 +32,7 @@ import jax.numpy as jnp
 
 from benchmarks.common import VisionCL
 from repro.configs.base import RehearsalConfig
-from repro.core import init_carry, make_cl_step
+from repro.core import init_carry, make_cl_step, make_pipelined_halves
 from repro.core import rehearsal as rb
 from repro.core.distributed import sample_global
 
@@ -85,6 +95,60 @@ def run(writer):
                f"hideable={hideable:.3f}(<1=fully_overlappable)")
     writer.row("fig6/fused_async_step", f"{async_us:.0f}",
                f"vs_train+pop={async_us / (train_us + pop_us):.2f}")
+
+    sync_us, pipe_us = _sync_vs_pipelined(h, rcfg, params, key)
+    writer.row("fig6/sync_step", f"{sync_us:.0f}", "load+exchange+train_serialised")
+    writer.row("fig6/pipelined_step", f"{pipe_us:.0f}",
+               f"vs_sync={pipe_us / sync_us:.3f}(<1=exchange_off_critical_path)")
+
+
+def _sync_vs_pipelined(h, rcfg, params, key, n=30):
+    """Per-step wall-clock (including host-side load) of the blocking sync step vs
+    the split-dispatch pipelined step on identical configs and data."""
+    rcfg_sync = RehearsalConfig(num_buckets=rcfg.num_buckets,
+                                slots_per_bucket=rcfg.slots_per_bucket,
+                                num_representatives=rcfg.num_representatives,
+                                num_candidates=rcfg.num_candidates, mode="sync")
+
+    def load(s):
+        return {k: jnp.asarray(v) for k, v in
+                h.stream.batch(0, h.batch_size, s).items()}
+
+    # --- sync: the exchange gates the loss, every component on the critical path
+    step_sync = make_cl_step(h.loss_fn, h.opt_update, rcfg_sync,
+                             strategy="rehearsal", exchange="local",
+                             label_field="label", donate=False)
+    carry = init_carry(params, h.opt_init(params), h.item_spec, rcfg_sync,
+                       label_field="label")
+    carry, m = step_sync(carry, load(0), key)  # compile
+    jax.block_until_ready(m["loss"])
+    t0 = time.perf_counter()
+    for s in range(n):
+        batch = load(s)
+        carry, m = step_sync(carry, batch, jax.random.fold_in(key, s))
+        float(m["loss"])  # block: waits for update + exchange + train
+    sync_us = 1e6 * (time.perf_counter() - t0) / n
+
+    # --- pipelined: loss depends only on the train program; the issue program
+    # (Alg-1 + sample) executes while the host loads the next batch
+    train_half, issue_half = make_pipelined_halves(
+        h.loss_fn, h.opt_update, rcfg_sync, exchange="local", label_field="label")
+    c0 = init_carry(params, h.opt_init(params), h.item_spec, rcfg_sync,
+                    label_field="label")
+    p, opt, buf, pipe = c0.params, c0.opt, c0.buffer, c0.pipe
+    batch = load(0)
+    p, opt, m = train_half(p, opt, pipe, batch)  # compile both programs
+    buf, pipe = issue_half(buf, pipe, batch, key)
+    jax.block_until_ready((m["loss"], buf.counts))
+    batch = load(0)
+    t0 = time.perf_counter()
+    for s in range(n):
+        p, opt, m = train_half(p, opt, pipe, batch)
+        buf, pipe = issue_half(buf, pipe, batch, jax.random.fold_in(key, s))
+        batch = load(s + 1)  # host load overlaps the queued issue program
+        float(m["loss"])  # blocks on the train program only
+    pipe_us = 1e6 * (time.perf_counter() - t0) / n
+    return sync_us, pipe_us
 
 
 if __name__ == "__main__":

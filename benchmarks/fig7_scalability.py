@@ -23,6 +23,7 @@ CHILD = """
 import jax, jax.numpy as jnp, time
 from benchmarks.common import VisionCL
 from repro.configs.base import RehearsalConfig
+from repro.utils.compat import make_mesh
 from repro.core import make_cl_step, init_carry
 from repro.models.resnet import init_cnn
 
@@ -32,8 +33,7 @@ rcfg = RehearsalConfig(num_buckets=h.num_tasks, slots_per_bucket=64,
                        num_representatives=8, num_candidates=14, mode="async")
 mesh = None
 if n_dp > 1:
-    mesh = jax.make_mesh((n_dp, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,)*2)
+    mesh = make_mesh((n_dp, 1), ("data", "model"))
 params = init_cnn(jax.random.PRNGKey(0), h.ccfg)
 
 def timed(strategy, mode):

@@ -186,10 +186,19 @@ class RehearsalConfig:
     num_representatives: int = 7  # r: samples appended to each mini-batch
     num_candidates: int = 14  # c: expected candidates pushed per mini-batch
     mode: str = "async"  # async (paper's contribution) | sync (blocking baseline) | off
+    # Double-buffered software pipeline (DESIGN.md §3): train on step t-1's
+    # representatives while issuing step t+1's exchange. ``mode='async'`` implies it;
+    # setting it True forces the pipeline even with mode='sync' semantics elsewhere.
+    pipelined: bool = False
 
     @property
     def enabled(self) -> bool:
         return self.mode != "off"
+
+    @property
+    def is_pipelined(self) -> bool:
+        """One-step-stale double buffering on? (False ⇒ the blocking sync path.)"""
+        return self.enabled and (self.pipelined or self.mode == "async")
 
 
 # ---------------------------------------------------------------------------

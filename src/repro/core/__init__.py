@@ -9,30 +9,44 @@ from repro.core.rehearsal import (
     mask_invalid,
 )
 from repro.core.distributed import (
+    PendingSample,
     augment_global,
+    consume_reps,
     init_distributed_buffer,
+    issue_sample,
     make_sharded_update,
     sample_global,
     update_and_sample,
 )
-from repro.core.strategies import TrainCarry, carry_specs, init_carry, make_cl_step
+from repro.core.strategies import (
+    PipelinedRehearsalCarry,
+    TrainCarry,
+    carry_specs,
+    init_carry,
+    make_cl_step,
+    make_pipelined_halves,
+)
 from repro.core.cl_loop import CLRunResult, run_continual, topk_accuracy
 
 __all__ = [
     "BufferState",
     "CLRunResult",
+    "PendingSample",
+    "PipelinedRehearsalCarry",
     "TrainCarry",
     "augment_batch",
     "augment_global",
     "buffer_dims",
     "carry_specs",
+    "consume_reps",
     "init_buffer",
     "init_carry",
     "init_distributed_buffer",
-    "init_distributed_buffer",
+    "issue_sample",
     "local_sample",
     "local_update",
     "make_cl_step",
+    "make_pipelined_halves",
     "make_sharded_update",
     "mask_invalid",
     "run_continual",

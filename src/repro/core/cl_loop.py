@@ -51,7 +51,11 @@ def run_continual(
 ) -> CLRunResult:
     key = jax.random.PRNGKey(seed)
     params = init_params_fn(key)
-    carry = init_carry(params, init_opt_fn(params), item_spec, rcfg, label_field=label_field)
+    # ``seed`` also roots the rehearsal RNG lineage carried in the pipeline slot
+    # (PipelinedRehearsalCarry.key) — sync and pipelined runs of the same seed draw
+    # the identical sample-key sequence (DESIGN.md §3).
+    carry = init_carry(params, init_opt_fn(params), item_spec, rcfg,
+                       label_field=label_field, seed=seed)
 
     acc = np.zeros((num_tasks, num_tasks))
     runtimes: List[float] = []
@@ -65,7 +69,7 @@ def run_continual(
             k = jax.random.fold_in(key, 1000 + task)
             params = init_params_fn(k)
             carry = init_carry(params, init_opt_fn(params), item_spec, rcfg,
-                               label_field=label_field)
+                               label_field=label_field, seed=seed)
             n_steps = epochs_per_task * steps_per_epoch * (task + 1)
         else:
             n_steps = epochs_per_task * steps_per_epoch

@@ -24,13 +24,14 @@ Exchange modes (``RehearsalConfig`` via the step builder):
 from __future__ import annotations
 
 import functools
-from typing import Any, Optional, Sequence, Tuple
+from typing import Any, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core import rehearsal as rb
+from repro.utils.compat import shard_map
 
 
 def init_distributed_buffer(item_spec, num_buckets: int, slots: int, n_dp: int):
@@ -67,6 +68,49 @@ def sample_global(state: rb.BufferState, key, r: int, axis_names, exchange: str)
     return reps, recv_valid[take]
 
 
+class PendingSample(NamedTuple):
+    """An in-flight global sample: representatives drawn + exchanged at step *t*
+    that the pipelined train step will consume at step *t+1* (DESIGN.md §3).
+
+    ``reps`` are raw (unmasked) so the slot is a pure transport buffer; masking of
+    invalid records happens at consumption time (``consume_reps``)."""
+
+    reps: Any  # record pytree [r, ...]
+    valid: Any  # bool[r]
+
+
+def issue_sample(
+    state: rb.BufferState,
+    items,
+    labels,
+    key,
+    rcfg,
+    axis_names=None,
+    exchange: str = "full",
+) -> Tuple[rb.BufferState, PendingSample]:
+    """Producer half of the paper's ``RehearsalBuffer.update`` primitive, per worker:
+    push candidates from the incoming mini-batch (Alg. 1), then launch the global
+    sampling (local draw + all_to_all) of the next r representatives.
+
+    Returns ``(new_state, pending)``. The collectives inside carry no data
+    dependency on the current step's gradients, so when the caller consumes a
+    *previous* ``PendingSample`` for training (pipelined mode), XLA's latency-hiding
+    scheduler overlaps this exchange with the backward pass (DESIGN.md §3)."""
+    k_up, k_samp = jax.random.split(key)
+    new_state = rb.local_update(state, items, labels, k_up, rcfg.num_candidates)
+    reps, valid = sample_global(
+        new_state, k_samp, rcfg.num_representatives, axis_names, exchange
+    )
+    return new_state, PendingSample(reps, valid)
+
+
+def consume_reps(pending: PendingSample, label_field: str = "labels"):
+    """Consumer half: materialise a pending sample as training-ready representatives
+    (invalid records' labels masked to -1 so they contribute zero loss).
+    Returns ``(reps, valid)``."""
+    return rb.mask_invalid(pending.reps, pending.valid, label_field), pending.valid
+
+
 def update_and_sample(
     state: rb.BufferState,
     items,
@@ -77,14 +121,14 @@ def update_and_sample(
     exchange: str = "full",
     label_field: str = "labels",
 ):
-    """The paper's ``RehearsalBuffer.update`` primitive (Listing 1), per worker:
-    push candidates from the incoming mini-batch (Alg. 1), then start the global
-    sampling of the next r representatives. Returns (new_state, reps, valid)."""
+    """The fused (synchronous) form of the primitive: issue + immediately consume —
+    the exchange sits on the critical path (the paper's blocking baseline, Fig. 6).
+    Returns (new_state, reps, valid)."""
     idx = jax.lax.axis_index(axis_names) if axis_names is not None else 0
-    k_up, k_samp = jax.random.split(jax.random.fold_in(key, idx))
-    new_state = rb.local_update(state, items, labels, k_up, rcfg.num_candidates)
-    reps, valid = sample_global(new_state, k_samp, rcfg.num_representatives, axis_names, exchange)
-    reps = rb.mask_invalid(reps, valid, label_field)
+    new_state, pending = issue_sample(
+        state, items, labels, jax.random.fold_in(key, idx), rcfg, axis_names, exchange
+    )
+    reps, valid = consume_reps(pending, label_field)
     return new_state, reps, valid
 
 
@@ -127,18 +171,14 @@ def make_sharded_update(mesh, dp_axes: Tuple[str, ...], rcfg, exchange: str = "f
         # per-worker RNG stream: fold in the linearised dp index
         idx = jax.lax.axis_index(dp_axes if len(dp_axes) > 1 else dp_axes[0])
         k = jax.random.fold_in(key, idx)
-        k_up, k_samp = jax.random.split(k)
-        new_state = rb.local_update(state, items, labels, k_up, rcfg.num_candidates)
-        reps, valid = sample_global(
-            new_state, k_samp, rcfg.num_representatives, axes, exchange
-        )
-        reps = rb.mask_invalid(reps, valid, label_field)
+        new_state, pending = issue_sample(state, items, labels, k, rcfg, axes, exchange)
+        reps, valid = consume_reps(pending, label_field)
         return _unsqueeze0(new_state), _unsqueeze0(reps), valid[None]
 
     def caller(global_state, batch_items, labels, key):
         state_specs = jax.tree_util.tree_map(lambda _: P(dp_axes), global_state)
         item_specs = jax.tree_util.tree_map(lambda _: P(dp_axes), batch_items)
-        fn = jax.shard_map(
+        fn = shard_map(
             body,
             mesh=mesh,
             in_specs=(state_specs, item_specs, P(dp_axes), P()),

@@ -3,13 +3,19 @@
   * ``incremental``   — train on the new task only (lower bound: runtime; forgets).
   * ``from_scratch``  — retrain on all accumulated data (upper bound: accuracy; slow).
                         (Differs only in data selection + per-task re-init; same step.)
-  * ``rehearsal``     — the paper's contribution; ``RehearsalConfig.mode`` picks:
-      - ``async``: the augmented batch uses representatives prefetched during the
-        *previous* iteration (in-flight double buffering — the collectives for the next
-        sample carry no data dependency on this step's grads, so XLA's latency-hiding
-        scheduler overlaps them with the backward pass: the paper's Fig. 4 pipeline).
-      - ``sync``: sample → wait → augment → train, all on the critical path (the
-        blocking baseline of the paper's breakdown study, Fig. 6).
+  * ``rehearsal``     — the paper's contribution. The step is software-pipelined and
+    double-buffered (DESIGN.md §3): at step t the model trains on representatives
+    that were sampled (local draw + all_to_all exchange) at step t−1, while the
+    exchange producing step t+1's representatives is issued in the same program —
+    the collectives carry no data dependency on this step's grads, so XLA's
+    latency-hiding scheduler overlaps them with the backward pass (the paper's
+    Fig. 4 pipeline). ``RehearsalConfig`` picks the variant:
+      - ``pipelined=True`` or ``mode='async'``: the one-step-stale pipeline above.
+      - ``mode='sync'`` (and ``pipelined=False``): sample → wait → augment → train,
+        exchange on the critical path (the blocking baseline of Fig. 6).
+    Both variants run the *identical* issue half (Alg-1 push + global sample) under
+    the same carried RNG lineage, so pipelined representatives at step t are exactly
+    the sync representatives of step t−1 (the parity contract, tests/test_pipelined).
 
 Steps come in two flavours: single-device (CPU experiments) and manual-DP via
 ``shard_map`` over a data axis, with optional int8 error-feedback gradient compression.
@@ -25,17 +31,42 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core import rehearsal as rb
-from repro.core.distributed import sample_global
+from repro.core import distributed as dist
+from repro.core.distributed import PendingSample
 from repro.optim.grad_compress import compressed_psum, plain_psum
+from repro.utils.compat import shard_map
+
+
+class PipelinedRehearsalCarry(NamedTuple):
+    """The double buffer threaded through the train loop (DESIGN.md §3):
+
+    ``reps``/``valid`` — the pending representatives, sampled + exchanged at step
+    t−1, that the pipelined step consumes at step t (its stale-by-one slot);
+    ``key`` — the RNG lineage: the PRNG key the *next* step's issue half will use
+    (established one step ahead so sync and pipelined runs draw the identical key
+    sequence, and so the lineage survives checkpoint/restart inside the carry).
+    """
+
+    reps: Any  # record pytree [r, ...] ([N_dp, r, ...] in manual-DP carries)
+    valid: Any  # bool[r]
+    key: Any  # PRNG key, replicated
 
 
 class TrainCarry(NamedTuple):
     params: Any
     opt: Any
     buffer: Optional[rb.BufferState]
-    reps: Any  # in-flight representatives (async double buffer)
-    reps_valid: Any
+    pipe: Optional[PipelinedRehearsalCarry]  # in-flight sample + RNG lineage
     ef: Any  # error-feedback state (int8 compression) or None
+
+    # Back-compat views of the double buffer (pre-pipeline field names).
+    @property
+    def reps(self):
+        return None if self.pipe is None else self.pipe.reps
+
+    @property
+    def reps_valid(self):
+        return None if self.pipe is None else self.pipe.valid
 
 
 def _add_worker_axis(tree, n_dp):
@@ -43,35 +74,48 @@ def _add_worker_axis(tree, n_dp):
 
 
 def init_carry(params, opt_state, item_spec=None, rcfg=None, ef=None, n_dp: int = 1,
-               label_field: str = "label"):
+               label_field: str = "label", seed: int = 0):
     """Fresh carry. With rehearsal on, the buffer starts empty and the in-flight
     representatives start invalid — the first iteration trains un-augmented, exactly
-    the paper's bootstrap (§IV-D)."""
-    buffer = reps = valid = None
+    the paper's bootstrap (§IV-D). ``seed`` roots the sampling RNG lineage."""
+    buffer = pipe = None
     if rcfg is not None and rcfg.enabled:
         buffer = rb.init_buffer(item_spec, rcfg.num_buckets, rcfg.slots_per_bucket)
-        reps, valid = rb.local_sample(buffer, jax.random.PRNGKey(0), rcfg.num_representatives)
+        key0 = jax.random.PRNGKey(seed)
+        reps, valid = rb.local_sample(buffer, key0, rcfg.num_representatives)
         reps = rb.mask_invalid(reps, valid, label_field)
         if n_dp > 1:
             buffer = rb.BufferState(*_add_worker_axis(tuple(buffer), n_dp))
             reps = _add_worker_axis(reps, n_dp)
             valid = _add_worker_axis(valid, n_dp)
-    return TrainCarry(params, opt_state, buffer, reps, valid, ef)
+        pipe = PipelinedRehearsalCarry(reps, valid, key0)
+    return TrainCarry(params, opt_state, buffer, pipe, ef)
 
 
 def carry_specs(carry: TrainCarry, dp_axis: Optional[str]) -> TrainCarry:
     """Spec prefix-tree for shard_map / jit: params+opt replicated, buffer/reps
-    per-worker (leading worker axis sharded over the data axis)."""
+    per-worker (leading worker axis sharded over the data axis), RNG key replicated."""
     rep = P()
     per_worker = P(dp_axis) if dp_axis else P()
+    pipe = None
+    if carry.pipe is not None:
+        pipe = PipelinedRehearsalCarry(reps=per_worker, valid=per_worker, key=rep)
     return TrainCarry(
         params=rep,
         opt=rep,
         buffer=None if carry.buffer is None else per_worker,
-        reps=None if carry.reps is None else per_worker,
-        reps_valid=None if carry.reps_valid is None else per_worker,
+        pipe=pipe,
         ef=None if carry.ef is None else rep,
     )
+
+
+def _rep_checksum(reps, valid, label_field: str):
+    """Order-invariant fingerprint of the consumed representatives (parity tests)."""
+    labels = reps.get(label_field, reps.get("label")) if isinstance(reps, dict) else None
+    if labels is None:
+        labels = jax.tree_util.tree_leaves(reps)[0]
+    mask = valid.reshape(valid.shape + (1,) * (labels.ndim - valid.ndim))
+    return jnp.sum(jnp.asarray(labels, jnp.float32) * mask)
 
 
 def make_cl_step(
@@ -96,26 +140,32 @@ def make_cl_step(
     params replicated, gradients explicitly psum'd (optionally int8-compressed).
     """
     rehearse = strategy == "rehearsal" and rcfg is not None and rcfg.enabled
+    pipelined = rehearse and rcfg.is_pipelined
 
     def worker(carry: TrainCarry, batch, key, axis, n_workers):
-        buf, reps, valid = carry.buffer, carry.reps, carry.reps_valid
+        buf, pipe = carry.buffer, carry.pipe
         metrics = {}
         if rehearse:
             idx = jax.lax.axis_index(axis) if axis is not None else 0
-            k_up, k_s = jax.random.split(jax.random.fold_in(key, idx))
-            labels = batch[task_field]
-            new_buf = rb.local_update(buf, batch, labels, k_up, rcfg.num_candidates)
+            # RNG lineage: this step's issue half draws with the key established at
+            # step t-1 (carried), never with this step's own key — so sync and
+            # pipelined runs consume the identical key sequence.
+            k_issue = jax.random.fold_in(pipe.key, idx)
             ex_axis = None if exchange == "local" else axis
-            new_reps, new_valid = sample_global(
-                new_buf, k_s, rcfg.num_representatives, ex_axis, exchange
+            new_buf, pending = dist.issue_sample(
+                buf, batch, batch[task_field], k_issue, rcfg, ex_axis, exchange
             )
-            new_reps = rb.mask_invalid(new_reps, new_valid, label_field)
-            if rcfg.mode == "async":
-                train_batch = rb.augment_batch(batch, reps, valid, label_field)
-            else:  # sync: this step's freshly sampled representatives, blocking
-                train_batch = rb.augment_batch(batch, new_reps, new_valid, label_field)
-            buf, reps, valid = new_buf, new_reps, new_valid
+            if pipelined:  # consume the reps sampled at t-1 (double buffer)
+                train_reps, train_valid = dist.consume_reps(
+                    PendingSample(pipe.reps, pipe.valid), label_field
+                )
+            else:  # sync: this step's freshly issued sample, blocking
+                train_reps, train_valid = dist.consume_reps(pending, label_field)
+            train_batch = rb.augment_batch(batch, train_reps, train_valid, label_field)
+            buf = new_buf
+            pipe = PipelinedRehearsalCarry(pending.reps, pending.valid, key)
             metrics["buffer_fill"] = jnp.sum(buf.counts).astype(jnp.float32)
+            metrics["rep_checksum"] = _rep_checksum(train_reps, train_valid, label_field)
         else:
             train_batch = batch
 
@@ -135,7 +185,7 @@ def make_cl_step(
             metrics = jax.tree_util.tree_map(
                 lambda m: jax.lax.pmean(jnp.asarray(m, jnp.float32), axis), metrics
             )
-        return TrainCarry(params, opt, buf, reps, valid, ef), metrics
+        return TrainCarry(params, opt, buf, pipe, ef), metrics
 
     if mesh is None:
         @functools.partial(jax.jit, donate_argnums=(0,) if donate else ())
@@ -147,14 +197,16 @@ def make_cl_step(
     n_workers = mesh.shape[dp_axis]
 
     def body(carry, batch, key):
-        # strip the worker axis from per-worker carry fields
+        # strip the worker axis from per-worker carry fields (key stays replicated)
         def squeeze(t):
             return None if t is None else jax.tree_util.tree_map(lambda x: x[0], t)
 
         local = TrainCarry(
             carry.params, carry.opt,
             None if carry.buffer is None else rb.BufferState(*squeeze(tuple(carry.buffer))),
-            squeeze(carry.reps), squeeze(carry.reps_valid), carry.ef,
+            None if carry.pipe is None else PipelinedRehearsalCarry(
+                squeeze(carry.pipe.reps), squeeze(carry.pipe.valid), carry.pipe.key),
+            carry.ef,
         )
         new_c, metrics = worker(local, batch, key, dp_axis, n_workers)
 
@@ -164,7 +216,9 @@ def make_cl_step(
         out = TrainCarry(
             new_c.params, new_c.opt,
             None if new_c.buffer is None else rb.BufferState(*unsqueeze(tuple(new_c.buffer))),
-            unsqueeze(new_c.reps), unsqueeze(new_c.reps_valid), new_c.ef,
+            None if new_c.pipe is None else PipelinedRehearsalCarry(
+                unsqueeze(new_c.pipe.reps), unsqueeze(new_c.pipe.valid), new_c.pipe.key),
+            new_c.ef,
         )
         return out, metrics
 
@@ -173,7 +227,7 @@ def make_cl_step(
     def step(carry, batch, key):
         if "fn" not in compiled:
             cspecs = carry_specs(carry, dp_axis)
-            fn = jax.shard_map(
+            fn = shard_map(
                 body, mesh=mesh,
                 in_specs=(cspecs, P(dp_axis), P()),
                 out_specs=(cspecs, P()),
@@ -183,3 +237,48 @@ def make_cl_step(
         return compiled["fn"](carry, batch, key)
 
     return step
+
+
+def make_pipelined_halves(
+    loss_fn: Callable,
+    opt_update: Callable,
+    rcfg,
+    *,
+    exchange: str = "local",
+    label_field: str = "label",
+    task_field: str = "task",
+):
+    """The pipelined step as TWO separately-dispatched XLA programs (single device):
+
+      ``train_half(params, opt, pipe, batch)``  — augment with the carried pending
+          reps and take the optimizer step (no dependency on this step's exchange);
+      ``issue_half(buffer, pipe, batch, key)``  — Alg-1 push + the global sample
+          producing step t+1's representatives.
+
+    Dispatch order ``train_half; issue_half; <host loads next batch>; block(loss)``
+    lets the issue program's device execution overlap the host-side data loading of
+    the next step — the CPU-visible analogue of the paper's background Argobots
+    threads (benchmarks/fig6_breakdown.py measures exactly this; DESIGN.md §3).
+    The fused single-program form (``make_cl_step``) is the deployed TPU path where
+    XLA's latency-hiding scheduler provides the overlap instead.
+    """
+
+    @jax.jit
+    def train_half(params, opt, pipe, batch):
+        train_reps, train_valid = dist.consume_reps(
+            PendingSample(pipe.reps, pipe.valid), label_field
+        )
+        train_batch = rb.augment_batch(batch, train_reps, train_valid, label_field)
+        (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, train_batch)
+        params, opt, om = opt_update(grads, opt, params)
+        return params, opt, dict(aux, **om, loss=loss)
+
+    @jax.jit
+    def issue_half(buffer, pipe, batch, key):
+        k_issue = jax.random.fold_in(pipe.key, 0)  # single worker: idx 0, as fused
+        new_buf, pending = dist.issue_sample(
+            buffer, batch, batch[task_field], k_issue, rcfg, None, exchange
+        )
+        return new_buf, PipelinedRehearsalCarry(pending.reps, pending.valid, key)
+
+    return train_half, issue_half

@@ -73,6 +73,17 @@ def rehearsal_update_sample(buffer, cands, cand_rows, samp_rows,
                                        interpret=interpret)
 
 
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def rehearsal_pipelined_step(buffer, pending_reps, cands, cand_rows, samp_rows,
+                             interpret: bool | None = None):
+    """One-step-stale rehearsal step: train on ``pending_reps`` (gathered last call)
+    while issuing this call's scatter+gather. Returns (new_buffer, train_reps,
+    next_pending)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    return _ro.rehearsal_pipelined_step(buffer, pending_reps, cands, cand_rows,
+                                        samp_rows, interpret=interpret)
+
+
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
 def quantize(x, *, block_rows: int = 8, interpret: bool | None = None):
     """Row-wise int8 quantization: x [R, L] -> (q int8, scales f32 [R, 1]).

@@ -96,3 +96,24 @@ def rehearsal_update_sample(buffer, cands, cand_rows, samp_rows, *,
         interpret=interpret,
     )(cand_rows, samp_rows, buffer, cands)
     return new_buf, reps
+
+
+def rehearsal_pipelined_step(buffer, pending_reps, cands, cand_rows, samp_rows, *,
+                             interpret: bool = False):
+    """One software-pipelined rehearsal step at the kernel level (DESIGN.md §3).
+
+    The consumer trains on ``pending_reps`` — the rows gathered by the PREVIOUS
+    call, stale by one step, so they cost nothing on this step's critical path —
+    while this call's fused scatter-then-gather kernel produces the pending slot
+    for the next step. The kernel's phase-major grid order still serialises the
+    scatter before the gather *within* the issue, so the next pending reps always
+    observe this step's buffer update (the static-schedule lock).
+
+    Returns ``(new_buffer, train_reps, next_pending)`` where ``train_reps`` is
+    ``pending_reps`` passed through (shape [S, L]) and ``next_pending`` feeds the
+    next call.
+    """
+    new_buffer, next_pending = rehearsal_update_sample(
+        buffer, cands, cand_rows, samp_rows, interpret=interpret
+    )
+    return new_buffer, pending_reps, next_pending

@@ -20,6 +20,7 @@ from repro.configs import ARCHS, SHAPES, cell_applicable, get_config
 from repro.configs.base import RehearsalConfig, RunConfig, TrainConfig
 from repro.launch.mesh import make_production_mesh
 from repro.launch.steps import build_step
+from repro.utils.compat import cost_analysis, set_mesh
 
 
 def run_cell(
@@ -97,7 +98,7 @@ def _compile_cell(
         chips *= s
 
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         built = build_step(run, mesh, exchange=exchange) if shape.kind == "train" \
             else build_step(run, mesh)
         lowered = built.fn.lower(*built.args)
@@ -105,7 +106,7 @@ def _compile_cell(
         compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower
 
-    cost = compiled.cost_analysis() or {}
+    cost = cost_analysis(compiled)
     try:
         mem = compiled.memory_analysis()
     except Exception:  # backend without memory analysis

@@ -11,20 +11,18 @@ touch jax device state — the dry-run sets XLA_FLAGS before the first jax call.
 """
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType
+from repro.utils.compat import make_mesh as _compat_make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return _compat_make_mesh(shape, axes)
 
 
 def make_mesh(shape, axes):
-    """Arbitrary mesh for tests/benchmarks (Auto axis types)."""
-    return jax.make_mesh(tuple(shape), tuple(axes),
-                         axis_types=(AxisType.Auto,) * len(axes))
+    """Arbitrary mesh for tests/benchmarks (Auto axis types where supported)."""
+    return _compat_make_mesh(shape, axes)
 
 
 def describe(mesh) -> str:

@@ -17,6 +17,7 @@ from repro.launch.mesh import make_mesh
 from repro.models import StackCtx, build_model
 from repro.parallel import make_shard_fn
 from repro.utils.logging import get_logger
+from repro.utils.compat import set_mesh
 
 log = get_logger("repro.serve")
 
@@ -41,7 +42,7 @@ def main(argv=None):
                    remat="none")
     key = jax.random.PRNGKey(args.seed)
 
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         params = model.init(key, max_seq=max_len)
         prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
                                      cfg.vocab_size)

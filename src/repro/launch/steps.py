@@ -1,8 +1,10 @@
-"""pjit step builders: train (with fused async/sync rehearsal), prefill, decode.
+"""pjit step builders: train (with fused pipelined/sync rehearsal), prefill, decode.
 
-The train step is the paper's Fig. 4 pipeline compiled into ONE XLA program:
+The train step is the paper's Fig. 4 pipeline compiled into ONE XLA program
+(DESIGN.md §3; ``rehearsal.mode='async'`` or ``rehearsal.pipelined=True``
+selects it, ``mode='sync'`` the blocking baseline):
 
-  async (default, the paper's contribution):
+  pipelined (default, the paper's contribution):
       grads  <- loss(params, batch ⊕ inflight_reps)         # reps sampled at t-1
       buffer <- Alg-1(buffer, batch)                        # no dep on grads
       reps'  <- global_sample(buffer')                      # all_to_all, no dep on grads
@@ -20,6 +22,7 @@ for ``jax.jit(...).lower(...).compile()`` — the dry-run contract.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from dataclasses import dataclass
 from typing import Any, Dict, Optional, Tuple
@@ -97,6 +100,9 @@ def build_train_step(
 ) -> BuiltStep:
     cfg, shape, tcfg, rcfg = run.model, run.shape, run.train, run.rehearsal
     mode = rehearsal_mode if rehearsal_mode is not None else rcfg.mode
+    # one-step-stale double buffering (DESIGN.md §3): async mode, or forced via
+    # the ``rehearsal.pipelined`` flag (sync mode stays available for parity runs)
+    pipelined = dataclasses.replace(rcfg, mode=mode).is_pipelined
     model = build_model(cfg)
     dp = dp_axes(mesh)
     n_dp = int(np.prod([mesh.shape[a] for a in dp]))
@@ -160,10 +166,10 @@ def build_train_step(
             batch_shardings(batch_s, mesh),
             NamedSharding(mesh, P()),
         )
-    elif mode == "sync":
+    elif not pipelined:  # sync — the paper's blocking baseline (Fig. 6)
 
         def step(params, opt_state, buffer, reps, valid, batch, key):
-            # paper's blocking baseline: exchange on the critical path
+            # issue + immediately consume: exchange on the critical path
             buffer, new_reps, new_valid = sharded_update(
                 buffer, batch, batch["task"], key
             )
@@ -177,13 +183,13 @@ def build_train_step(
         args = (params_s, opt_s, buffer_s, reps_s, valid_s, batch_s, key_s)
         shardings = _rehearsal_shardings(params_s, opt_s, buffer_s, reps_s, batch_s,
                                          cfg, mesh, zero1=tcfg.zero1)
-    else:  # async — the paper's contribution
+    else:  # pipelined — the paper's contribution (one-step-stale double buffer)
 
         def step(params, opt_state, buffer, reps, valid, batch, key):
-            # consume representatives prefetched at t-1 (double buffer)
+            # consume the pending slot: representatives issued at t-1
             aug = dist.augment_global(batch, reps, valid, n_dp)
             (loss, metrics), grads = grad_fn(params, aug)
-            # update + next sample: independent of grads -> overlaps with backward
+            # issue t+1's sample: independent of grads -> overlaps with backward
             buffer, next_reps, next_valid = sharded_update(
                 buffer, batch, batch["task"], key
             )
@@ -201,6 +207,7 @@ def build_train_step(
     meta = {
         "kind": "train",
         "mode": mode if use_rehearsal else "off",
+        "pipelined": bool(use_rehearsal and pipelined),
         "n_dp": n_dp,
         "slots_per_bucket": slots,
         "augmented_global_batch": shape.global_batch + (n_dp * r if use_rehearsal else 0),

@@ -31,6 +31,7 @@ from repro.models import StackCtx, build_model
 from repro.optim import make_optimizer
 from repro.utils.logging import get_logger
 from repro.utils.trees import tree_count_params
+from repro.utils.compat import set_mesh
 
 log = get_logger("repro.train")
 
@@ -104,7 +105,7 @@ def main(argv=None):
         num_tasks=args.tasks, vocab_size=vocab_active, seq_len=args.seq_len,
         seed=args.seed))
 
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         built = build_train_step(run, mesh, exchange=args.exchange, donate=False)
         log.info("arch=%s params=%.1fM mesh=%s mode=%s slots/bucket=%d",
                  cfg.name, cfg.param_count() / 1e6, dict(mesh.shape), args.mode,

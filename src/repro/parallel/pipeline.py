@@ -18,6 +18,7 @@ from typing import Any, Callable, Sequence
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
+from repro.utils.compat import shard_map
 
 
 def stack_stage_params(stage_params: Sequence[Any]):
@@ -80,7 +81,7 @@ def pipeline_apply(
         return jax.lax.psum(outs, pipe_axis)
 
     param_specs = jax.tree_util.tree_map(lambda _: P(pipe_axis), stacked_params)
-    fn = jax.shard_map(
+    fn = shard_map(
         body, mesh=mesh,
         in_specs=(param_specs, P()),
         out_specs=P(),

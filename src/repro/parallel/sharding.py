@@ -25,6 +25,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.utils.compat import shard_map
 
 
 def _div(n: int, size: int) -> bool:
@@ -187,7 +188,7 @@ def make_moe_apply(mesh, cfg):
         y = jax.lax.psum(y_partial, "model")
         return y, jax.lax.pmean(aux, "model")
 
-    fn = jax.shard_map(
+    fn = shard_map(
         body, mesh=mesh,
         in_specs=(param_specs, P(dp, None)),
         out_specs=(P(dp, None), P()),

@@ -19,7 +19,7 @@ import numpy as np
 
 from repro.checkpoint.manager import reshard_buffer
 from repro.core.rehearsal import BufferState
-from repro.core.strategies import TrainCarry
+from repro.core.strategies import PipelinedRehearsalCarry, TrainCarry
 
 
 def reshard_carry(carry: TrainCarry, n_new: int) -> TrainCarry:
@@ -44,6 +44,11 @@ def reshard_carry(carry: TrainCarry, n_new: int) -> TrainCarry:
         reps = np.concatenate([x] + [x[: n_new - x.shape[0]]], axis=0)
         return jnp.asarray(reps)
 
-    reps = None if carry.reps is None else jax.tree_util.tree_map(resize_reps, carry.reps)
-    valid = None if carry.reps_valid is None else resize_reps(carry.reps_valid)
-    return TrainCarry(carry.params, carry.opt, buffer, reps, valid, carry.ef)
+    pipe = carry.pipe
+    if pipe is not None:
+        pipe = PipelinedRehearsalCarry(
+            jax.tree_util.tree_map(resize_reps, pipe.reps),
+            resize_reps(pipe.valid),
+            pipe.key,
+        )
+    return TrainCarry(carry.params, carry.opt, buffer, pipe, carry.ef)

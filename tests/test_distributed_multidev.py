@@ -29,10 +29,10 @@ def test_global_exchange_unbiased_sources():
     out = run_py("""
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
+        from repro.utils.compat import make_mesh, set_mesh
         from repro.core import distributed as dist
         from repro.configs.base import RehearsalConfig
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = make_mesh((4, 2), ("data", "model"))
         rcfg = RehearsalConfig(num_buckets=2, slots_per_bucket=8,
                                num_representatives=3, num_candidates=8)
         spec = {"tokens": jax.ShapeDtypeStruct((4,), jnp.int32),
@@ -46,7 +46,7 @@ def test_global_exchange_unbiased_sources():
                  "labels": jnp.ones((B, 4), jnp.int32),
                  "task": jnp.zeros((B,), jnp.int32)}
         upd = dist.make_sharded_update(mesh, ("data",), rcfg, exchange="full")
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             fn = jax.jit(upd)
             sources = set()
             for step in range(6):
@@ -66,10 +66,10 @@ def test_global_exchange_unbiased_sources():
 def test_pod_local_exchange_stays_in_pod():
     out = run_py("""
         import jax, jax.numpy as jnp, numpy as np
+        from repro.utils.compat import make_mesh, set_mesh
         from repro.core import distributed as dist
         from repro.configs.base import RehearsalConfig
-        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*3)
+        mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
         rcfg = RehearsalConfig(num_buckets=1, slots_per_bucket=8,
                                num_representatives=2, num_candidates=8)
         spec = {"tokens": jax.ShapeDtypeStruct((2,), jnp.int32),
@@ -82,7 +82,7 @@ def test_pod_local_exchange_stays_in_pod():
                  "labels": jnp.zeros((8, 2), jnp.int32),
                  "task": jnp.zeros((8,), jnp.int32)}
         upd = dist.make_sharded_update(mesh, ("pod", "data"), rcfg, exchange="pod_local")
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             fn = jax.jit(upd)
             for step in range(10):
                 gbuf, reps, valid = fn(gbuf, batch, batch["task"], jax.random.PRNGKey(step))
@@ -98,6 +98,7 @@ def test_pod_local_exchange_stays_in_pod():
 def test_dp_training_with_int8_compression_converges():
     out = run_py("""
         import jax, jax.numpy as jnp
+        from repro.utils.compat import make_mesh, set_mesh
         from repro.configs.base import RehearsalConfig, TrainConfig
         from repro.configs import resnet50_cl
         from repro.models.resnet import init_cnn, apply_cnn
@@ -105,8 +106,7 @@ def test_dp_training_with_int8_compression_converges():
         from repro.optim import make_optimizer, init_error_feedback
         from repro.core import make_cl_step, init_carry
         from repro.data import ClassIncrementalImages, ImageStreamConfig
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = make_mesh((4, 2), ("data", "model"))
         stream = ClassIncrementalImages(ImageStreamConfig(num_tasks=2, classes_per_task=4,
                                                           image_size=16))
         ccfg = resnet50_cl.reduced(num_classes=stream.num_classes)
@@ -121,7 +121,7 @@ def test_dp_training_with_int8_compression_converges():
                 "task": jax.ShapeDtypeStruct((), jnp.int32)}
         rcfg = RehearsalConfig(num_buckets=2, slots_per_bucket=16,
                                num_representatives=4, num_candidates=8, mode="async")
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             for compress in ("none", "int8"):
                 key = jax.random.PRNGKey(0)
                 params = init_cnn(key, ccfg)
@@ -151,6 +151,7 @@ def test_full_cell_compiles_on_small_mesh():
         from repro.configs import get_reduced
         from repro.configs.base import RunConfig, ShapeConfig, RehearsalConfig, TrainConfig
         from repro.launch.mesh import make_mesh
+        from repro.utils.compat import cost_analysis, set_mesh
         from repro.launch.steps import build_step
         mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
         for arch in ("mixtral-8x7b", "jamba-v0.1-52b"):
@@ -160,10 +161,10 @@ def test_full_cell_compiles_on_small_mesh():
                                                       num_representatives=3,
                                                       num_candidates=4),
                             train=TrainConfig())
-            with jax.set_mesh(mesh):
+            with set_mesh(mesh):
                 built = build_step(run, mesh)
                 compiled = built.fn.lower(*built.args).compile()
-                assert compiled.cost_analysis().get("flops", 0) > 0
+                assert cost_analysis(compiled).get("flops", 0) > 0
         print("CELL_COMPILE_OK")
     """)
     assert "CELL_COMPILE_OK" in out
@@ -173,6 +174,7 @@ def test_pipeline_parallel_matches_sequential():
     out = run_py("""
         import jax, jax.numpy as jnp
         from repro.launch.mesh import make_mesh
+        from repro.utils.compat import set_mesh
         from repro.parallel.pipeline import pipeline_apply, stack_stage_params
         mesh = make_mesh((4,), ("pipe",))
         key = jax.random.PRNGKey(0)
@@ -181,7 +183,7 @@ def test_pipeline_parallel_matches_sequential():
         stacked = stack_stage_params(stages)
         x = jax.random.normal(jax.random.fold_in(key, 99), (8, 16))
         def stage_fn(p, micro): return jnp.tanh(micro @ p["w"])
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             got = pipeline_apply(mesh, stage_fn, stacked, x, n_microbatches=4)
         want = x
         for st in stages: want = jnp.tanh(want @ st["w"])

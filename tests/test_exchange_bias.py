@@ -20,12 +20,12 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 CODE = """
 import jax, jax.numpy as jnp, numpy as np
+from repro.utils.compat import make_mesh, set_mesh
 from repro.configs.base import RehearsalConfig
 from repro.core import distributed as dist
 
 N_DP = 4
-mesh = jax.make_mesh((N_DP, 1), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = make_mesh((N_DP, 1), ("data", "model"))
 rcfg = RehearsalConfig(num_buckets=1, slots_per_bucket=16,
                        num_representatives=6, num_candidates=8)
 spec = {"x": jax.ShapeDtypeStruct((4,), jnp.float32),
@@ -38,7 +38,7 @@ def batch():
     return {"x": jnp.ones((B, 4)), "labels": cls, "task": jnp.zeros((B,), jnp.int32)}
 
 coverage = {}
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     for exchange in ("local", "full"):
         gbuf = dist.init_distributed_buffer(spec, 1, 16, N_DP)
         upd = jax.jit(dist.make_sharded_update(mesh, ("data",), rcfg,

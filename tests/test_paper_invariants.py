@@ -79,21 +79,22 @@ def test_exchange_is_permutation():
     import jax, jax.numpy as jnp, numpy as np
     from repro.core import rehearsal as rb
     from repro.core.distributed import _exchange
+    from repro.utils.compat import make_mesh, set_mesh, shard_map
     from jax.sharding import PartitionSpec as P
     N = 8
-    mesh = jax.make_mesh((N,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((N,), ("data",))
 
     def body(items, valid):
         recv, rvalid = _exchange(items, valid, None, "data")
         return recv, rvalid
 
-    fn = jax.shard_map(body, mesh=mesh,
-                       in_specs=(P("data"), P("data")), out_specs=(P("data"), P("data")),
-                       check_vma=False)
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=(P("data"), P("data")), out_specs=(P("data"), P("data")),
+                   check_vma=False)
     # worker w sends payloads w*100 + [0..N)
     sent = (jnp.arange(N)[:, None] * 100 + jnp.arange(N)[None, :]).reshape(N * N)
     valid = jnp.ones((N * N,), bool)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         recv, rvalid = fn(sent.astype(jnp.float32), valid)
     assert sorted(np.asarray(recv).tolist()) == sorted(np.asarray(sent).tolist())
     assert bool(np.asarray(rvalid).all())

@@ -1,0 +1,238 @@
+"""The pipelined (double-buffered) rehearsal path: parity + convergence (DESIGN.md §3).
+
+Parity contract: sync and pipelined steps run the *identical* issue half (Alg-1 push
++ global sample) under the same carried RNG lineage; they differ only in which pending
+sample the train half consumes. Therefore the representatives a pipelined step trains
+on at step t must be EXACTLY the representatives the sync step trained on at step t−1
+— bit-for-bit, not statistically.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import RehearsalConfig
+from repro.core import (
+    PendingSample,
+    PipelinedRehearsalCarry,
+    consume_reps,
+    init_carry,
+    issue_sample,
+    make_cl_step,
+    make_pipelined_halves,
+)
+from repro.core import rehearsal as rb
+from repro.data import ClassIncrementalImages, ImageStreamConfig
+from repro.kernels import ops
+
+
+def _spec(d=8):
+    return {
+        "x": jax.ShapeDtypeStruct((d,), jnp.float32),
+        "label": jax.ShapeDtypeStruct((), jnp.int32),
+        "task": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def _linear_loss(params, batch):
+    logits = batch["x"] @ params["w"]
+    onehot = jax.nn.one_hot(jnp.maximum(batch["label"], 0), logits.shape[-1])
+    mask = (batch["label"] >= 0).astype(jnp.float32)
+    ce = -jnp.sum(jax.nn.log_softmax(logits) * onehot, axis=-1)
+    return jnp.sum(ce * mask) / jnp.maximum(mask.sum(), 1.0), {}
+
+
+def _sgd(grads, opt, params):
+    return jax.tree_util.tree_map(lambda p, g: p - 0.1 * g, params, grads), opt, {}
+
+
+def _batch(step, b=16, d=8, n_classes=4):
+    r = np.random.default_rng(step)
+    lab = r.integers(0, n_classes, b).astype(np.int32)
+    return {
+        "x": jnp.asarray(r.normal(size=(b, d)).astype(np.float32)),
+        "label": jnp.asarray(lab),
+        "task": jnp.asarray(lab % 2),
+    }
+
+
+def _run(rcfg, steps=10, seed=3):
+    """Run the CL step, recording the per-step consumed-representative checksum AND
+    the raw pending slot after every step."""
+    params = {"w": jnp.zeros((8, 4))}
+    step = make_cl_step(_linear_loss, _sgd, rcfg, strategy="rehearsal",
+                        exchange="local", label_field="label", donate=False)
+    carry = init_carry(params, None, _spec(), rcfg, label_field="label", seed=seed)
+    key = jax.random.PRNGKey(0)
+    checksums, pendings = [], []
+    for s in range(steps):
+        carry, m = step(carry, _batch(s), jax.random.fold_in(key, s))
+        checksums.append(float(m["rep_checksum"]))
+        pendings.append(jax.tree_util.tree_map(np.asarray, carry.pipe.reps))
+    return checksums, pendings, carry
+
+
+SYNC = RehearsalConfig(num_buckets=2, slots_per_bucket=8, num_representatives=3,
+                       num_candidates=6, mode="sync")
+PIPE = RehearsalConfig(num_buckets=2, slots_per_bucket=8, num_representatives=3,
+                       num_candidates=6, mode="sync", pipelined=True)
+
+
+def test_config_flag_resolution():
+    assert not SYNC.is_pipelined
+    assert PIPE.is_pipelined
+    assert RehearsalConfig(mode="async").is_pipelined  # async implies the pipeline
+    assert not RehearsalConfig(mode="off", pipelined=True).is_pipelined
+
+
+def test_pipelined_reps_are_sync_reps_shifted_one_step():
+    """The acceptance contract: pipelined-mode representatives at step t equal
+    sync-mode representatives at step t−1 under the same RNG lineage."""
+    sync_ck, sync_pend, _ = _run(SYNC)
+    pipe_ck, pipe_pend, _ = _run(PIPE)
+
+    # consumed reps: pipelined(t) == sync(t-1), exactly
+    assert pipe_ck[1:] == sync_ck[:-1]
+    # warm-up: the pipelined step 0 trains un-augmented (invalid reps, zero checksum)
+    assert pipe_ck[0] == 0.0
+    # the sequences are non-trivial (same-step checksums differ somewhere)
+    assert pipe_ck != sync_ck
+
+    # the pending slots themselves (the issue halves' outputs) are identical —
+    # the two modes run one and the same producer
+    for a, b in zip(sync_pend, pipe_pend):
+        for la, lb in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)):
+            np.testing.assert_array_equal(la, lb)
+
+
+def test_pipelined_buffer_state_matches_sync():
+    """Alg-1 updates are consumption-agnostic: both modes end with identical buffers."""
+    _, _, c_sync = _run(SYNC)
+    _, _, c_pipe = _run(PIPE)
+    for a, b in zip(jax.tree_util.tree_leaves(tuple(c_sync.buffer)),
+                    jax.tree_util.tree_leaves(tuple(c_pipe.buffer))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_issue_consume_composition_equals_fused():
+    """issue_sample ∘ consume_reps == the fused update_and_sample primitive."""
+    from repro.core import update_and_sample
+
+    rcfg = SYNC
+    buf = rb.init_buffer(_spec(), rcfg.num_buckets, rcfg.slots_per_bucket)
+    batch = _batch(0)
+    key = jax.random.PRNGKey(42)
+
+    s1, pending = issue_sample(buf, batch, batch["task"],
+                               jax.random.fold_in(key, 0), rcfg)
+    r1, v1 = consume_reps(pending, "label")
+    s2, r2, v2 = update_and_sample(buf, batch, batch["task"], key, rcfg,
+                                   label_field="label")
+    for a, b in zip(jax.tree_util.tree_leaves((tuple(s1), r1, v1)),
+                    jax.tree_util.tree_leaves((tuple(s2), r2, v2))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_split_halves_match_fused_pipelined_step():
+    """make_pipelined_halves (two dispatches, benchmark form) reproduces the fused
+    pipelined step's parameter trajectory bit-for-bit."""
+    params = {"w": jnp.zeros((8, 4))}
+    step = make_cl_step(_linear_loss, _sgd, PIPE, strategy="rehearsal",
+                        exchange="local", label_field="label", donate=False)
+    carry = init_carry(params, None, _spec(), PIPE, label_field="label", seed=3)
+    train_half, issue_half = make_pipelined_halves(
+        _linear_loss, _sgd, PIPE, exchange="local", label_field="label")
+    p2, opt2 = params, None
+    buf2, pipe2 = carry.buffer, carry.pipe
+
+    key = jax.random.PRNGKey(0)
+    for s in range(6):
+        k = jax.random.fold_in(key, s)
+        batch = _batch(s)
+        carry, _ = step(carry, batch, k)
+        p2, opt2, _ = train_half(p2, opt2, pipe2, batch)
+        buf2, pipe2 = issue_half(buf2, pipe2, batch, k)
+
+    np.testing.assert_array_equal(np.asarray(carry.params["w"]), np.asarray(p2["w"]))
+    for a, b in zip(jax.tree_util.tree_leaves(tuple(carry.buffer)),
+                    jax.tree_util.tree_leaves(tuple(buf2))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_kernel_pipelined_step_one_step_stale():
+    """Pallas path: rehearsal_pipelined_step trains on the PREVIOUS call's gather
+    while its own gather observes this call's scatter (interpret mode)."""
+    r, l = 16, 8
+    buf = jnp.zeros((r, l), jnp.float32)
+    pending = jnp.full((2, l), -1.0)  # warm-up slot
+    for t in range(3):
+        cands = jnp.full((4, l), float(t + 1))
+        cand_rows = jnp.arange(4, dtype=jnp.int32) + 4 * t
+        samp_rows = jnp.asarray([4 * t, 4 * t + 1], jnp.int32)
+        buf, train_reps, pending = ops.rehearsal_pipelined_step(
+            buf, pending, cands, cand_rows, samp_rows)
+        # consumed reps are one step stale; the new pending sees this step's scatter
+        expect = -1.0 if t == 0 else float(t)
+        assert float(train_reps[0, 0]) == expect
+        assert float(pending[0, 0]) == float(t + 1)
+
+
+def test_checkpoint_lineage_in_carry():
+    """The RNG lineage lives in the carry, so a restored run continues the exact
+    sample sequence (restart-bit-exactness for the pipelined path)."""
+    sync_ck, _, _ = _run(PIPE, steps=10)
+
+    # re-run, snapshotting at step 5 and restarting from the snapshot
+    params = {"w": jnp.zeros((8, 4))}
+    step = make_cl_step(_linear_loss, _sgd, PIPE, strategy="rehearsal",
+                        exchange="local", label_field="label", donate=False)
+    carry = init_carry(params, None, _spec(), PIPE, label_field="label", seed=3)
+    key = jax.random.PRNGKey(0)
+    cks = []
+    for s in range(5):
+        carry, m = step(carry, _batch(s), jax.random.fold_in(key, s))
+        cks.append(float(m["rep_checksum"]))
+    snap = jax.tree_util.tree_map(np.asarray, carry)
+    restored = jax.tree_util.tree_map(jnp.asarray, snap)
+    for s in range(5, 10):
+        restored, m = step(restored, _batch(s), jax.random.fold_in(key, s))
+        cks.append(float(m["rep_checksum"]))
+    assert cks == sync_ck
+
+
+@pytest.mark.parametrize("pipelined", [False, True])
+def test_convergence_smoke_synthetic_cl(pipelined):
+    """Pipelined rehearsal learns the synthetic class-incremental task: loss falls
+    well below its start within one task (smoke, CPU)."""
+    stream = ClassIncrementalImages(ImageStreamConfig(
+        num_tasks=2, classes_per_task=3, image_size=8, noise=0.3))
+    n_cls = stream.num_classes
+    d = 8 * 8 * 3
+
+    def loss_fn(params, batch):
+        x = batch["images"].reshape((batch["images"].shape[0], -1))
+        logits = x @ params["w"] + params["b"]
+        onehot = jax.nn.one_hot(jnp.maximum(batch["label"], 0), n_cls)
+        mask = (batch["label"] >= 0).astype(jnp.float32)
+        ce = -jnp.sum(jax.nn.log_softmax(logits) * onehot, axis=-1)
+        return jnp.sum(ce * mask) / jnp.maximum(mask.sum(), 1.0), {}
+
+    rcfg = RehearsalConfig(num_buckets=2, slots_per_bucket=32,
+                           num_representatives=6, num_candidates=12,
+                           mode="sync", pipelined=pipelined)
+    spec = {"images": jax.ShapeDtypeStruct((8, 8, 3), jnp.float32),
+            "label": jax.ShapeDtypeStruct((), jnp.int32),
+            "task": jax.ShapeDtypeStruct((), jnp.int32)}
+    params = {"w": jnp.zeros((d, n_cls)), "b": jnp.zeros((n_cls,))}
+    step = make_cl_step(loss_fn, _sgd, rcfg, strategy="rehearsal",
+                        label_field="label", donate=False)
+    carry = init_carry(params, None, spec, rcfg, label_field="label")
+    key = jax.random.PRNGKey(0)
+    first = last = None
+    for s in range(40):
+        batch = {k: jnp.asarray(v) for k, v in stream.batch(0, 24, s).items()}
+        carry, m = step(carry, batch, jax.random.fold_in(key, s))
+        if s == 0:
+            first = float(m["loss"])
+        last = float(m["loss"])
+    assert last < first * 0.5, (pipelined, first, last)
