@@ -51,11 +51,15 @@ class VisionCL:
                                    jnp.asarray(ev["label"]), k=1))
 
     def run(self, strategy: str, mode: str = "async", slots: int = 64,
-            r: int = 8, exchange: str = "full"):
+            r: int = 8, exchange: str = "full", policy: str = "reservoir",
+            tiering: str = "off", hot_slots: int = 0, cold_slots: int = 0):
+        # label_field/task_field plumbed once through the config, not per call site
         rcfg = RehearsalConfig(num_buckets=self.num_tasks, slots_per_bucket=slots,
-                               num_representatives=r, num_candidates=14, mode=mode)
+                               num_representatives=r, num_candidates=14, mode=mode,
+                               policy=policy, tiering=tiering, hot_slots=hot_slots,
+                               cold_slots=cold_slots, label_field="label")
         step = make_cl_step(self.loss_fn, self.opt_update, rcfg, strategy=strategy,
-                            exchange=exchange, label_field="label")
+                            exchange=exchange)
         t0 = time.perf_counter()
         res = run_continual(
             strategy=strategy, num_tasks=self.num_tasks,
@@ -64,7 +68,7 @@ class VisionCL:
             cumulative_batch_fn=self.stream.cumulative_batch, eval_fn=self.eval_fn,
             init_params_fn=lambda k: init_cnn(k, self.ccfg),
             init_opt_fn=self.opt_init, step_fn=step, item_spec=self.item_spec,
-            rcfg=rcfg, batch_size=self.batch_size, label_field="label")
+            rcfg=rcfg, batch_size=self.batch_size)
         res.wall = time.perf_counter() - t0
         total_steps = sum(
             self.epochs_per_task * self.steps_per_epoch * ((t + 1) if

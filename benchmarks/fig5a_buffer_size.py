@@ -1,23 +1,149 @@
-"""Paper Fig. 5a: final accuracy vs rehearsal buffer size |B|.
+"""Paper Fig. 5a: final accuracy vs rehearsal buffer size |B| — extended with the
+policy × tiering sweep of the buffer subsystem (DESIGN.md §6).
 
 The paper sweeps |B| in {2.5, 5, 10, 20, 30}% of ImageNet and sees monotonically
-increasing accuracy (55.83% -> 80.55% top-5). Here: slots/bucket sweep on the
-synthetic class-incremental stream; derived column = final accuracy (Eq. 1).
+increasing accuracy (55.83% -> 80.55% top-5). Here, on the synthetic
+class-incremental stream:
+
+  * slots sweep        — the paper's capacity curve (reservoir, device-only);
+  * policy sweep       — reservoir | fifo | class_balanced | grasp at fixed slots;
+  * tiering sweep      — device-only vs tiered at 2x/4x the HBM-equivalent
+    capacity (hot slots fixed, cold tier adds 1x/3x more as int8), measuring the
+    wall-clock cost of the cold path (acceptance gate: tiered/device <= 1.15x).
+
+Emits a machine-readable ``BENCH_fig5a.json`` next to the CSV rows so CI can
+archive the perf/accuracy trajectory. ``--smoke`` (or ``run(writer, smoke=True)``)
+shrinks the stream for the tier-1 workflow.
 """
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
 from benchmarks.common import VisionCL
 
+POLICIES = ("reservoir", "fifo", "class_balanced", "grasp")
 
-def run(writer):
-    h = VisionCL()
+
+def _steady_runner(h, *, tiering="off", hot=0, cold=0, slots=16, warmup=3):
+    """Build + warm one fused async step; return a closure measuring steady-state
+    per-step wall-clock (compile excluded — the tiering acceptance gate compares
+    the *per-step* cost of the cold path, and the caller interleaves paired
+    segments so machine-load noise hits both variants alike)."""
+    from repro.configs.base import RehearsalConfig
+    from repro.core import init_carry, make_cl_step
+    from repro.models.resnet import init_cnn
+
+    key = jax.random.PRNGKey(0)
+    rcfg = RehearsalConfig(num_buckets=h.num_tasks, slots_per_bucket=slots,
+                           num_representatives=8, num_candidates=14, mode="async",
+                           tiering=tiering, hot_slots=hot, cold_slots=cold,
+                           label_field="label")
+    step = make_cl_step(h.loss_fn, h.opt_update, rcfg, strategy="rehearsal",
+                        donate=False)
+    params = init_cnn(key, h.ccfg)
+    carry = init_carry(params, h.opt_init(params), h.item_spec, rcfg)
+    batch = {k: jnp.asarray(v) for k, v in h.stream.batch(0, h.batch_size, 0).items()}
+    state = {"carry": carry, "s": 0}
+    for _ in range(warmup):
+        state["carry"], m = step(state["carry"], batch,
+                                 jax.random.fold_in(key, state["s"]))
+        state["s"] += 1
+    jax.block_until_ready(m["loss"])
+
+    def measure(n=12):
+        t0 = time.perf_counter()
+        for _ in range(n):
+            state["carry"], m = step(state["carry"], batch,
+                                     jax.random.fold_in(key, state["s"]))
+            state["s"] += 1
+        jax.block_until_ready(m["loss"])
+        return 1e6 * (time.perf_counter() - t0) / n
+
+    return measure
+
+
+def run(writer, smoke: bool = False, json_path: str = "BENCH_fig5a.json"):
+    h = VisionCL(epochs_per_task=1, steps_per_epoch=8) if smoke else VisionCL()
     total = h.num_tasks * h.classes_per_task * 256  # nominal stream size
-    for slots in (1, 4, 16, 64):
+    records = []
+
+    def record(name, res, derived="", **extra):
+        row = {"name": name, "us_per_step": round(res.us_per_step, 1),
+               "final_accuracy": round(res.final_accuracy, 4), **extra}
+        records.append(row)
+        writer.row(name, f"{res.us_per_step:.0f}", derived or f"acc={res.final_accuracy:.3f}")
+        return row
+
+    # --- capacity sweep (the paper's figure) ---
+    res16 = None  # reservoir@16 reappears in the policy sweep + tier baseline
+    for slots in ((4, 16) if smoke else (1, 4, 16, 64)):
         res = h.run("rehearsal", mode="async", slots=slots)
+        if slots == 16:
+            res16 = res
         frac = 100.0 * slots * h.num_tasks / total
-        writer.row(f"fig5a/buffer_{slots}slots(~{frac:.1f}%)",
-                   f"{res.us_per_step:.0f}", f"acc={res.final_accuracy:.3f}")
+        record(f"fig5a/buffer_{slots}slots(~{frac:.1f}%)", res,
+               slots=slots, policy="reservoir", tiering="off")
+
+    # --- policy sweep at fixed capacity ---
+    pol_slots = 16
+    for policy in POLICIES:
+        res = res16 if policy == "reservoir" else h.run(
+            "rehearsal", mode="async", slots=pol_slots, policy=policy)
+        record(f"fig5a/policy_{policy}", res, slots=pol_slots, policy=policy,
+               tiering="off")
+
+    # --- tiering sweep: device-only vs 2x/4x HBM-equivalent capacity.
+    # Accuracy comes from the end-to-end CL run; the wall-clock comparison is
+    # steady-state (compile excluded): the acceptance gate is per-step cost of the
+    # int8 cold path, not one-off tracing time.
+    hot = 16
+    gate_limit = 1.15  # ISSUE acceptance: tiered per-step <= 1.15x device-only
+    base_measure = _steady_runner(h, slots=hot)
+    base_us = base_measure()
+    record("fig5a/tier_device_only", res16, slots=hot, policy="reservoir",
+           tiering="off", steady_us_per_step=round(base_us, 1))
+    violations = []
+    for mult, cold in ((2, hot), (4, 3 * hot)):
+        res = h.run("rehearsal", mode="async", slots=hot, tiering="host",
+                    hot_slots=hot, cold_slots=cold)
+        tier_measure = _steady_runner(h, tiering="host", hot=hot, cold=cold,
+                                      slots=hot)
+        # paired interleaved segments: best-of-3 ratio is robust to machine load
+        pairs = [(base_measure(), tier_measure()) for _ in range(3)]
+        ratio = min(t / max(b, 1e-9) for b, t in pairs)
+        tier_us = min(t for _, t in pairs)
+        record(f"fig5a/tier_host_{mult}x", res,
+               derived=f"acc={res.final_accuracy:.3f};vs_device={ratio:.3f}",
+               slots=hot + cold, hot_slots=hot, cold_slots=cold,
+               policy="reservoir", tiering="host",
+               steady_us_per_step=round(tier_us, 1),
+               us_vs_device_only=round(ratio, 4))
+        if ratio > gate_limit:
+            violations.append((f"tier_host_{mult}x", round(ratio, 3)))
+
+    payload = {"bench": "fig5a", "smoke": smoke, "rows": records,
+               "device_only_steady_us_per_step": round(base_us, 1),
+               "tiering_gate_limit": gate_limit,
+               "tiering_gate_violations": violations}
+    with open(json_path, "w") as f:
+        json.dump(payload, f, indent=2)
+    writer.row("fig5a/json", "0", os.path.abspath(json_path))
+    if smoke and violations:  # enforced in CI; full runs just record the ratio
+        raise RuntimeError(
+            f"tiered per-step wall-clock exceeded {gate_limit}x device-only: "
+            f"{violations}")
 
 
 if __name__ == "__main__":
+    import argparse
+
     from repro.utils.logging import CSVWriter
 
-    run(CSVWriter())
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--json", default="BENCH_fig5a.json")
+    args = ap.parse_args()
+    run(CSVWriter(), smoke=args.smoke, json_path=args.json)

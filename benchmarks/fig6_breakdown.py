@@ -25,6 +25,8 @@ before the loss is available, so its per-step wall-clock serialises
 load + exchange + train. derived = pipelined/sync per-step ratio (< 1 ⇒ the
 exchange left the critical path — the paper's headline effect).
 """
+import json
+import os
 import time
 
 import jax
@@ -46,7 +48,8 @@ def _time(fn, *args, n=20):
     return 1e6 * (time.perf_counter() - t0) / n
 
 
-def run(writer):
+def run(writer, smoke: bool = False, json_path: str = "BENCH_fig6.json"):
+    n_iters = 8 if smoke else 20
     h = VisionCL()
     rcfg = RehearsalConfig(num_buckets=h.num_tasks, slots_per_bucket=64,
                            num_representatives=8, num_candidates=14, mode="async")
@@ -58,9 +61,9 @@ def run(writer):
 
     # Load
     t0 = time.perf_counter()
-    for s in range(20):
+    for s in range(n_iters):
         h.stream.batch(0, h.batch_size, s)
-    load_us = 1e6 * (time.perf_counter() - t0) / 20
+    load_us = 1e6 * (time.perf_counter() - t0) / n_iters
     batch = {k: jnp.asarray(v) for k, v in h.stream.batch(0, h.batch_size, 0).items()}
 
     # Train only (no rehearsal): augmented-size batch to match the paper's b+r cost
@@ -70,7 +73,7 @@ def run(writer):
                             label_field="label", donate=False)
     carry_off = init_carry(params, h.opt_init(params))
     train_us = _time(lambda c, b, k: step_off(c, b, k)[1]["loss"],
-                     carry_off, aug_batch, key)
+                     carry_off, aug_batch, key, n=n_iters)
 
     # Populate + Sample (the paper's background work), as its own jitted fn
     @jax.jit
@@ -81,12 +84,13 @@ def run(writer):
         return buf, reps, valid
 
     pop_us = _time(lambda b, bt, k: populate_sample(b, bt, bt["task"], k)[0].counts,
-                   carry.buffer, batch, key)
+                   carry.buffer, batch, key, n=n_iters)
 
     # Fused async step (deployed form)
     step_async = make_cl_step(h.loss_fn, h.opt_update, rcfg, strategy="rehearsal",
                               label_field="label", donate=False)
-    async_us = _time(lambda c, b, k: step_async(c, b, k)[1]["loss"], carry, batch, key)
+    async_us = _time(lambda c, b, k: step_async(c, b, k)[1]["loss"], carry, batch, key,
+                     n=n_iters)
 
     hideable = pop_us / (load_us + train_us)
     writer.row("fig6/load", f"{load_us:.0f}", "")
@@ -96,10 +100,21 @@ def run(writer):
     writer.row("fig6/fused_async_step", f"{async_us:.0f}",
                f"vs_train+pop={async_us / (train_us + pop_us):.2f}")
 
-    sync_us, pipe_us = _sync_vs_pipelined(h, rcfg, params, key)
+    sync_us, pipe_us = _sync_vs_pipelined(h, rcfg, params, key,
+                                          n=10 if smoke else 30)
     writer.row("fig6/sync_step", f"{sync_us:.0f}", "load+exchange+train_serialised")
     writer.row("fig6/pipelined_step", f"{pipe_us:.0f}",
                f"vs_sync={pipe_us / sync_us:.3f}(<1=exchange_off_critical_path)")
+
+    payload = {"bench": "fig6", "smoke": smoke, "rows": {
+        "load_us": round(load_us, 1), "train_us": round(train_us, 1),
+        "populate_sample_us": round(pop_us, 1), "hideable": round(hideable, 4),
+        "fused_async_us": round(async_us, 1), "sync_us": round(sync_us, 1),
+        "pipelined_us": round(pipe_us, 1),
+        "pipelined_vs_sync": round(pipe_us / sync_us, 4)}}
+    with open(json_path, "w") as f:
+        json.dump(payload, f, indent=2)
+    writer.row("fig6/json", "0", os.path.abspath(json_path))
 
 
 def _sync_vs_pipelined(h, rcfg, params, key, n=30):
@@ -152,6 +167,12 @@ def _sync_vs_pipelined(h, rcfg, params, key, n=30):
 
 
 if __name__ == "__main__":
+    import argparse
+
     from repro.utils.logging import CSVWriter
 
-    run(CSVWriter())
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--json", default="BENCH_fig6.json")
+    args = ap.parse_args()
+    run(CSVWriter(), smoke=args.smoke, json_path=args.json)

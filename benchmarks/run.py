@@ -17,6 +17,8 @@ from repro.utils.logging import CSVWriter
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="", help="comma list: fig5a,fig5b,fig6,fig7,roofline")
+    ap.add_argument("--smoke", action="store_true",
+                    help="shrunk fig5a/fig6 runs for CI (still emit BENCH_*.json)")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -31,12 +33,16 @@ def main() -> None:
         "roofline": roofline_table.run,
     }
     writer = CSVWriter()
+    smoke_aware = {"fig5a", "fig6"}  # emit BENCH_*.json, accept --smoke
     failures = 0
     for name, fn in benches.items():
         if only and name not in only:
             continue
         try:
-            fn(writer)
+            if name in smoke_aware:
+                fn(writer, smoke=args.smoke)
+            else:
+                fn(writer)
         except Exception:
             failures += 1
             print(f"{name},nan,FAILED", flush=True)

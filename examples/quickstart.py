@@ -28,8 +28,13 @@ def main():
     ctx = StackCtx(cfg=cfg, compute_dtype=jnp.float32, remat="none")
     stream = TaskTokenStream(TokenStreamConfig(num_tasks=2, vocab_size=256, seq_len=32))
 
+    # the buffer subsystem is configured here: `policy` picks the
+    # selection/eviction/sampling rule (reservoir | fifo | class_balanced |
+    # grasp), `tiering='host'` would spill an int8 cold tier beyond HBM, and
+    # label_field/task_field name the record fields once, end to end.
     rcfg = RehearsalConfig(num_buckets=2, slots_per_bucket=32,
-                           num_representatives=4, num_candidates=8, mode="async")
+                           num_representatives=4, num_candidates=8, mode="async",
+                           policy="reservoir", label_field="labels")
     opt_init, opt_update = make_optimizer(
         TrainConfig(optimizer="adamw", peak_lr=3e-3, warmup_steps=10,
                     linear_scaling=False))
@@ -39,16 +44,14 @@ def main():
         return loss, {}
 
     # the paper's `update` primitive lives inside this jitted step
-    step = make_cl_step(loss_fn, opt_update, rcfg, strategy="rehearsal",
-                        label_field="labels")
+    step = make_cl_step(loss_fn, opt_update, rcfg, strategy="rehearsal")
 
     key = jax.random.PRNGKey(0)
     params = model.init(key, max_seq=32)
     item_spec = {"tokens": jax.ShapeDtypeStruct((32,), jnp.int32),
                  "labels": jax.ShapeDtypeStruct((32,), jnp.int32),
                  "task": jax.ShapeDtypeStruct((), jnp.int32)}
-    carry = init_carry(params, opt_init(params), item_spec, rcfg,
-                       label_field="labels")
+    carry = init_carry(params, opt_init(params), item_spec, rcfg)
 
     g = 0
     for task in range(2):

@@ -1,0 +1,80 @@
+"""repro.buffer — the rehearsal-buffer subsystem (DESIGN.md §6).
+
+Layers:
+  * ``state``    — the static-shape pytree store (BufferState) + the Alg-1 update
+                   and sampling drivers, policy-parameterised;
+  * ``policies`` — the jit-safe policy interface + registry (reservoir | fifo |
+                   class_balanced | grasp);
+  * ``tiered``   — the two-tier HBM/host store with int8 cold records and
+                   asynchronous batched demotion;
+  * ``api``      — config-driven dispatch used by ``repro.core``.
+
+``repro.core.rehearsal`` re-exports the historical surface for back-compat.
+"""
+from repro.buffer.state import (
+    BufferState,
+    augment_batch,
+    buffer_dims,
+    init_buffer,
+    local_sample,
+    local_update,
+    local_update_with_evicted,
+    mask_invalid,
+)
+from repro.buffer.policies import (
+    ClassBalancedPolicy,
+    FifoPolicy,
+    GraspPolicy,
+    POLICIES,
+    Policy,
+    get_policy,
+    register_policy,
+    resolve_policy,
+)
+from repro.buffer.tiered import (
+    TieredState,
+    cold_shardings,
+    init_tiered,
+    record_spec_of,
+    tiered_dims,
+    tiered_fill,
+    tiered_sample,
+    tiered_update,
+)
+from repro.buffer.api import (
+    buffer_fill,
+    buffer_sample,
+    buffer_update,
+    init_from_config,
+)
+
+__all__ = [
+    "BufferState",
+    "ClassBalancedPolicy",
+    "FifoPolicy",
+    "GraspPolicy",
+    "POLICIES",
+    "Policy",
+    "TieredState",
+    "augment_batch",
+    "buffer_dims",
+    "buffer_fill",
+    "buffer_sample",
+    "buffer_update",
+    "cold_shardings",
+    "get_policy",
+    "init_buffer",
+    "init_from_config",
+    "init_tiered",
+    "local_sample",
+    "local_update",
+    "local_update_with_evicted",
+    "mask_invalid",
+    "record_spec_of",
+    "register_policy",
+    "resolve_policy",
+    "tiered_dims",
+    "tiered_fill",
+    "tiered_sample",
+    "tiered_update",
+]

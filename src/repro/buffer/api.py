@@ -1,0 +1,75 @@
+"""Config-driven dispatch over the buffer subsystem.
+
+``repro.core`` talks to the buffer exclusively through these three functions: they
+pick the policy from ``RehearsalConfig.policy`` and route to the flat or tiered
+store, so every caller (sync step, pipelined step, shard_map exchange body,
+pjit step builders) stays agnostic of which variant is configured. With the
+defaults — ``policy='reservoir'``, ``tiering='off'`` — the dispatch collapses to
+the exact pre-subsystem code path (the parity contract).
+"""
+from __future__ import annotations
+
+from typing import Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.buffer.policies import resolve_policy
+from repro.buffer.state import BufferState, init_buffer, local_sample, local_update
+from repro.buffer.tiered import (
+    TieredState,
+    init_tiered,
+    tiered_fill,
+    tiered_sample,
+    tiered_update,
+)
+
+AnyBufferState = Union[BufferState, TieredState]
+
+
+def _policy_of(rcfg):
+    return resolve_policy(getattr(rcfg, "policy", None) if rcfg is not None else None)
+
+
+def init_from_config(item_spec, rcfg) -> AnyBufferState:
+    """Allocate the buffer the config describes: flat (HBM-only) or tiered."""
+    pol = _policy_of(rcfg)
+    if getattr(rcfg, "tiered", False):
+        return init_tiered(item_spec, rcfg.num_buckets, rcfg.resolved_hot_slots,
+                           rcfg.resolved_cold_slots, rcfg.resolved_demote_stage, pol)
+    return init_buffer(item_spec, rcfg.num_buckets, rcfg.slots_per_bucket, pol)
+
+
+def buffer_update(state: AnyBufferState, items, labels, key, rcfg) -> AnyBufferState:
+    """Policy-driven Alg-1 push of a candidate mini-batch into either store."""
+    pol = _policy_of(rcfg)
+    if isinstance(state, TieredState):
+        return tiered_update(state, items, labels, key, rcfg.num_candidates, pol)
+    return local_update(state, items, labels, key, rcfg.num_candidates, pol)
+
+
+def buffer_sample(state: AnyBufferState, key, n: int, rcfg=None):
+    """Draw ``n`` representatives from either store under the configured policy."""
+    pol = _policy_of(rcfg)
+    if isinstance(state, TieredState):
+        return tiered_sample(state, key, n, pol)
+    return local_sample(state, key, n, pol)
+
+
+def buffer_fill(state: AnyBufferState) -> jnp.ndarray:
+    """Total resident records (the ``buffer_fill`` training metric)."""
+    if isinstance(state, TieredState):
+        return tiered_fill(state)
+    return jnp.sum(state.counts)
+
+
+def resolve_field(explicit, rcfg, attr: str, default: str) -> str:
+    """Record-field name resolution: explicit argument > RehearsalConfig > default.
+
+    This is the single place the ``label_field``/``task_field`` plumbing funnels
+    through — call sites pass None to inherit the config's field names."""
+    if explicit is not None:
+        return explicit
+    if rcfg is not None:
+        return getattr(rcfg, attr, default)
+    return default

@@ -1,0 +1,278 @@
+"""Pluggable rehearsal-buffer policies: selection, eviction, sampling.
+
+The paper fixes one policy — per-bucket reservoir with uniform random eviction and
+uniform-over-filled sampling (Algorithm 1). GRASP (Harun et al., 2023) and
+"Rethinking Experience Replay" (Buzzega et al., 2020) show the policy itself is a
+first-class accuracy lever, so this module makes it a jit-safe, static-shape plug
+point with a registry. All hooks run inside the jitted train step: no dynamic
+shapes, no Python branching on traced values.
+
+A policy implements three decision hooks plus optional private state:
+
+  * ``select_candidates(state, labels, key, c) -> bool[b]`` — which incoming
+    samples enter the buffer (the paper's c/b lottery by default).
+  * ``evict(state, labels, pos, rank, key) -> i32[b]`` — the target slot for each
+    accepted candidate; ``pos`` is its would-be fill position (pos >= cap means the
+    bucket is full and something must be displaced).
+  * ``sample(state, key, n) -> (flat i32[n], valid bool[n])`` — flattened
+    ``bucket * cap + slot`` indices of the records to replay.
+  * ``init_aux`` / ``update_aux`` — policy-private state carried in
+    ``BufferState.aux`` (FIFO's write cursor, GRASP's prototypes).
+
+The default ``reservoir`` policy reproduces the pre-subsystem code path op-for-op —
+the parity contract pinned in tests/test_buffer_policies.py.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.buffer.state import BufferState, buffer_dims
+
+_BIG = 1e30
+
+
+def _features(items):
+    """[b, D] float features of a record batch: the first float leaf (flattened),
+    falling back to the first leaf. Drives GRASP's prototype distances."""
+    leaves = jax.tree_util.tree_leaves(items)
+    leaf = next((l for l in leaves if jnp.issubdtype(jnp.asarray(l).dtype, jnp.floating)),
+                leaves[0])
+    leaf = jnp.asarray(leaf)
+    return leaf.reshape((leaf.shape[0], -1)).astype(jnp.float32)
+
+
+def _feature_dim(item_spec) -> int:
+    leaves = jax.tree_util.tree_leaves(item_spec)
+    leaf = next((l for l in leaves if jnp.issubdtype(jnp.dtype(l.dtype), jnp.floating)),
+                leaves[0])
+    d = 1
+    for s in leaf.shape:
+        d *= s
+    return d
+
+
+class Policy:
+    """Base policy = the paper's per-bucket reservoir (Algorithm 1). Stateless."""
+
+    name = "reservoir"
+
+    # -- private state -----------------------------------------------------
+    def init_aux(self, item_spec, num_buckets: int, slots: int):
+        return ()
+
+    def update_aux(self, state: BufferState, items, labels, accept, flat, new_counts):
+        return state.aux
+
+    def reshard_aux(self, data, counts):
+        """Rebuild aux for ONE worker after elastic resharding compacted its
+        ``data``/``counts`` (repro.runtime.elastic): cloned aux would be
+        misaligned with the re-dealt slots. Stateless policies return ()."""
+        return ()
+
+    # -- decision hooks ----------------------------------------------------
+    def select_candidates(self, state: BufferState, labels, key, num_candidates: int):
+        b = labels.shape[0]
+        return jax.random.uniform(key, (b,)) < (num_candidates / b)
+
+    def evict(self, state: BufferState, labels, pos, rank, key):
+        _, cap = buffer_dims(state)
+        b = labels.shape[0]
+        evict = jax.random.randint(key, (b,), 0, cap)
+        return jnp.where(pos < cap, jnp.minimum(pos, cap - 1), evict)
+
+    def sample(self, state: BufferState, key, n: int):
+        k_buckets, cap = buffer_dims(state)
+        total = jnp.sum(state.counts)
+        u = jax.random.randint(key, (n,), 0, jnp.maximum(total, 1))
+        cum = jnp.cumsum(state.counts)
+        bucket = jnp.searchsorted(cum, u, side="right").astype(jnp.int32)
+        bucket = jnp.minimum(bucket, k_buckets - 1)
+        within = u - (cum[bucket] - state.counts[bucket])
+        flat = bucket * cap + jnp.clip(within, 0, cap - 1)
+        valid = jnp.broadcast_to(total > 0, (n,))
+        return flat, valid
+
+
+class FifoPolicy(Policy):
+    """FIFO ring per bucket: a full bucket overwrites its *oldest* record.
+
+    Age-aware where the reservoir is age-agnostic — the recency-biased baseline of
+    the replay literature. ``aux['cursor']`` is the per-bucket write head; while a
+    bucket is filling, cursor == counts, so fill order matches the reservoir's.
+    """
+
+    name = "fifo"
+
+    def init_aux(self, item_spec, num_buckets: int, slots: int):
+        return {"cursor": jnp.zeros((num_buckets,), jnp.int32)}
+
+    def evict(self, state: BufferState, labels, pos, rank, key):
+        _, cap = buffer_dims(state)
+        return (state.aux["cursor"][labels] + rank) % cap
+
+    def update_aux(self, state: BufferState, items, labels, accept, flat, new_counts):
+        k_buckets, cap = buffer_dims(state)
+        onehot = jax.nn.one_hot(labels, k_buckets, dtype=jnp.int32)
+        accepted = jnp.sum(onehot * accept[:, None].astype(jnp.int32), axis=0)
+        return {"cursor": (state.aux["cursor"] + accepted) % cap}
+
+    def reshard_aux(self, data, counts):
+        # resharding compacts records into slots [0, counts): resume the ring
+        # at the first empty slot (ages were re-dealt, so slot 0 is 'oldest')
+        cap = jax.tree_util.tree_leaves(data)[0].shape[1]
+        return {"cursor": (jnp.asarray(counts, jnp.int32) % cap)}
+
+
+class ClassBalancedPolicy(Policy):
+    """Class-balanced acceptance + replay à la Buzzega et al. (2020).
+
+    The per-bucket layout already makes *capacity* class-balanced; this policy
+    additionally (a) boosts acceptance of under-filled buckets — rare classes reach
+    capacity faster — and (b) samples uniformly over non-empty *buckets* first,
+    then within the bucket, so replay frequency is class-balanced even while fill
+    levels are skewed (uniform-over-filled over-replays the majority class).
+    """
+
+    name = "class_balanced"
+
+    def select_candidates(self, state: BufferState, labels, key, num_candidates: int):
+        b = labels.shape[0]
+        mean_fill = jnp.mean(state.counts.astype(jnp.float32))
+        boost = (1.0 + mean_fill) / (1.0 + state.counts[labels].astype(jnp.float32))
+        p = jnp.clip((num_candidates / b) * boost, 0.0, 1.0)
+        return jax.random.uniform(key, (b,)) < p
+
+    def sample(self, state: BufferState, key, n: int):
+        k_buckets, cap = buffer_dims(state)
+        k_bucket, k_within = jax.random.split(key)
+        nonzero = (state.counts > 0).astype(jnp.int32)
+        num_nz = jnp.maximum(jnp.sum(nonzero), 1)
+        r = jax.random.randint(k_bucket, (n,), 0, num_nz)
+        cum = jnp.cumsum(nonzero)
+        bucket = jnp.searchsorted(cum, r, side="right").astype(jnp.int32)
+        bucket = jnp.minimum(bucket, k_buckets - 1)
+        within = (jax.random.uniform(k_within, (n,))
+                  * state.counts[bucket].astype(jnp.float32)).astype(jnp.int32)
+        flat = bucket * cap + jnp.clip(within, 0, cap - 1)
+        valid = jnp.broadcast_to(jnp.sum(state.counts) > 0, (n,))
+        return flat, valid
+
+
+class GraspPolicy(Policy):
+    """GRASP-style prototype-distance ordering (Harun et al., 2023).
+
+    Maintains a running class prototype (mean feature) per bucket plus each stored
+    record's distance to it. Full buckets evict the *least* prototypical record
+    (max distance), and sampling is Gumbel-top-k over ``-beta * distance`` — a
+    without-replacement draw that replays easy/prototypical samples most often,
+    grading towards harder ones as distances tighten.
+    """
+
+    name = "grasp"
+    beta = 1.0  # inverse temperature of the distance-ordered sampling
+
+    def init_aux(self, item_spec, num_buckets: int, slots: int):
+        d = _feature_dim(item_spec)
+        return {
+            "proto": jnp.zeros((num_buckets, d), jnp.float32),
+            "proto_n": jnp.zeros((num_buckets,), jnp.float32),
+            "dist": jnp.full((num_buckets, slots), _BIG, jnp.float32),
+        }
+
+    def evict(self, state: BufferState, labels, pos, rank, key):
+        _, cap = buffer_dims(state)
+        # the j-th overflow candidate of a bucket displaces the j-th least
+        # prototypical slot (distance-descending order), so same-batch evictions
+        # target distinct slots instead of colliding on one argmax
+        order = jnp.argsort(-state.aux["dist"], axis=1).astype(jnp.int32)  # [K, cap]
+        j = jnp.clip(pos - cap, 0, cap - 1)
+        return jnp.where(pos < cap, jnp.minimum(pos, cap - 1),
+                         order[labels, j])
+
+    def update_aux(self, state: BufferState, items, labels, accept, flat, new_counts):
+        k_buckets, cap = buffer_dims(state)
+        aux = state.aux
+        feats = _features(items)  # [b, D]
+        onehot = jax.nn.one_hot(labels, k_buckets, dtype=jnp.float32) * accept[:, None]
+        add_n = jnp.sum(onehot, axis=0)  # accepted per bucket
+        sums = onehot.T @ feats  # [K, D]
+        proto_n = aux["proto_n"] + add_n
+        proto = (aux["proto"] * aux["proto_n"][:, None] + sums) / jnp.maximum(
+            proto_n, 1.0
+        )[:, None]
+        d = jnp.linalg.norm(feats - proto[labels], axis=1)  # [b]
+        dist = aux["dist"].reshape(-1).at[flat].set(d, mode="drop")
+        return {"proto": proto, "proto_n": proto_n,
+                "dist": dist.reshape(k_buckets, cap)}
+
+    def reshard_aux(self, data, counts):
+        # recompute prototypes + per-slot distances from the re-dealt records
+        # (the stored features ARE the records, so aux is fully reconstructible)
+        leaves = jax.tree_util.tree_leaves(data)
+        leaf = next(
+            (l for l in leaves if jnp.issubdtype(jnp.asarray(l).dtype, jnp.floating)),
+            leaves[0])
+        leaf = jnp.asarray(leaf)
+        k_buckets, cap = leaf.shape[0], leaf.shape[1]
+        feats = leaf.reshape((k_buckets, cap, -1)).astype(jnp.float32)  # [K, cap, D]
+        counts = jnp.asarray(counts, jnp.int32)
+        filled = jnp.arange(cap)[None, :] < counts[:, None]  # [K, cap]
+        proto_n = counts.astype(jnp.float32)
+        proto = jnp.sum(feats * filled[:, :, None], axis=1) / jnp.maximum(
+            proto_n, 1.0)[:, None]
+        dist = jnp.linalg.norm(feats - proto[:, None, :], axis=-1)
+        return {"proto": proto, "proto_n": proto_n,
+                "dist": jnp.where(filled, dist, _BIG)}
+
+    def sample(self, state: BufferState, key, n: int):
+        k_buckets, cap = buffer_dims(state)
+        filled = (jnp.arange(cap)[None, :] < state.counts[:, None]).reshape(-1)
+        score = -self.beta * state.aux["dist"].reshape(-1)
+        score = score + jax.random.gumbel(key, (k_buckets * cap,))
+        score = jnp.where(filled, score, -_BIG)
+        flat = jax.lax.top_k(score, min(n, k_buckets * cap))[1].astype(jnp.int32)
+        if n > k_buckets * cap:  # static: ceil-tile when asked beyond capacity
+            flat = jnp.tile(flat, -(-n // (k_buckets * cap)))[:n]
+        # top-k draws without replacement, so when fill < n the surplus draws land
+        # on unfilled slots: mark those invalid (label-masked by the consumer)
+        return flat, filled[flat]
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+POLICIES: Dict[str, Policy] = {}
+
+
+def register_policy(policy: Policy) -> Policy:
+    """Register a policy instance under ``policy.name`` (last registration wins)."""
+    POLICIES[policy.name] = policy
+    return policy
+
+
+DEFAULT_POLICY = register_policy(Policy())
+register_policy(FifoPolicy())
+register_policy(ClassBalancedPolicy())
+register_policy(GraspPolicy())
+
+
+def get_policy(name: str) -> Policy:
+    try:
+        return POLICIES[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown buffer policy {name!r}; registered: {sorted(POLICIES)}"
+        ) from None
+
+
+def resolve_policy(policy) -> Policy:
+    """None -> the default reservoir; str -> registry lookup; Policy -> itself."""
+    if policy is None:
+        return DEFAULT_POLICY
+    if isinstance(policy, str):
+        return get_policy(policy)
+    return policy

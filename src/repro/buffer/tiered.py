@@ -1,0 +1,190 @@
+"""Two-tier rehearsal store: hot working set in HBM, cold majority spilled as int8.
+
+The paper's accuracy curve (Fig. 5a) is monotone in S_max, but a device-resident
+buffer caps S_max at HBM size. This store splits each bucket into
+
+  * a **hot tier** — raw records in device HBM, managed by the active policy
+    (repro.buffer.policies); every Alg-1 insertion lands here first, and
+  * a **cold tier** — records the hot tier evicts, row-quantized to int8 through
+    the existing ``kernels/quantize.py`` + ``core/compression.py`` path (4x byte
+    saving) and, on TPU, placed in host memory (``cold_shardings``), so
+    ``slots_per_bucket`` can exceed device memory.
+
+Demotion is *asynchronous and batched*, mirroring the PR-1 pipelining discipline
+(DESIGN.md §3/§6): records evicted from the hot tier at step t are parked in a
+fixed-size staging buffer and flushed — one batched encode + insert — by step
+t+1's update, which shares no data dependency with the gradient subgraph, so
+XLA's latency-hiding scheduler keeps the quantization off the critical path. The
+staging buffer is bounded (``stage_rows``); eviction bursts beyond it drop the
+overflow, exactly as a non-tiered buffer would have destroyed those records.
+
+Sampling (promotion) draws tier-proportionally: a record is taken from the hot or
+cold tier with probability proportional to that tier's fill, and cold rows are
+dequantized on the way out — uniform within each tier ⇒ uniform over the union,
+preserving the paper's unbiased sampling. All shapes static, everything jit-safe.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.buffer.policies import resolve_policy
+from repro.buffer.state import (
+    BufferState,
+    buffer_dims,
+    init_buffer,
+    local_sample,
+    local_update,
+    local_update_with_evicted,
+)
+
+
+class TieredState(NamedTuple):
+    """Hot + cold tiers plus the one-step-stale demotion staging buffer."""
+
+    hot: BufferState  # raw records [K, hot_slots, ...]
+    cold: BufferState  # compressed records (int8 q + f32 scale) [K, cold_slots, ...]
+    stage: Any  # raw record pytree [stage_rows, ...] awaiting demotion
+    stage_labels: jnp.ndarray  # i32[stage_rows]
+    stage_valid: jnp.ndarray  # bool[stage_rows]
+
+
+def _compression():
+    from repro.core import compression  # lazy: repro.core imports this package
+
+    return compression
+
+
+def init_tiered(item_spec, num_buckets: int, hot_slots: int, cold_slots: int,
+                stage_rows: int, policy=None) -> TieredState:
+    """Allocate both tiers + staging. The policy governs the hot tier; the cold
+    tier is a plain reservoir archive (its records are opaque int8 blobs)."""
+    comp = _compression()
+    hot = init_buffer(item_spec, num_buckets, hot_slots, policy)
+    cold = init_buffer(comp.compressed_spec(item_spec), num_buckets, cold_slots)
+
+    def alloc(leaf):
+        return jnp.zeros((stage_rows,) + tuple(leaf.shape), leaf.dtype)
+
+    return TieredState(
+        hot=hot,
+        cold=cold,
+        stage=jax.tree_util.tree_map(alloc, item_spec),
+        stage_labels=jnp.zeros((stage_rows,), jnp.int32),
+        stage_valid=jnp.zeros((stage_rows,), bool),
+    )
+
+
+def tiered_dims(state: TieredState) -> Tuple[int, int, int]:
+    """(K, hot_slots, cold_slots)."""
+    k, hot = buffer_dims(state.hot)
+    return k, hot, buffer_dims(state.cold)[1]
+
+
+def record_spec_of(state: TieredState):
+    """Record ShapeDtypeStruct pytree recovered from the hot tier's leaves."""
+    return jax.tree_util.tree_map(
+        lambda l: jax.ShapeDtypeStruct(l.shape[2:], l.dtype), state.hot.data
+    )
+
+
+def _pack_stage(evicted, labels, valid, stage_rows: int):
+    """Compact the [b]-sized eviction feed into the fixed [stage_rows] staging slot
+    (valid rows first; overflow beyond ``stage_rows`` is dropped)."""
+    b = labels.shape[0]
+    order = jnp.argsort(jnp.logical_not(valid))  # stable: valid rows first
+    if b >= stage_rows:
+        take = order[:stage_rows]
+        in_range = jnp.ones((stage_rows,), bool)
+    else:
+        take = jnp.concatenate([order, jnp.zeros((stage_rows - b,), order.dtype)])
+        in_range = jnp.arange(stage_rows) < b
+    stage = jax.tree_util.tree_map(lambda x: x[take], evicted)
+    return stage, labels[take], valid[take] & in_range
+
+
+def tiered_update(state: TieredState, items, labels, key, num_candidates: int,
+                  policy=None) -> TieredState:
+    """One tiered Alg-1 step: flush last step's staged demotions into the cold tier
+    (batched int8 encode — off the critical path), update the hot tier under the
+    policy, and stage whatever the hot tier evicted for the next flush."""
+    comp = _compression()
+    pol = resolve_policy(policy)
+    k_hot, k_flush = jax.random.split(key)
+
+    # 1. flush the pending demotions (issued at step t-1) into the cold archive
+    spec = record_spec_of(state)
+    encoded = comp.encode_batch(state.stage, spec)
+    cold = local_update(state.cold, encoded, state.stage_labels, k_flush,
+                        num_candidates=state.stage_labels.shape[0],
+                        accept_mask=state.stage_valid)
+
+    # 2. policy-driven hot update, capturing displaced records
+    hot, evicted, evicted_valid = local_update_with_evicted(
+        state.hot, items, labels, k_hot, num_candidates, pol
+    )
+
+    # 3. stage this step's evictions for the next flush
+    stage, stage_labels, stage_valid = _pack_stage(
+        evicted, labels, evicted_valid, state.stage_labels.shape[0]
+    )
+    return TieredState(hot, cold, stage, stage_labels, stage_valid)
+
+
+def tiered_sample(state: TieredState, key, n: int, policy=None):
+    """Draw ``n`` records across both tiers, tier chosen ∝ fill (unbiased over the
+    union); cold rows are dequantized back to the record dtypes. Returns
+    (items [n, ...], valid bool[n])."""
+    comp = _compression()
+    k_hot, k_cold, k_mix = jax.random.split(key, 3)
+    hot_items, hot_valid = local_sample(state.hot, k_hot, n, policy)
+    cold_stored, cold_valid = local_sample(state.cold, k_cold, n)
+    cold_items = comp.decode_batch(cold_stored, record_spec_of(state))
+
+    hot_total = jnp.sum(state.hot.counts)
+    cold_total = jnp.sum(state.cold.counts)
+    total = hot_total + cold_total
+    p_hot = hot_total.astype(jnp.float32) / jnp.maximum(total, 1).astype(jnp.float32)
+    use_hot = jax.random.uniform(k_mix, (n,)) < p_hot
+    use_hot = jnp.where(cold_total == 0, True, jnp.where(hot_total == 0, False, use_hot))
+
+    def pick(h, c):
+        sel = use_hot.reshape((n,) + (1,) * (h.ndim - 1))
+        return jnp.where(sel, h, c.astype(h.dtype))
+
+    items = jax.tree_util.tree_map(pick, hot_items, cold_items)
+    valid = jnp.where(use_hot, hot_valid, cold_valid)
+    return items, valid
+
+
+def tiered_fill(state: TieredState) -> jnp.ndarray:
+    """Total records resident across both tiers (the buffer_fill metric)."""
+    return jnp.sum(state.hot.counts) + jnp.sum(state.cold.counts)
+
+
+def cold_shardings(state: TieredState, mesh, dp_axes):
+    """NamedShardings for a distributed TieredState (leading worker axis over dp),
+    requesting host (``pinned_host``) memory for the cold tier's leaves on runtimes
+    that support memory kinds — the actual HBM-relief mechanism on TPU. Falls back
+    to device placement where memory kinds are unavailable (CPU tests)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    def worker_axis(leaf):
+        return NamedSharding(mesh, P(dp_axes, *([None] * (len(leaf.shape) - 1))))
+
+    def host(leaf):
+        s = worker_axis(leaf)
+        try:
+            return s.with_memory_kind("pinned_host")
+        except (ValueError, AttributeError, NotImplementedError):
+            return s
+
+    return TieredState(
+        hot=jax.tree_util.tree_map(worker_axis, state.hot),
+        cold=jax.tree_util.tree_map(host, state.cold),
+        stage=jax.tree_util.tree_map(worker_axis, state.stage),
+        stage_labels=worker_axis(state.stage_labels),
+        stage_valid=worker_axis(state.stage_valid),
+    )

@@ -190,6 +190,20 @@ class RehearsalConfig:
     # representatives while issuing step t+1's exchange. ``mode='async'`` implies it;
     # setting it True forces the pipeline even with mode='sync' semantics elsewhere.
     pipelined: bool = False
+    # --- buffer subsystem (DESIGN.md §6) ---
+    # Selection/eviction/sampling policy, resolved via repro.buffer.get_policy:
+    # reservoir (the paper's Alg-1, default) | fifo | class_balanced | grasp.
+    policy: str = "reservoir"
+    # Tiered store: 'off' keeps the whole buffer in device HBM (the paper's layout);
+    # 'host' adds an int8-quantized cold tier (spilled to host memory on TPU) so
+    # per-bucket capacity can exceed device memory.
+    tiering: str = "off"  # off | host
+    hot_slots: int = 0  # tiered: hot (HBM) slots/bucket; 0 -> slots_per_bucket
+    cold_slots: int = 0  # tiered: cold (host, int8) slots/bucket; 0 -> 3x hot
+    demote_stage: int = 0  # tiered: demotion staging rows; 0 -> 2x num_candidates
+    # Record-field names, plumbed end to end (loss masking + Alg-1 bucketing).
+    label_field: str = "labels"
+    task_field: str = "task"
 
     @property
     def enabled(self) -> bool:
@@ -199,6 +213,29 @@ class RehearsalConfig:
     def is_pipelined(self) -> bool:
         """One-step-stale double buffering on? (False ⇒ the blocking sync path.)"""
         return self.enabled and (self.pipelined or self.mode == "async")
+
+    @property
+    def tiered(self) -> bool:
+        return self.enabled and self.tiering != "off"
+
+    @property
+    def resolved_hot_slots(self) -> int:
+        return self.hot_slots or self.slots_per_bucket
+
+    @property
+    def resolved_cold_slots(self) -> int:
+        return self.cold_slots or 3 * self.resolved_hot_slots
+
+    @property
+    def resolved_demote_stage(self) -> int:
+        return self.demote_stage or 2 * self.num_candidates
+
+    @property
+    def total_slots_per_bucket(self) -> int:
+        """Effective per-bucket capacity: hot + cold when tiered, else the flat size."""
+        if self.tiered:
+            return self.resolved_hot_slots + self.resolved_cold_slots
+        return self.slots_per_bucket
 
 
 # ---------------------------------------------------------------------------

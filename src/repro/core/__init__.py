@@ -1,4 +1,8 @@
-"""Core: the paper's distributed rehearsal buffer + CL strategies."""
+"""Core: the paper's distributed rehearsal buffer + CL strategies.
+
+The buffer store/policy/tiering machinery itself lives in ``repro.buffer``
+(DESIGN.md §6); the historical names remain importable from here.
+"""
 from repro.core.rehearsal import (
     BufferState,
     augment_batch,
@@ -8,11 +12,21 @@ from repro.core.rehearsal import (
     local_update,
     mask_invalid,
 )
+from repro.buffer import (
+    TieredState,
+    buffer_fill,
+    buffer_sample,
+    buffer_update,
+    get_policy,
+    init_from_config,
+    register_policy,
+)
 from repro.core.distributed import (
     PendingSample,
     augment_global,
     consume_reps,
     init_distributed_buffer,
+    init_distributed_from_config,
     issue_sample,
     make_sharded_update,
     sample_global,
@@ -33,15 +47,22 @@ __all__ = [
     "CLRunResult",
     "PendingSample",
     "PipelinedRehearsalCarry",
+    "TieredState",
     "TrainCarry",
     "augment_batch",
     "augment_global",
     "buffer_dims",
+    "buffer_fill",
+    "buffer_sample",
+    "buffer_update",
     "carry_specs",
     "consume_reps",
+    "get_policy",
     "init_buffer",
     "init_carry",
     "init_distributed_buffer",
+    "init_distributed_from_config",
+    "init_from_config",
     "issue_sample",
     "local_sample",
     "local_update",
@@ -49,6 +70,7 @@ __all__ = [
     "make_pipelined_halves",
     "make_sharded_update",
     "mask_invalid",
+    "register_policy",
     "run_continual",
     "sample_global",
     "topk_accuracy",

@@ -46,9 +46,12 @@ def run_continual(
     rcfg=None,
     batch_size: int = 16,
     seed: int = 0,
-    label_field: str = "label",
+    label_field: Optional[str] = None,  # None -> rcfg.label_field
     checkpoint_cb: Optional[Callable] = None,
 ) -> CLRunResult:
+    from repro.buffer.api import resolve_field
+
+    label_field = resolve_field(label_field, rcfg, "label_field", "label")
     key = jax.random.PRNGKey(seed)
     params = init_params_fn(key)
     # ``seed`` also roots the rehearsal RNG lineage carried in the pipeline slot

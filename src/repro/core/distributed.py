@@ -30,15 +30,25 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.buffer import api as buffer_api
 from repro.core import rehearsal as rb
 from repro.utils.compat import shard_map
 
 
-def init_distributed_buffer(item_spec, num_buckets: int, slots: int, n_dp: int):
+def init_distributed_buffer(item_spec, num_buckets: int, slots: int, n_dp: int,
+                            policy=None):
     """Global buffer: every leaf gets a leading worker axis [N_dp, ...] to shard on dp."""
-    local = rb.init_buffer(item_spec, num_buckets, slots)
+    local = rb.init_buffer(item_spec, num_buckets, slots, policy)
     return jax.tree_util.tree_map(
         lambda x: jnp.broadcast_to(x, (n_dp,) + x.shape), local, is_leaf=None
+    )
+
+
+def init_distributed_from_config(item_spec, rcfg, n_dp: int):
+    """Config-driven distributed buffer (flat or tiered): worker axis on every leaf."""
+    local = buffer_api.init_from_config(item_spec, rcfg)
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x, (n_dp,) + x.shape), local
     )
 
 
@@ -52,14 +62,17 @@ def _exchange(items, valid, key, axis_names):
     return recv, recv_valid
 
 
-def sample_global(state: rb.BufferState, key, r: int, axis_names, exchange: str):
-    """Per-worker body (inside shard_map). Returns (reps [r, ...], valid bool[r])."""
+def sample_global(state, key, r: int, axis_names, exchange: str, rcfg=None):
+    """Per-worker body (inside shard_map). Returns (reps [r, ...], valid bool[r]).
+
+    ``state`` is a BufferState or TieredState; ``rcfg`` selects the sampling policy
+    (None ⇒ the paper's uniform-over-filled reservoir rule)."""
     if axis_names is None or exchange == "local":
-        return rb.local_sample(state, key, r)
+        return buffer_api.buffer_sample(state, key, r, rcfg)
 
     n = jax.lax.psum(1, axis_names)  # number of peers in the exchange group
     k_draw, k_pick = jax.random.split(key)
-    items, valid = rb.local_sample(state, k_draw, n)
+    items, valid = buffer_api.buffer_sample(state, k_draw, n, rcfg)
     recv, recv_valid = _exchange(items, valid, k_draw, axis_names)
     # keep a uniformly random valid r-subset of the n received candidates
     scores = jax.random.uniform(k_pick, (n,)) + jnp.where(recv_valid, 0.0, 1e3)
@@ -80,14 +93,14 @@ class PendingSample(NamedTuple):
 
 
 def issue_sample(
-    state: rb.BufferState,
+    state,
     items,
     labels,
     key,
     rcfg,
     axis_names=None,
     exchange: str = "full",
-) -> Tuple[rb.BufferState, PendingSample]:
+) -> Tuple[Any, PendingSample]:
     """Producer half of the paper's ``RehearsalBuffer.update`` primitive, per worker:
     push candidates from the incoming mini-batch (Alg. 1), then launch the global
     sampling (local draw + all_to_all) of the next r representatives.
@@ -97,9 +110,9 @@ def issue_sample(
     *previous* ``PendingSample`` for training (pipelined mode), XLA's latency-hiding
     scheduler overlaps this exchange with the backward pass (DESIGN.md §3)."""
     k_up, k_samp = jax.random.split(key)
-    new_state = rb.local_update(state, items, labels, k_up, rcfg.num_candidates)
+    new_state = buffer_api.buffer_update(state, items, labels, k_up, rcfg)
     reps, valid = sample_global(
-        new_state, k_samp, rcfg.num_representatives, axis_names, exchange
+        new_state, k_samp, rcfg.num_representatives, axis_names, exchange, rcfg
     )
     return new_state, PendingSample(reps, valid)
 
@@ -112,18 +125,20 @@ def consume_reps(pending: PendingSample, label_field: str = "labels"):
 
 
 def update_and_sample(
-    state: rb.BufferState,
+    state,
     items,
     labels,
     key,
     rcfg,
     axis_names=None,
     exchange: str = "full",
-    label_field: str = "labels",
+    label_field: Optional[str] = None,
 ):
     """The fused (synchronous) form of the primitive: issue + immediately consume —
     the exchange sits on the critical path (the paper's blocking baseline, Fig. 6).
-    Returns (new_state, reps, valid)."""
+    ``label_field=None`` inherits ``rcfg.label_field``. Returns (new_state, reps,
+    valid)."""
+    label_field = buffer_api.resolve_field(label_field, rcfg, "label_field", "labels")
     idx = jax.lax.axis_index(axis_names) if axis_names is not None else 0
     new_state, pending = issue_sample(
         state, items, labels, jax.random.fold_in(key, idx), rcfg, axis_names, exchange
@@ -146,14 +161,16 @@ def _unsqueeze0(tree):
 
 
 def make_sharded_update(mesh, dp_axes: Tuple[str, ...], rcfg, exchange: str = "full",
-                        label_field: str = "labels"):
+                        label_field: Optional[str] = None):
     """Build ``fn(global_state, global_batch_items, global_labels, key)`` →
     (new_global_state, reps [N_dp, r, ...], valid [N_dp, r]).
 
     ``global_state`` leaves carry a leading worker axis sharded over ``dp_axes``;
     batch leaves are globally batched on axis 0. The returned fn must be called
-    under ``mesh`` (inside or outside jit).
+    under ``mesh`` (inside or outside jit). ``label_field=None`` inherits
+    ``rcfg.label_field``.
     """
+    label_field = buffer_api.resolve_field(label_field, rcfg, "label_field", "labels")
     dp = P(dp_axes)
     exchange_axes = None
     if exchange == "full":
@@ -192,7 +209,16 @@ def make_sharded_update(mesh, dp_axes: Tuple[str, ...], rcfg, exchange: str = "f
 
 def augment_global(batch, reps, valid, n_dp: int, label_field: str = "labels"):
     """Concat per-worker shards: batch [B_g, ...] (dp-sharded) + reps [N_dp, r, ...] →
-    augmented [B_g + N_dp*r, ...] where each worker's shard is its own b + r rows."""
+    augmented [B_g + N_dp*r, ...] where each worker's shard is its own b + r rows.
+
+    Invalid representatives get their ``label_field`` masked to -1 here, mirroring
+    the single-device ``augment_batch`` (idempotent when the producer already
+    masked them via ``consume_reps``, as ``make_sharded_update`` does)."""
+    flat = jax.tree_util.tree_map(lambda x: x.reshape((-1,) + x.shape[2:]), reps)
+    flat = rb.mask_invalid(flat, valid.reshape(-1), label_field)
+    reps = jax.tree_util.tree_map(
+        lambda x, ref: x.reshape(ref.shape), flat, reps
+    )
 
     def cat(b_leaf, r_leaf):
         bg = b_leaf.shape[0]

@@ -1,134 +1,34 @@
-"""Local rehearsal buffer: the paper's per-process B_n with Algorithm-1 updates.
+"""Back-compat shim: the local rehearsal buffer now lives in ``repro.buffer``.
 
-The buffer stores *records* — arbitrary pytrees matching one training sample (tokens +
-labels + task id for LMs; images + label for the paper's CNNs). Each leaf is stored as
-``[K, slots, *leaf_shape]``: K per-class/per-task sub-buffers R_n^i with ``slots``
-capacity each (= S_max / K, the paper's even split that avoids class bias).
-
-Everything here is per-worker ("embarrassingly parallel" — paper §IV-B); the cross-worker
-exchange lives in ``repro.core.distributed``. All functions are jit-safe with static
-shapes; validity is carried as masks.
+Historically this module held the whole per-worker buffer (the paper's B_n with
+Algorithm-1 updates). That machinery moved into the ``repro.buffer`` subsystem —
+``repro.buffer.state`` (the store), ``repro.buffer.policies`` (pluggable
+selection/eviction/sampling), ``repro.buffer.tiered`` (the HBM/host two-tier
+store) — so policies and tiering are first-class (DESIGN.md §6). Every public
+name is re-exported here unchanged; with the default reservoir policy the
+behaviour is bit-for-bit the pre-subsystem code (tests/test_buffer_policies.py
+pins the trace). New code should import ``repro.buffer`` directly.
 """
 from __future__ import annotations
 
-from typing import Any, NamedTuple, Tuple
+from repro.buffer.state import (  # noqa: F401
+    BufferState,
+    augment_batch,
+    buffer_dims,
+    init_buffer,
+    local_sample,
+    local_update,
+    local_update_with_evicted,
+    mask_invalid,
+)
 
-import jax
-import jax.numpy as jnp
-
-
-class BufferState(NamedTuple):
-    """Per-worker rehearsal buffer B_n (a pytree: ``data`` leaves are [K, slots, ...])."""
-
-    data: Any  # pytree of [K, slots, *item_shape]
-    counts: jnp.ndarray  # i32[K] filled slots per bucket
-    seen: jnp.ndarray  # i32[K] total candidates offered per bucket (stats)
-
-
-def init_buffer(item_spec, num_buckets: int, slots: int) -> BufferState:
-    """``item_spec``: pytree of ShapeDtypeStruct (or arrays) describing ONE record."""
-
-    def alloc(leaf):
-        shape = (num_buckets, slots) + tuple(leaf.shape)
-        return jnp.zeros(shape, leaf.dtype)
-
-    return BufferState(
-        data=jax.tree_util.tree_map(alloc, item_spec),
-        counts=jnp.zeros((num_buckets,), jnp.int32),
-        seen=jnp.zeros((num_buckets,), jnp.int32),
-    )
-
-
-def buffer_dims(state: BufferState) -> Tuple[int, int]:
-    leaf = jax.tree_util.tree_leaves(state.data)[0]
-    return leaf.shape[0], leaf.shape[1]  # (K, slots)
-
-
-def local_update(
-    state: BufferState, items, labels, key, num_candidates: int
-) -> BufferState:
-    """Algorithm 1, vectorised: every sample enters R_n^i with probability c/b.
-
-    ``items``: record pytree with leading batch axis [b, ...]; ``labels``: i32[b] bucket
-    ids. New candidates fill empty slots in arrival order; full buckets evict uniformly
-    at random (paper's random eviction — age-agnostic, so each stored representative of a
-    class is equally likely to be replaced).
-    """
-    k_buckets, cap = buffer_dims(state)
-    b = labels.shape[0]
-    k_accept, k_evict = jax.random.split(key)
-
-    accept = jax.random.uniform(k_accept, (b,)) < (num_candidates / b)
-    onehot = jax.nn.one_hot(labels, k_buckets, dtype=jnp.int32) * accept[:, None].astype(
-        jnp.int32
-    )
-    # rank among *prior* accepted candidates of the same bucket within this batch
-    rank = jnp.take_along_axis(
-        jnp.cumsum(onehot, axis=0) - onehot, labels[:, None], axis=1
-    )[:, 0]
-    pos = state.counts[labels] + rank
-    evict = jax.random.randint(k_evict, (b,), 0, cap)
-    slot = jnp.where(pos < cap, jnp.minimum(pos, cap - 1), evict)
-    flat = jnp.where(accept, labels * cap + slot, k_buckets * cap)  # OOB ⇒ dropped
-
-    def scatter(buf, it):
-        flat_buf = buf.reshape((k_buckets * cap,) + buf.shape[2:])
-        out = flat_buf.at[flat].set(it.astype(buf.dtype), mode="drop")
-        return out.reshape(buf.shape)
-
-    new_data = jax.tree_util.tree_map(scatter, state.data, items)
-    accepted_per_bucket = jnp.sum(onehot, axis=0)
-    new_counts = jnp.minimum(cap, state.counts + accepted_per_bucket)
-    new_seen = state.seen + jnp.sum(jax.nn.one_hot(labels, k_buckets, dtype=jnp.int32), axis=0)
-    return BufferState(new_data, new_counts, new_seen)
-
-
-def local_sample(state: BufferState, key, n: int):
-    """Draw ``n`` records uniformly over the *filled* slots of this worker's buffer.
-
-    Returns (items pytree [n, ...], valid bool[n]). Uniformity over filled slots gives
-    every stored representative equal selection probability regardless of class — the
-    unbiased sampling the paper requires. (Drawn with replacement; for n ≪ |B_n| this
-    matches the paper's without-replacement sampling to O(n/|B_n|).)
-    """
-    k_buckets, cap = buffer_dims(state)
-    total = jnp.sum(state.counts)
-    u = jax.random.randint(key, (n,), 0, jnp.maximum(total, 1))
-    cum = jnp.cumsum(state.counts)
-    bucket = jnp.searchsorted(cum, u, side="right").astype(jnp.int32)
-    bucket = jnp.minimum(bucket, k_buckets - 1)
-    within = u - (cum[bucket] - state.counts[bucket])
-    flat = bucket * cap + jnp.clip(within, 0, cap - 1)
-
-    def gather(buf):
-        return buf.reshape((k_buckets * cap,) + buf.shape[2:])[flat]
-
-    items = jax.tree_util.tree_map(gather, state.data)
-    valid = jnp.broadcast_to(total > 0, (n,))
-    return items, valid
-
-
-def mask_invalid(items, valid, label_field: str = "labels"):
-    """Neutralise invalid records: set their loss labels to -1 (ignored by the CE)."""
-
-    def fix(path, leaf):
-        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
-        if name in (label_field, "label"):
-            shape = (leaf.shape[0],) + (1,) * (leaf.ndim - 1)
-            return jnp.where(valid.reshape(shape), leaf, -1)
-        return leaf
-
-    return jax.tree_util.tree_map_with_path(fix, items)
-
-
-def augment_batch(batch, reps, valid, label_field: str = "labels"):
-    """Concatenate the incoming mini-batch (size b) with r representatives → b + r.
-
-    Invalid representatives (empty buffer at step 0 — the paper trains un-augmented on
-    the first iteration) contribute zero loss via label masking, preserving static
-    shapes.
-    """
-    reps = mask_invalid(reps, valid, label_field)
-    return jax.tree_util.tree_map(
-        lambda a, b_: jnp.concatenate([a, b_.astype(a.dtype)], axis=0), batch, reps
-    )
+__all__ = [
+    "BufferState",
+    "augment_batch",
+    "buffer_dims",
+    "init_buffer",
+    "local_sample",
+    "local_update",
+    "local_update_with_evicted",
+    "mask_invalid",
+]

@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.buffer import api as buffer_api
 from repro.core import rehearsal as rb
 from repro.core import distributed as dist
 from repro.core.distributed import PendingSample
@@ -55,7 +56,7 @@ class PipelinedRehearsalCarry(NamedTuple):
 class TrainCarry(NamedTuple):
     params: Any
     opt: Any
-    buffer: Optional[rb.BufferState]
+    buffer: Any  # BufferState | TieredState | None
     pipe: Optional[PipelinedRehearsalCarry]  # in-flight sample + RNG lineage
     ef: Any  # error-feedback state (int8 compression) or None
 
@@ -74,18 +75,22 @@ def _add_worker_axis(tree, n_dp):
 
 
 def init_carry(params, opt_state, item_spec=None, rcfg=None, ef=None, n_dp: int = 1,
-               label_field: str = "label", seed: int = 0):
-    """Fresh carry. With rehearsal on, the buffer starts empty and the in-flight
-    representatives start invalid — the first iteration trains un-augmented, exactly
-    the paper's bootstrap (§IV-D). ``seed`` roots the sampling RNG lineage."""
+               label_field: Optional[str] = None, seed: int = 0):
+    """Fresh carry. With rehearsal on, the buffer (flat or tiered, per the config)
+    starts empty and the in-flight representatives start invalid — the first
+    iteration trains un-augmented, exactly the paper's bootstrap (§IV-D). ``seed``
+    roots the sampling RNG lineage; ``label_field=None`` inherits
+    ``rcfg.label_field``."""
     buffer = pipe = None
     if rcfg is not None and rcfg.enabled:
-        buffer = rb.init_buffer(item_spec, rcfg.num_buckets, rcfg.slots_per_bucket)
+        label_field = buffer_api.resolve_field(label_field, rcfg, "label_field", "label")
+        buffer = buffer_api.init_from_config(item_spec, rcfg)
         key0 = jax.random.PRNGKey(seed)
-        reps, valid = rb.local_sample(buffer, key0, rcfg.num_representatives)
+        reps, valid = buffer_api.buffer_sample(buffer, key0, rcfg.num_representatives,
+                                              rcfg)
         reps = rb.mask_invalid(reps, valid, label_field)
         if n_dp > 1:
-            buffer = rb.BufferState(*_add_worker_axis(tuple(buffer), n_dp))
+            buffer = _add_worker_axis(buffer, n_dp)
             reps = _add_worker_axis(reps, n_dp)
             valid = _add_worker_axis(valid, n_dp)
         pipe = PipelinedRehearsalCarry(reps, valid, key0)
@@ -128,8 +133,8 @@ def make_cl_step(
     dp_axis: str = "data",
     exchange: str = "full",
     compress: str = "none",
-    label_field: str = "label",
-    task_field: str = "task",
+    label_field: Optional[str] = None,
+    task_field: Optional[str] = None,
     donate: bool = True,
 ):
     """Build ``step(carry, batch, key) -> (carry, metrics)`` (jitted).
@@ -138,9 +143,12 @@ def make_cl_step(
     ``opt_update(grads, opt_state, params) -> (params, opt_state, metrics_dict)``.
     With ``mesh``, the whole step runs in shard_map over ``dp_axis``: batch sharded,
     params replicated, gradients explicitly psum'd (optionally int8-compressed).
+    ``label_field``/``task_field`` default to the ``RehearsalConfig`` field names.
     """
     rehearse = strategy == "rehearsal" and rcfg is not None and rcfg.enabled
     pipelined = rehearse and rcfg.is_pipelined
+    label_field = buffer_api.resolve_field(label_field, rcfg, "label_field", "label")
+    task_field = buffer_api.resolve_field(task_field, rcfg, "task_field", "task")
 
     def worker(carry: TrainCarry, batch, key, axis, n_workers):
         buf, pipe = carry.buffer, carry.pipe
@@ -164,7 +172,7 @@ def make_cl_step(
             train_batch = rb.augment_batch(batch, train_reps, train_valid, label_field)
             buf = new_buf
             pipe = PipelinedRehearsalCarry(pending.reps, pending.valid, key)
-            metrics["buffer_fill"] = jnp.sum(buf.counts).astype(jnp.float32)
+            metrics["buffer_fill"] = buffer_api.buffer_fill(buf).astype(jnp.float32)
             metrics["rep_checksum"] = _rep_checksum(train_reps, train_valid, label_field)
         else:
             train_batch = batch
@@ -203,7 +211,7 @@ def make_cl_step(
 
         local = TrainCarry(
             carry.params, carry.opt,
-            None if carry.buffer is None else rb.BufferState(*squeeze(tuple(carry.buffer))),
+            squeeze(carry.buffer),
             None if carry.pipe is None else PipelinedRehearsalCarry(
                 squeeze(carry.pipe.reps), squeeze(carry.pipe.valid), carry.pipe.key),
             carry.ef,
@@ -215,7 +223,7 @@ def make_cl_step(
 
         out = TrainCarry(
             new_c.params, new_c.opt,
-            None if new_c.buffer is None else rb.BufferState(*unsqueeze(tuple(new_c.buffer))),
+            unsqueeze(new_c.buffer),
             None if new_c.pipe is None else PipelinedRehearsalCarry(
                 unsqueeze(new_c.pipe.reps), unsqueeze(new_c.pipe.valid), new_c.pipe.key),
             new_c.ef,
@@ -245,8 +253,8 @@ def make_pipelined_halves(
     rcfg,
     *,
     exchange: str = "local",
-    label_field: str = "label",
-    task_field: str = "task",
+    label_field: Optional[str] = None,
+    task_field: Optional[str] = None,
 ):
     """The pipelined step as TWO separately-dispatched XLA programs (single device):
 
@@ -262,6 +270,8 @@ def make_pipelined_halves(
     The fused single-program form (``make_cl_step``) is the deployed TPU path where
     XLA's latency-hiding scheduler provides the overlap instead.
     """
+    label_field = buffer_api.resolve_field(label_field, rcfg, "label_field", "label")
+    task_field = buffer_api.resolve_field(task_field, rcfg, "task_field", "task")
 
     @jax.jit
     def train_half(params, opt, pipe, batch):

@@ -129,11 +129,18 @@ def build_train_step(
     )
     use_rehearsal = mode != "off"
     r = rcfg.num_representatives
+    task_field = rcfg.task_field
+    if use_rehearsal and rcfg.tiered:
+        raise NotImplementedError(
+            "tiered buffers are not wired through the pjit step builder yet "
+            "(ROADMAP: tiered distributed path); use repro.core.make_cl_step or "
+            "set tiering='off'"
+        )
     if use_rehearsal:
         slots = slots_for_budget(item_s, rcfg.num_buckets, buffer_budget_bytes)
         buffer_s = jax.eval_shape(
             functools.partial(dist.init_distributed_buffer, item_s, rcfg.num_buckets,
-                              slots, n_dp)
+                              slots, n_dp, rcfg.policy)
         )
         buffer_s = rb.BufferState(*buffer_s)
         reps_s = jax.tree_util.tree_map(
@@ -171,9 +178,10 @@ def build_train_step(
         def step(params, opt_state, buffer, reps, valid, batch, key):
             # issue + immediately consume: exchange on the critical path
             buffer, new_reps, new_valid = sharded_update(
-                buffer, batch, batch["task"], key
+                buffer, batch, batch[task_field], key
             )
-            aug = dist.augment_global(batch, new_reps, new_valid, n_dp)
+            aug = dist.augment_global(batch, new_reps, new_valid, n_dp,
+                                      rcfg.label_field)
             (loss, metrics), grads = grad_fn(params, aug)
             params, opt_state, om = opt_update(grads, opt_state, params)
             return params, opt_state, buffer, new_reps, new_valid, dict(
@@ -187,11 +195,11 @@ def build_train_step(
 
         def step(params, opt_state, buffer, reps, valid, batch, key):
             # consume the pending slot: representatives issued at t-1
-            aug = dist.augment_global(batch, reps, valid, n_dp)
+            aug = dist.augment_global(batch, reps, valid, n_dp, rcfg.label_field)
             (loss, metrics), grads = grad_fn(params, aug)
             # issue t+1's sample: independent of grads -> overlaps with backward
             buffer, next_reps, next_valid = sharded_update(
-                buffer, batch, batch["task"], key
+                buffer, batch, batch[task_field], key
             )
             params, opt_state, om = opt_update(grads, opt_state, params)
             return params, opt_state, buffer, next_reps, next_valid, dict(

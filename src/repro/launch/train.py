@@ -49,15 +49,20 @@ def materialize_state(built, run, mesh, key, exchange="full"):
         return params, opt, None, None, None
     n_dp = built.meta["n_dp"]
     buffer_struct, reps_struct, valid_struct = built.args[2], built.args[3], built.args[4]
+    # proper policy init (e.g. GRASP's +inf distance sentinels), not plain zeros
+    item_s = jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape[2:], s.dtype), reps_struct)
     buffer = jax.jit(
-        lambda: jax.tree_util.tree_map(lambda s: jnp.zeros(s.shape, s.dtype),
-                                       buffer_struct),
-        out_shardings=built.shardings[2])()
+        lambda: tuple(dist.init_distributed_buffer(
+            item_s, rcfg.num_buckets, built.meta["slots_per_bucket"], n_dp,
+            rcfg.policy)),
+        out_shardings=tuple(built.shardings[2]))()
     def init_reps():
         def leaf(path, s):
             name = path[-1].key if hasattr(path[-1], "key") else ""
             z = jnp.zeros(s.shape, s.dtype)
-            return z - 1 if name in ("labels", "label") else z  # invalid: masked loss
+            # invalid until the first issue: labels masked -> zero loss
+            return z - 1 if name in (rcfg.label_field, "label") else z
 
         return jax.tree_util.tree_map_with_path(leaf, reps_struct)
 

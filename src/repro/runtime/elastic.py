@@ -22,27 +22,59 @@ from repro.core.rehearsal import BufferState
 from repro.core.strategies import PipelinedRehearsalCarry, TrainCarry
 
 
-def reshard_carry(carry: TrainCarry, n_new: int) -> TrainCarry:
-    """Adapt a TrainCarry saved with N workers to ``n_new`` workers."""
+def reshard_carry(carry: TrainCarry, n_new: int, policy=None) -> TrainCarry:
+    """Adapt a TrainCarry saved with N workers to ``n_new`` workers.
+
+    ``policy`` (name or Policy) must identify the buffer policy when it carries
+    aux state — resharding compacts each worker's slots, so cloned aux (FIFO
+    cursor, GRASP distances) would be misaligned; it is rebuilt per worker via
+    ``Policy.reshard_aux``."""
     if carry.buffer is None:
         return carry
+    if not isinstance(carry.buffer, BufferState):
+        raise NotImplementedError(
+            "elastic resharding of tiered buffers is not supported yet; "
+            "drain the cold tier (tiering='off') before changing worker count"
+        )
     new_data, new_counts = reshard_buffer(carry.buffer.data, np.asarray(carry.buffer.counts),
                                           n_new)
     n_old, k = np.asarray(carry.buffer.counts).shape
     seen = np.asarray(carry.buffer.seen).sum(axis=0, keepdims=True)
     new_seen = np.broadcast_to(seen // n_new, (n_new, k)).copy()
-    buffer = BufferState(
-        data=jax.tree_util.tree_map(jnp.asarray, new_data),
-        counts=jnp.asarray(new_counts),
-        seen=jnp.asarray(new_seen.astype(np.int32)),
-    )
 
     def resize_reps(x):
         x = np.asarray(x)
         if n_new <= x.shape[0]:
             return jnp.asarray(x[:n_new])
-        reps = np.concatenate([x] + [x[: n_new - x.shape[0]]], axis=0)
-        return jnp.asarray(reps)
+        tiles = -(-n_new // x.shape[0])  # ceil: handles n_new > 2x the old count
+        return jnp.asarray(np.concatenate([x] * tiles, axis=0)[:n_new])
+
+    if jax.tree_util.tree_leaves(carry.buffer.aux):
+        from repro.buffer import resolve_policy
+
+        if policy is None:
+            raise ValueError(
+                "the buffer carries policy aux state; pass the policy (name or "
+                "Policy) so reshard_carry can rebuild it for the re-dealt slots"
+            )
+        pol = resolve_policy(policy)
+        per_worker = [
+            pol.reshard_aux(
+                jax.tree_util.tree_map(lambda x: jnp.asarray(np.asarray(x)[w]),
+                                       new_data),
+                new_counts[w],
+            )
+            for w in range(n_new)
+        ]
+        aux = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *per_worker)
+    else:
+        aux = carry.buffer.aux
+    buffer = BufferState(
+        data=jax.tree_util.tree_map(jnp.asarray, new_data),
+        counts=jnp.asarray(new_counts),
+        seen=jnp.asarray(new_seen.astype(np.int32)),
+        aux=aux,
+    )
 
     pipe = carry.pipe
     if pipe is not None:
