@@ -1,4 +1,10 @@
-"""Shared harness for the paper-figure benchmarks (tiny-CL on CPU)."""
+"""Shared harness for the paper-figure benchmarks (tiny-CL on CPU).
+
+``VisionCL.run`` goes through ``ContinualTrainer`` on a ``ClassIncremental``
+scenario wrapping the harness stream (DESIGN.md §7); the loss/opt/item-spec
+attributes remain exposed because fig5a/fig6 benchmark individual jitted steps
+directly (outside the trainer loop).
+"""
 from __future__ import annotations
 
 import time
@@ -8,12 +14,18 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import resnet50_cl
-from repro.configs.base import RehearsalConfig, TrainConfig
-from repro.core import make_cl_step, run_continual, topk_accuracy
+from repro.configs.base import (
+    RehearsalConfig,
+    RunConfig,
+    ScenarioConfig,
+    TrainConfig,
+)
+from repro.core import topk_accuracy
 from repro.data import ClassIncrementalImages, ImageStreamConfig
 from repro.models.model_zoo import cross_entropy
-from repro.models.resnet import apply_cnn, init_cnn
+from repro.models.resnet import apply_cnn
 from repro.optim import make_optimizer
+from repro.scenario import ClassIncremental, ContinualTrainer
 
 
 @dataclass
@@ -29,16 +41,12 @@ class VisionCL:
         self.stream = ClassIncrementalImages(ImageStreamConfig(
             num_tasks=self.num_tasks, classes_per_task=self.classes_per_task,
             image_size=self.image_size, noise=0.4))
+        self.scenario = ClassIncremental(stream=self.stream)
         self.ccfg = resnet50_cl.reduced(num_classes=self.stream.num_classes)
         self.tcfg = TrainConfig(optimizer="sgd", peak_lr=0.05, warmup_steps=10,
                                 linear_scaling=False)
         self.opt_init, self.opt_update = make_optimizer(self.tcfg)
-        self.item_spec = {
-            "images": jax.ShapeDtypeStruct(
-                (self.image_size, self.image_size, 3), jnp.float32),
-            "label": jax.ShapeDtypeStruct((), jnp.int32),
-            "task": jax.ShapeDtypeStruct((), jnp.int32),
-        }
+        self.item_spec = self.scenario.item_spec
         self._eval_logits = jax.jit(lambda p, im: apply_cnn(p, im, self.ccfg))
 
     def loss_fn(self, params, batch):
@@ -50,6 +58,18 @@ class VisionCL:
         return float(topk_accuracy(self._eval_logits(params, jnp.asarray(ev["images"])),
                                    jnp.asarray(ev["label"]), k=1))
 
+    def run_config(self, rcfg: RehearsalConfig, strategy: str) -> RunConfig:
+        """The RunConfig one harness invocation trains under; ``rcfg`` is
+        authoritative (auto_defaults off — benchmark sweeps set policy/tiering
+        explicitly, including mode='off' baselines)."""
+        return RunConfig(
+            model=self.ccfg, train=self.tcfg, rehearsal=rcfg,
+            scenario=ScenarioConfig(
+                name="class_incremental", strategy=strategy,
+                num_tasks=self.num_tasks, epochs_per_task=self.epochs_per_task,
+                steps_per_epoch=self.steps_per_epoch, batch_size=self.batch_size,
+                auto_defaults=False))
+
     def run(self, strategy: str, mode: str = "async", slots: int = 64,
             r: int = 8, exchange: str = "full", policy: str = "reservoir",
             tiering: str = "off", hot_slots: int = 0, cold_slots: int = 0):
@@ -58,17 +78,10 @@ class VisionCL:
                                num_representatives=r, num_candidates=14, mode=mode,
                                policy=policy, tiering=tiering, hot_slots=hot_slots,
                                cold_slots=cold_slots, label_field="label")
-        step = make_cl_step(self.loss_fn, self.opt_update, rcfg, strategy=strategy,
-                            exchange=exchange)
+        trainer = ContinualTrainer(self.run_config(rcfg, strategy), self.scenario,
+                                   exchange=exchange)
         t0 = time.perf_counter()
-        res = run_continual(
-            strategy=strategy, num_tasks=self.num_tasks,
-            epochs_per_task=self.epochs_per_task,
-            steps_per_epoch=self.steps_per_epoch, batch_fn=self.stream.batch,
-            cumulative_batch_fn=self.stream.cumulative_batch, eval_fn=self.eval_fn,
-            init_params_fn=lambda k: init_cnn(k, self.ccfg),
-            init_opt_fn=self.opt_init, step_fn=step, item_spec=self.item_spec,
-            rcfg=rcfg, batch_size=self.batch_size)
+        res = trainer.fit()
         res.wall = time.perf_counter() - t0
         total_steps = sum(
             self.epochs_per_task * self.steps_per_epoch * ((t + 1) if

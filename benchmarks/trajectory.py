@@ -1,0 +1,171 @@
+"""Perf trajectory: merge the CI ``BENCH_*.json`` artifacts into one time-series.
+
+Each CI run drops machine-readable payloads (``BENCH_fig5a.json``,
+``BENCH_fig6.json``, ...). This tool flattens every numeric metric in them into
+a single entry, appends it to a JSONL trajectory file, and diffs the new entry
+against the previous one — printing per-metric deltas and flagging regressions
+(directional metrics only: ``*_us*`` / ``*vs_sync`` / ``*vs_device*`` are
+lower-is-better, ``*accuracy*``/``*acc*`` higher-is-better). CI restores the
+trajectory file from the workflow cache, so history accumulates across runs.
+
+    PYTHONPATH=src python -m benchmarks.trajectory            # merge + report
+    PYTHONPATH=src python -m benchmarks.trajectory --gate     # exit 1 on regression
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import subprocess
+import sys
+import time
+from typing import Dict, List, Optional, Tuple
+
+# CPU CI boxes are noisy; only a sustained blow-up should trip the gate.
+DEFAULT_TOLERANCE = 0.35
+
+_LOWER_IS_BETTER = ("_us", "us_per_step", "vs_sync", "vs_device", "hideable")
+_HIGHER_IS_BETTER = ("accuracy", "acc")
+
+
+def metric_direction(key: str) -> int:
+    """-1: lower is better, +1: higher is better, 0: informational only."""
+    base = key.rsplit("/", 1)[-1]
+    if any(t in base for t in _LOWER_IS_BETTER):
+        return -1
+    if any(t in base for t in _HIGHER_IS_BETTER):
+        return 1
+    return 0
+
+
+def flatten(payload, prefix: str) -> Dict[str, float]:
+    """Pull every numeric scalar out of a BENCH payload, keyed by path.
+    fig5a-style ``rows`` lists key their entries by the row's ``name``."""
+    out: Dict[str, float] = {}
+
+    def walk(node, path):
+        if isinstance(node, bool):
+            return
+        if isinstance(node, (int, float)):
+            out[path] = float(node)
+        elif isinstance(node, dict):
+            for k, v in node.items():
+                if k in ("bench", "smoke", "name"):
+                    continue
+                walk(v, f"{path}/{k}" if path else k)
+        elif isinstance(node, list):
+            for i, v in enumerate(node):
+                name = v.get("name", str(i)) if isinstance(v, dict) else str(i)
+                walk(v, f"{path}/{name}")
+
+    walk(payload, prefix)
+    return out
+
+
+def collect(paths: List[str]) -> Dict[str, float]:
+    metrics: Dict[str, float] = {}
+    for p in sorted(paths):
+        with open(p) as f:
+            payload = json.load(f)
+        bench = payload.get("bench", os.path.splitext(os.path.basename(p))[0])
+        metrics.update(flatten(payload, bench))
+    return metrics
+
+
+def _git_sha() -> str:
+    sha = os.environ.get("GITHUB_SHA", "")
+    if sha:
+        return sha[:12]
+    try:
+        return subprocess.run(["git", "rev-parse", "--short=12", "HEAD"],
+                              capture_output=True, text=True,
+                              check=True).stdout.strip()
+    except Exception:
+        return "unknown"
+
+
+def compare(prev: Dict[str, float], cur: Dict[str, float],
+            tolerance: float) -> Tuple[List[str], List[str]]:
+    """(report_lines, regressions) for metrics present in both entries."""
+    lines, regressions = [], []
+    for key in sorted(set(prev) & set(cur)):
+        p, c = prev[key], cur[key]
+        if p == 0:
+            continue
+        rel = (c - p) / abs(p)
+        direction = metric_direction(key)
+        mark = ""
+        if direction and direction * rel < -tolerance:
+            mark = "  <-- REGRESSION"
+            regressions.append(f"{key}: {p:.4g} -> {c:.4g} ({rel:+.1%})")
+        if abs(rel) > 0.02 or mark:
+            lines.append(f"  {key}: {p:.4g} -> {c:.4g} ({rel:+.1%}){mark}")
+    return lines, regressions
+
+
+def run(bench_glob: str = "BENCH_*.json",
+        out_path: str = "benchmarks/results/trajectory.jsonl",
+        gate: bool = False, tolerance: float = DEFAULT_TOLERANCE,
+        now: Optional[float] = None) -> dict:
+    paths = glob.glob(bench_glob)
+    if not paths:
+        print(f"trajectory: no files match {bench_glob!r}; nothing to merge")
+        return {"entry": None, "regressions": []}
+    entry = {"ts": round(now if now is not None else time.time(), 1),
+             "sha": _git_sha(), "sources": sorted(os.path.basename(p)
+                                                  for p in paths),
+             "metrics": collect(paths)}
+
+    history = []
+    if os.path.exists(out_path):
+        with open(out_path) as f:
+            history = [json.loads(line) for line in f if line.strip()]
+    regressions: List[str] = []
+    if history:
+        prev = history[-1]
+        lines, regressions = compare(prev["metrics"], entry["metrics"], tolerance)
+        print(f"trajectory: vs previous entry {prev['sha']} "
+              f"({len(history)} prior entries)")
+        for ln in lines:
+            print(ln)
+        if not lines:
+            print("  (no metric moved more than 2%)")
+    else:
+        print(f"trajectory: first entry ({len(entry['metrics'])} metrics)")
+
+    if regressions:
+        print(f"trajectory: {len(regressions)} regression(s) beyond "
+              f"{tolerance:.0%}:")
+        for r in regressions:
+            print(f"  {r}")
+        entry["regressions"] = regressions
+        if gate:
+            # do NOT persist the regressed entry: it must not become the
+            # baseline the next run is compared against
+            print(f"trajectory: gate failed; {entry['sha']} not appended")
+            sys.exit(1)
+    os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
+    with open(out_path, "a") as f:
+        f.write(json.dumps(entry) + "\n")
+    print(f"trajectory: appended {entry['sha']} -> {out_path}")
+    return {"entry": entry, "regressions": regressions}
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--glob", default="BENCH_*.json", dest="bench_glob",
+                    help="BENCH payloads to merge (default: BENCH_*.json in cwd)")
+    ap.add_argument("--out", default="benchmarks/results/trajectory.jsonl")
+    ap.add_argument("--tolerance", type=float, default=DEFAULT_TOLERANCE,
+                    help="relative worsening beyond which a directional metric "
+                         "counts as a regression")
+    ap.add_argument("--gate", action="store_true",
+                    help="exit 1 when a regression is found")
+    args = ap.parse_args()
+    run(bench_glob=args.bench_glob, out_path=args.out, gate=args.gate,
+        tolerance=args.tolerance)
+
+
+if __name__ == "__main__":
+    main()

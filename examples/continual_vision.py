@@ -4,60 +4,43 @@ Reproduces the Fig. 5b ordering on CPU in ~3 minutes:
   incremental  — fast, catastrophically forgets   (paper: 23.1% top-5)
   rehearsal    — fast, retains                    (paper: 80.55%)
   from_scratch — slow (quadratic), upper bound    (paper: 91%)
+
+Each strategy is one ``ContinualTrainer.fit()`` over the same scenario — the
+scenario owns the stream, the trainer owns the wiring (DESIGN.md §7).
 """
-import functools
-import time
+import dataclasses
 
-import jax
-import jax.numpy as jnp
-
-from repro.configs import resnet50_cl
-from repro.configs.base import RehearsalConfig, TrainConfig
-from repro.core import make_cl_step, run_continual, topk_accuracy
-from repro.data import ClassIncrementalImages, ImageStreamConfig
-from repro.models.model_zoo import cross_entropy
-from repro.models.resnet import apply_cnn, init_cnn
-from repro.optim import make_optimizer
+from repro.configs.base import (
+    RehearsalConfig,
+    RunConfig,
+    ScenarioConfig,
+    TrainConfig,
+)
+from repro.scenario import ClassIncremental, ContinualTrainer
 
 NUM_TASKS = 3
 
 
 def main():
-    stream = ClassIncrementalImages(ImageStreamConfig(
-        num_tasks=NUM_TASKS, classes_per_task=5, image_size=16, noise=0.4))
-    ccfg = resnet50_cl.reduced(num_classes=stream.num_classes)
-    tcfg = TrainConfig(optimizer="sgd", peak_lr=0.05, warmup_steps=10,
-                       linear_scaling=False)
-
-    def loss_fn(params, batch):
-        logits = apply_cnn(params, batch["images"], ccfg)
-        return cross_entropy(logits[:, None, :], batch["label"][:, None]), {}
-
-    opt_init, opt_update = make_optimizer(tcfg)
-    item_spec = {"images": jax.ShapeDtypeStruct((16, 16, 3), jnp.float32),
-                 "label": jax.ShapeDtypeStruct((), jnp.int32),
-                 "task": jax.ShapeDtypeStruct((), jnp.int32)}
-    eval_logits = jax.jit(lambda p, im: apply_cnn(p, im, ccfg))
-
-    def eval_fn(params, task):
-        ev = stream.eval_set(task)
-        return float(topk_accuracy(eval_logits(params, jnp.asarray(ev["images"])),
-                                   jnp.asarray(ev["label"]), k=1))
+    scenario_cfg = ScenarioConfig(name="class_incremental", num_tasks=NUM_TASKS,
+                                  classes_per_task=5, image_size=16, noise=0.4,
+                                  epochs_per_task=2, steps_per_epoch=15,
+                                  batch_size=24)
+    scenario = ClassIncremental(scenario_cfg)  # shared stream across strategies
+    base = RunConfig(
+        train=TrainConfig(optimizer="sgd", peak_lr=0.05, warmup_steps=10,
+                          linear_scaling=False),
+        rehearsal=RehearsalConfig(num_buckets=NUM_TASKS, slots_per_bucket=64,
+                                  num_representatives=8, num_candidates=14,
+                                  mode="async"),
+        scenario=scenario_cfg,
+    )
 
     print(f"{'strategy':>14} {'final_acc':>9} {'per-task runtimes (s)':>30}")
-    for strategy, mode in [("incremental", "off"), ("rehearsal", "async"),
-                           ("from_scratch", "off")]:
-        rcfg = RehearsalConfig(num_buckets=NUM_TASKS, slots_per_bucket=64,
-                               num_representatives=8, num_candidates=14, mode=mode)
-        step = make_cl_step(loss_fn, opt_update, rcfg, strategy=strategy,
-                            label_field="label")
-        res = run_continual(
-            strategy=strategy, num_tasks=NUM_TASKS, epochs_per_task=2,
-            steps_per_epoch=15, batch_fn=stream.batch,
-            cumulative_batch_fn=stream.cumulative_batch, eval_fn=eval_fn,
-            init_params_fn=lambda k: init_cnn(k, ccfg), init_opt_fn=opt_init,
-            step_fn=step, item_spec=item_spec, rcfg=rcfg, batch_size=24,
-            label_field="label")
+    for strategy in ("incremental", "rehearsal", "from_scratch"):
+        run = dataclasses.replace(
+            base, scenario=dataclasses.replace(scenario_cfg, strategy=strategy))
+        res = ContinualTrainer(run, scenario).fit()
         rt = " ".join(f"{t:6.1f}" for t in res.task_runtimes)
         print(f"{strategy:>14} {res.final_accuracy:9.3f} {rt:>30}")
         print(f"{'':>14} accuracy matrix (row = after task i):")

@@ -1,4 +1,6 @@
-"""Quickstart — the paper's Listing 1, verbatim shape, on a tiny LM (CPU, ~1 min).
+"""Quickstart — the paper's experimental loop through the scenario-first API.
+
+The paper's Listing 1:
 
     for i in range(no_minibatches):
         m   = DataPipeline.get_next_minibatch()
@@ -6,69 +8,60 @@
         m_a = concat(m, r)
         Model.train(m_a)
 
-Here ``update`` is repro.core.distributed.update_and_sample and the async double
-buffering happens inside the jitted step (repro.core.strategies).
+is what ``ContinualTrainer.fit()`` runs inside its jitted step: the scenario
+owns the task stream, ``RunConfig`` the model/optimizer/rehearsal settings,
+and the trainer composes step + buffer + prefetch + the accuracy-matrix
+evaluation (DESIGN.md §7). Here: a tiny LM on a 2-task token stream (CPU,
+~1 min; ``--smoke`` shrinks it for CI).
 """
-import jax
-import jax.numpy as jnp
+import argparse
 
-from repro.configs import get_reduced
-from repro.configs.base import RehearsalConfig, TrainConfig
-from repro.core import init_carry, make_cl_step
-from repro.data import TaskTokenStream, TokenStreamConfig
-from repro.models import StackCtx, build_model
-from repro.optim import make_optimizer
+from repro.configs.base import (
+    RehearsalConfig,
+    RunConfig,
+    ScenarioConfig,
+    TrainConfig,
+)
+from repro.scenario import ContinualTrainer
 
 
-def main():
-    # a tiny llama-family model + a 2-task token stream
-    cfg = get_reduced("smollm-135m")
-    cfg = type(cfg)(**{**cfg.__dict__, "vocab_size": 256, "num_layers": 2})
-    model = build_model(cfg)
-    ctx = StackCtx(cfg=cfg, compute_dtype=jnp.float32, remat="none")
-    stream = TaskTokenStream(TokenStreamConfig(num_tasks=2, vocab_size=256, seq_len=32))
+def main(smoke: bool = False):
+    steps = 8 if smoke else 30
+    run = RunConfig(
+        # model=None: the token scenario builds its default tiny LM
+        train=TrainConfig(optimizer="adamw", peak_lr=3e-3, warmup_steps=10,
+                          linear_scaling=False, compute_dtype="float32",
+                          remat="none"),
+        # the buffer subsystem is configured here: `policy` picks the
+        # selection/eviction/sampling rule (reservoir | fifo | class_balanced |
+        # grasp) and `tiering='host'` would spill an int8 cold tier beyond HBM
+        rehearsal=RehearsalConfig(num_buckets=2, slots_per_bucket=32,
+                                  num_representatives=4, num_candidates=8,
+                                  mode="async", policy="reservoir",
+                                  label_field="labels"),
+        scenario=ScenarioConfig(name="class_incremental", modality="tokens",
+                                num_tasks=2, epochs_per_task=1,
+                                steps_per_epoch=steps, batch_size=8,
+                                vocab_size=256, seq_len=32, seed=99),
+    )
+    result = ContinualTrainer(run).fit()
 
-    # the buffer subsystem is configured here: `policy` picks the
-    # selection/eviction/sampling rule (reservoir | fifo | class_balanced |
-    # grasp), `tiering='host'` would spill an int8 cold tier beyond HBM, and
-    # label_field/task_field name the record fields once, end to end.
-    rcfg = RehearsalConfig(num_buckets=2, slots_per_bucket=32,
-                           num_representatives=4, num_candidates=8, mode="async",
-                           policy="reservoir", label_field="labels")
-    opt_init, opt_update = make_optimizer(
-        TrainConfig(optimizer="adamw", peak_lr=3e-3, warmup_steps=10,
-                    linear_scaling=False))
-
-    def loss_fn(params, batch):
-        loss, _ = model.loss(params, batch, ctx)
-        return loss, {}
-
-    # the paper's `update` primitive lives inside this jitted step
-    step = make_cl_step(loss_fn, opt_update, rcfg, strategy="rehearsal")
-
-    key = jax.random.PRNGKey(0)
-    params = model.init(key, max_seq=32)
-    item_spec = {"tokens": jax.ShapeDtypeStruct((32,), jnp.int32),
-                 "labels": jax.ShapeDtypeStruct((32,), jnp.int32),
-                 "task": jax.ShapeDtypeStruct((), jnp.int32)}
-    carry = init_carry(params, opt_init(params), item_spec, rcfg)
-
-    g = 0
-    for task in range(2):
-        for s in range(30):
-            m = {k: jnp.asarray(v) for k, v in stream.batch(task, 8, g).items()}
-            carry, metrics = step(carry, m, jax.random.fold_in(key, g))  # m_a inside
-            g += 1
-            if g % 10 == 0:
-                print(f"task={task} step={g} loss={float(metrics['loss']):.4f} "
-                      f"buffer_fill={int(metrics['buffer_fill'])}")
-
-    # forgetting check: task-0 loss after task-1 training
-    ev = {k: jnp.asarray(v) for k, v in stream.eval_set(0, n=16).items()}
-    loss0, _ = model.loss(carry.params, ev, ctx)
+    for h in result.history:
+        print(f"task={h['task']} step={h['step']} loss={h['loss']:.4f}")
+    # forgetting check: the metric matrix holds per-task eval LOSS for token
+    # scenarios — row i is the model after training task i
+    print("eval-loss matrix (row = after task i):")
+    for i in range(2):
+        row = " ".join(f"{result.accuracy_matrix[i, j]:6.4f}"
+                       for j in range(i + 1))
+        print(f"  after task {i}: {row}")
     print(f"task-0 eval loss after training both tasks (with rehearsal): "
-          f"{float(loss0):.4f}")
+          f"{result.accuracy_matrix[1, 0]:.4f}")
+    return result
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny run for CI (exercises the same API path)")
+    main(**vars(ap.parse_args()))

@@ -4,6 +4,7 @@ from repro.configs.base import (
     ModelConfig,
     RehearsalConfig,
     RunConfig,
+    ScenarioConfig,
     ShapeConfig,
     SHAPES,
     TrainConfig,
@@ -61,6 +62,7 @@ __all__ = [
     "ModelConfig",
     "RehearsalConfig",
     "RunConfig",
+    "ScenarioConfig",
     "ShapeConfig",
     "TrainConfig",
     "cell_applicable",

@@ -239,6 +239,47 @@ class RehearsalConfig:
 
 
 # ---------------------------------------------------------------------------
+# Continual-learning scenario (task stream + schedule; see repro.scenario)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ScenarioConfig:
+    """Declarative description of the CL scenario a run trains on.
+
+    ``repro.scenario.get_scenario`` turns this into a concrete ``Scenario``
+    instance (the task stream + eval sets + recommended rehearsal defaults);
+    ``ContinualTrainer`` consumes ``RunConfig.scenario`` directly.
+    """
+
+    name: str = "class_incremental"  # registry key (repro.scenario.SCENARIOS)
+    modality: str = "vision"  # vision | tokens (class_incremental supports both)
+    strategy: str = "rehearsal"  # incremental | from_scratch | rehearsal
+    # --- schedule (the trainer's outer loop; boundaries belong to the scenario) ---
+    num_tasks: int = 4
+    epochs_per_task: int = 1
+    steps_per_epoch: int = 50
+    batch_size: int = 16
+    seed: int = 0
+    # --- stream shape ---
+    classes_per_task: int = 10  # class_incremental / blurry_boundary (vision)
+    num_classes: int = 10  # domain_incremental: shared label space size
+    image_size: int = 32  # vision streams
+    noise: float = 0.35  # vision streams: sample noise around the class prototype
+    vocab_size: int = 256  # tokens modality
+    seq_len: int = 32  # tokens modality
+    domain_shift: float = 1.0  # domain_incremental: per-domain transform strength
+    blur: float = 0.25  # blurry_boundary: blurred fraction of each task's span
+    # Let the scenario fill rehearsal fields still at their dataclass defaults
+    # (policy, num_buckets, label_field/task_field) — see Scenario.apply_defaults.
+    auto_defaults: bool = True
+
+    @property
+    def steps_per_task(self) -> int:
+        return self.epochs_per_task * self.steps_per_epoch
+
+
+# ---------------------------------------------------------------------------
 # Training / runtime
 # ---------------------------------------------------------------------------
 
@@ -285,13 +326,19 @@ class MeshConfig:
 
 @dataclass(frozen=True)
 class RunConfig:
-    """Everything the launcher needs for one run."""
+    """Everything the launcher needs for one run.
 
-    model: ModelConfig
-    shape: ShapeConfig
+    ``model=None`` lets the scenario supply its default model (e.g. the vision
+    scenarios build the paper's reduced CNN for ``ContinualTrainer``); the LM
+    pjit path always passes an explicit ``ModelConfig`` + ``ShapeConfig``.
+    """
+
+    model: Optional[ModelConfig] = None  # ModelConfig | CNNConfig | None
+    shape: Optional[ShapeConfig] = None
     mesh: MeshConfig = MeshConfig()
     train: TrainConfig = TrainConfig()
     rehearsal: RehearsalConfig = RehearsalConfig()
+    scenario: ScenarioConfig = ScenarioConfig()
 
     def replace(self, **kw) -> "RunConfig":
         return dataclasses.replace(self, **kw)

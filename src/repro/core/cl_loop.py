@@ -1,24 +1,25 @@
 """Continual-learning orchestration: the paper's experimental loop (§VI-A).
 
-Runs a sequence of T disjoint tasks, each revisited for E epochs; after finishing task
-T, evaluates the model on every task seen so far and reports the paper's Eq. (1):
+The loop itself now lives in ``repro.scenario.trainer.ContinualTrainer`` — one
+facade composing scenario + step + buffer + prefetch + checkpoint + the Eq.-(1)
+accuracy-matrix evaluation:
 
     accuracy_T = (1/T) * sum_j a_{T,j}
 
-plus per-task wall-clock, which exposes the three runtime regimes (incremental linear,
-from-scratch quadratic, rehearsal linear-with-small-slope — Fig. 5b).
+``run_continual`` remains as a **deprecated shim** mapping the historical
+17-kwarg signature onto trainer overrides (bit-for-bit identical results —
+the pinned parity contract in tests/test_scenario.py). New code should build a
+``Scenario`` + ``ContinualTrainer`` instead.
 """
 from __future__ import annotations
 
-import time
+import warnings
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-
-from repro.core.strategies import TrainCarry, init_carry, make_cl_step
 
 
 @dataclass
@@ -49,63 +50,41 @@ def run_continual(
     label_field: Optional[str] = None,  # None -> rcfg.label_field
     checkpoint_cb: Optional[Callable] = None,
 ) -> CLRunResult:
-    from repro.buffer.api import resolve_field
+    """Deprecated: use ``repro.scenario.ContinualTrainer`` (DESIGN.md §7).
 
-    label_field = resolve_field(label_field, rcfg, "label_field", "label")
-    key = jax.random.PRNGKey(seed)
-    params = init_params_fn(key)
-    # ``seed`` also roots the rehearsal RNG lineage carried in the pipeline slot
-    # (PipelinedRehearsalCarry.key) — sync and pipelined runs of the same seed draw
-    # the identical sample-key sequence (DESIGN.md §3).
-    carry = init_carry(params, init_opt_fn(params), item_spec, rcfg,
-                       label_field=label_field, seed=seed)
+    Thin shim: the historical kwargs become trainer overrides; the trainer's
+    carry backend runs the identical loop (same RNG lineage, same init, same
+    history/eval cadence), so results are bit-for-bit unchanged.
+    """
+    from repro.configs.base import RunConfig, ScenarioConfig
+    from repro.scenario.trainer import ContinualTrainer
 
-    acc = np.zeros((num_tasks, num_tasks))
-    runtimes: List[float] = []
-    history: List[Dict[str, float]] = []
-    global_step = 0
+    warnings.warn(
+        "run_continual is deprecated; build a Scenario and use "
+        "repro.scenario.ContinualTrainer instead (DESIGN.md §7)",
+        DeprecationWarning, stacklevel=2)
 
-    for task in range(num_tasks):
-        if strategy == "from_scratch":
-            # re-train on all accumulated data: fresh model, cumulative sampling,
-            # and proportionally more steps (the quadratic-runtime regime)
-            k = jax.random.fold_in(key, 1000 + task)
-            params = init_params_fn(k)
-            carry = init_carry(params, init_opt_fn(params), item_spec, rcfg,
-                               label_field=label_field, seed=seed)
-            n_steps = epochs_per_task * steps_per_epoch * (task + 1)
-        else:
-            n_steps = epochs_per_task * steps_per_epoch
-
-        t0 = time.perf_counter()
-        for s in range(n_steps):
-            if strategy == "from_scratch":
-                batch = cumulative_batch_fn(task, batch_size, global_step)
-            else:
-                batch = batch_fn(task, batch_size, global_step)
-            batch = {k_: jnp.asarray(v) for k_, v in batch.items()}
-            carry, metrics = step_fn(carry, batch, jax.random.fold_in(key, global_step))
-            global_step += 1
-            if s % max(1, n_steps // 4) == 0:
-                history.append(
-                    {"task": task, "step": s, "loss": float(metrics["loss"])}
-                )
-        jax.block_until_ready(carry.params)
-        runtimes.append(time.perf_counter() - t0)
-
-        for j in range(task + 1):
-            acc[task, j] = eval_fn(carry.params, j)
-        if checkpoint_cb is not None:
-            checkpoint_cb(task, carry)
-
-    final = float(np.mean(acc[num_tasks - 1, :num_tasks]))
-    return CLRunResult(
-        strategy=strategy,
-        accuracy_matrix=acc,
-        task_runtimes=runtimes,
-        final_accuracy=final,
-        history=history,
-    )
+    run = RunConfig(scenario=ScenarioConfig(
+        strategy=strategy, num_tasks=num_tasks, epochs_per_task=epochs_per_task,
+        steps_per_epoch=steps_per_epoch, batch_size=batch_size, seed=seed,
+        auto_defaults=False))
+    # prefetch=False: the legacy contract calls batch_fn synchronously on the
+    # caller's thread, exactly n_steps times, in order — stateful batch_fns
+    # that relied on that stay correct (scenario streams are pure and use the
+    # prefetching path)
+    trainer = ContinualTrainer(run, prefetch=False, overrides={
+        "batch_fn": batch_fn,
+        "cumulative_batch_fn": cumulative_batch_fn,
+        "eval_fn": eval_fn,
+        "init_params_fn": init_params_fn,
+        "init_opt_fn": init_opt_fn,
+        "step_fn": step_fn,
+        "item_spec": item_spec,
+        "rcfg": rcfg,
+        "label_field": label_field,
+        "checkpoint_cb": checkpoint_cb,
+    })
+    return trainer.fit()
 
 
 def topk_accuracy(logits, labels, k: int = 5) -> jnp.ndarray:

@@ -38,6 +38,11 @@ from repro.optim.grad_compress import compressed_psum, plain_psum
 from repro.utils.compat import shard_map
 
 
+# The three training strategies the paper evaluates (§VI-D); validated by
+# make_cl_step and by ContinualTrainer (repro.scenario.trainer).
+STRATEGIES = ("incremental", "from_scratch", "rehearsal")
+
+
 class PipelinedRehearsalCarry(NamedTuple):
     """The double buffer threaded through the train loop (DESIGN.md §3):
 
@@ -145,6 +150,8 @@ def make_cl_step(
     params replicated, gradients explicitly psum'd (optionally int8-compressed).
     ``label_field``/``task_field`` default to the ``RehearsalConfig`` field names.
     """
+    if strategy not in STRATEGIES:
+        raise ValueError(f"unknown strategy {strategy!r}; expected one of {STRATEGIES}")
     rehearse = strategy == "rehearsal" and rcfg is not None and rcfg.enabled
     pipelined = rehearse and rcfg.is_pipelined
     label_field = buffer_api.resolve_field(label_field, rcfg, "label_field", "label")

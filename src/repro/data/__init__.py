@@ -1,14 +1,22 @@
 from repro.data.pipeline import Cursor, Prefetcher
 from repro.data.synthetic import (
+    BlurryBoundaryImages,
+    BlurryStreamConfig,
     ClassIncrementalImages,
+    DomainIncrementalImages,
+    DomainStreamConfig,
     ImageStreamConfig,
     TaskTokenStream,
     TokenStreamConfig,
 )
 
 __all__ = [
+    "BlurryBoundaryImages",
+    "BlurryStreamConfig",
     "ClassIncrementalImages",
     "Cursor",
+    "DomainIncrementalImages",
+    "DomainStreamConfig",
     "ImageStreamConfig",
     "Prefetcher",
     "TaskTokenStream",

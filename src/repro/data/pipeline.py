@@ -29,16 +29,31 @@ class Cursor:
         return cls(task=int(d["task"]), step=int(d["step"]))
 
 
+class _FetchError:
+    """Sentinel carrying an exception from the prefetch thread to ``next()``."""
+
+    def __init__(self, exc: BaseException):
+        self.exc = exc
+
+
 class Prefetcher:
-    """Wraps ``fetch(cursor) -> batch`` with a bounded background prefetch queue."""
+    """Wraps ``fetch(cursor) -> batch`` with a bounded background prefetch queue.
+
+    ``convert`` (e.g. ``jnp.asarray``) is applied to every batch leaf on the
+    background thread, so host→device conversion overlaps training instead of
+    sitting on the critical path (the trainer's Load stage, paper §V).
+    """
 
     def __init__(self, fetch: Callable[[Cursor], Dict[str, np.ndarray]],
                  cursor: Optional[Cursor] = None, depth: int = 2,
-                 sharding=None):
+                 sharding=None, convert: Optional[Callable] = None,
+                 limit: Optional[int] = None):
         self._fetch = fetch
         self.cursor = cursor or Cursor()
         self._depth = depth
         self._sharding = sharding
+        self._convert = convert
+        self._limit = limit  # max fetches; None = unbounded (stop() bounds it)
         self._q: "queue.Queue" = queue.Queue(maxsize=depth)
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
@@ -52,8 +67,16 @@ class Prefetcher:
 
     def _worker(self, start: Cursor):
         cur = Cursor(start.task, start.step)
+        fetched = 0
         while not self._stop.is_set():
-            batch = self._fetch(cur)
+            if self._limit is not None and fetched >= self._limit:
+                return  # don't speculate past the consumer's last step
+            try:
+                batch = self._fetch(cur)
+                if self._convert is not None:
+                    batch = {k: self._convert(v) for k, v in batch.items()}
+            except BaseException as e:  # surface in next(), don't hang the consumer
+                batch = _FetchError(e)
             item = (Cursor(cur.task, cur.step), batch)
             while not self._stop.is_set():
                 try:
@@ -61,6 +84,9 @@ class Prefetcher:
                     break
                 except queue.Full:
                     continue
+            if isinstance(batch, _FetchError):
+                return
+            fetched += 1
             cur.step += 1
 
     def start(self):
@@ -75,10 +101,17 @@ class Prefetcher:
     def next(self):
         if self._thread is None:  # synchronous fallback
             batch = self._fetch(self.cursor)
+            if self._convert is not None:
+                batch = {k: self._convert(v) for k, v in batch.items()}
             cur = Cursor(self.cursor.task, self.cursor.step)
             self.cursor.step += 1
             return cur, self._place(batch)
         cur, batch = self._q.get()
+        if isinstance(batch, _FetchError):
+            # the producer thread exited; reset so a caller that catches the
+            # error and retries hits the synchronous path, not a dead queue
+            self.stop()
+            raise batch.exc
         self.cursor = Cursor(cur.task, cur.step + 1)
         return cur, self._place(batch)
 

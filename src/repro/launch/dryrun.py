@@ -14,6 +14,7 @@ import time
 import traceback
 
 import jax
+import jax.numpy as jnp
 
 from repro.analysis import roofline
 from repro.configs import ARCHS, SHAPES, cell_applicable, get_config
@@ -21,6 +22,63 @@ from repro.configs.base import RehearsalConfig, RunConfig, TrainConfig
 from repro.launch.mesh import make_production_mesh
 from repro.launch.steps import build_step
 from repro.utils.compat import cost_analysis, set_mesh
+
+
+def rehearsal_buffer_cost(built, rcfg) -> dict:
+    """Per-DP-worker rehearsal-buffer memory model, tiering-aware.
+
+    Flat (``tiering='off'``): ``K × slots`` raw rows resident in HBM — exactly
+    what the compiled step allocates. Tiered (``'host'``): the hot tier plus the
+    raw demotion staging rows stay in HBM, while the cold tier holds
+    ``K × cold_slots`` *int8* rows in host memory (per float leaf: 1 byte per
+    element + a 4-byte row scale — ``core.compression.compressed_spec``; int
+    leaves stored raw). The cold tier never appears in the compiled HLO (it is
+    host-resident), so it must be modeled here rather than read from XLA's
+    memory analysis.
+    """
+    if built.meta.get("mode", "off") == "off":
+        return {"mode": "off", "hot_hbm_bytes": 0, "cold_host_bytes": 0,
+                "total_bytes": 0, "rows_per_bucket": 0}
+    reps_s = built.args[3]  # [n_dp, r, ...] record structure
+    raw_row = cold_row = 0
+    for leaf in jax.tree_util.tree_leaves(reps_s):
+        shape = leaf.shape[2:]
+        n = 1
+        for d in shape:
+            n *= d
+        itemsize = jnp.dtype(leaf.dtype).itemsize
+        raw_row += n * itemsize
+        if jnp.issubdtype(leaf.dtype, jnp.floating):
+            cold_row += n + 4  # int8 q + one f32 scale per row-leaf
+        else:
+            cold_row += n * itemsize
+    k = rcfg.num_buckets
+    hot_slots = built.meta["slots_per_bucket"]
+    if getattr(rcfg, "tiered", False):
+        cold_slots = rcfg.resolved_cold_slots
+        stage = rcfg.resolved_demote_stage
+        hot = k * hot_slots * raw_row + stage * raw_row
+        cold = k * cold_slots * cold_row
+        rows = hot_slots + cold_slots
+    else:
+        cold_slots = stage = 0
+        hot = k * hot_slots * raw_row
+        cold = 0
+        rows = hot_slots
+    return {
+        "mode": "tiered" if cold_slots else "flat",
+        "raw_row_bytes": raw_row,
+        "cold_row_bytes": cold_row,
+        "hot_slots_per_bucket": hot_slots,
+        "cold_slots_per_bucket": cold_slots,
+        "demote_stage_rows": stage,
+        "hot_hbm_bytes": int(hot),
+        "cold_host_bytes": int(cold),
+        "total_bytes": int(hot + cold),
+        "rows_per_bucket": rows,
+        # capacity bought per HBM byte vs the flat layout at the same hot size
+        "capacity_multiplier": round(rows / max(1, hot_slots), 3),
+    }
 
 
 def run_cell(
@@ -41,6 +99,8 @@ def run_cell(
     param_dtype: str = "float32",
     zero1: bool = False,
     kv_dtype: str = "bfloat16",
+    tiering: str = "off",
+    cold_slots: int = 0,
 ) -> dict:
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
@@ -54,7 +114,8 @@ def run_cell(
                            exchange=exchange, capacity=capacity,
                            compute_dtype=compute_dtype, scan_layers=scan_layers,
                            attn=attn, sp=sp, param_dtype=param_dtype, zero1=zero1,
-                           kv_dtype=kv_dtype)
+                           kv_dtype=kv_dtype, tiering=tiering,
+                           cold_slots=cold_slots)
     record["cell"] = cell_id
     os.makedirs(out_dir, exist_ok=True)
     with open(os.path.join(out_dir, cell_id + ".json"), "w") as f:
@@ -79,10 +140,14 @@ def _compile_cell(
     param_dtype: str = "float32",
     zero1: bool = False,
     kv_dtype: str = "bfloat16",
+    tiering: str = "off",
+    cold_slots: int = 0,
 ) -> dict:
     if capacity != 1.25:
         cfg = dataclasses.replace(cfg, capacity_factor=capacity)
     mesh_name = "multi" if multi_pod else "single"
+    # The compiled step always carries the flat (hot/HBM) buffer — the cold
+    # tier is host-resident and enters only the analytic cost model below.
     run = RunConfig(
         model=cfg,
         shape=shape,
@@ -134,6 +199,12 @@ def _compile_cell(
         total_params=cfg.param_count(),
         meta=built.meta,
     )
+    if shape.kind == "train":
+        cost_rcfg = dataclasses.replace(
+            run.rehearsal, tiering=tiering,
+            hot_slots=built.meta.get("slots_per_bucket", 0),
+            cold_slots=cold_slots)
+        record["rehearsal_buffer"] = rehearsal_buffer_cost(built, cost_rcfg)
     if mem is not None:
         try:
             record["memory_analysis"] = {
@@ -252,6 +323,10 @@ def main():
     ap.add_argument("--zero1", action="store_true", help="shard optimizer state over data")
     ap.add_argument("--kv-dtype", default="bfloat16",
                     help="decode-cache storage dtype (bfloat16 | float8_e4m3fn)")
+    ap.add_argument("--tiering", default="off", choices=["off", "host"],
+                    help="model a host int8 cold tier in the buffer cost model")
+    ap.add_argument("--cold-slots", type=int, default=0,
+                    help="cold rows/bucket for the tiered cost model (0 -> 3x hot)")
     ap.add_argument("--method", default="scan", choices=["scan", "scaled"],
                     help="scan: full-depth compile proof; scaled: two-depth unrolled "
                          "fit for accurate roofline costs")
@@ -283,6 +358,7 @@ def main():
                         capacity=args.capacity, compute_dtype=args.compute_dtype,
                         attn=args.attn, sp=args.sp, param_dtype=args.param_dtype,
                         zero1=args.zero1, kv_dtype=args.kv_dtype,
+                        tiering=args.tiering, cold_slots=args.cold_slots,
                         out_dir=args.out, tag=args.tag,
                     )
                     if rec["status"] == "skipped":

@@ -1,9 +1,11 @@
 """Production training entry: continual LM training with distributed rehearsal.
 
-One code path from laptop to pod: the pjit step builder is mesh-parameterised, so
-``--mesh 1x1`` runs the same program single-device (CPU) that ``--mesh 16x16`` runs on
-a pod. The paper's CL scenario drives the loop: T disjoint tasks, E epochs each,
-rehearsal buffer augmenting every mini-batch with globally sampled representatives.
+One code path from laptop to pod, now routed through the scenario-first API:
+the CLI builds a ``RunConfig`` (+ ``ScenarioConfig``) and a token
+class-incremental scenario, and ``ContinualTrainer``'s pjit backend does what
+this file used to hand-wire — ``build_train_step``, state materialisation,
+prefetching, checkpointing, per-task eval (DESIGN.md §7). ``--mesh 1x1`` runs
+the same program single-device (CPU) that ``--mesh 16x16`` runs on a pod.
 
 Example (CPU, reduced arch):
   PYTHONPATH=src python -m repro.launch.train --arch smollm-135m --reduced \\
@@ -12,64 +14,22 @@ Example (CPU, reduced arch):
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.checkpoint import CheckpointManager
-from repro.configs import SHAPES, get_config, get_reduced
-from repro.configs.base import RehearsalConfig, RunConfig, ShapeConfig, TrainConfig
-from repro.core import distributed as dist
-from repro.core import rehearsal as rb
-from repro.data import Prefetcher, TaskTokenStream, TokenStreamConfig
+from repro.configs import get_config, get_reduced
+from repro.configs.base import (
+    RehearsalConfig,
+    RunConfig,
+    ScenarioConfig,
+    ShapeConfig,
+    TrainConfig,
+)
 from repro.launch.mesh import make_mesh
-from repro.launch.steps import build_train_step, slots_for_budget
-from repro.models import StackCtx, build_model
-from repro.optim import make_optimizer
+from repro.scenario import ContinualTrainer, TokenClassIncremental
+from repro.scenario.trainer import materialize_state  # noqa: F401  (back-compat)
 from repro.utils.logging import get_logger
-from repro.utils.trees import tree_count_params
-from repro.utils.compat import set_mesh
 
 log = get_logger("repro.train")
-
-
-def materialize_state(built, run, mesh, key, exchange="full"):
-    """Turn the BuiltStep's abstract args into real (sharded) arrays."""
-    cfg, shape, rcfg = run.model, run.shape, run.rehearsal
-    model = build_model(cfg)
-    params_sh, opt_sh = built.shardings[0], built.shardings[1]
-    params = jax.jit(lambda k: model.init(k, shape.seq_len),
-                     out_shardings=params_sh)(key)
-    opt_init, _ = make_optimizer(run.train, n_workers=built.meta["n_dp"])
-    opt = jax.jit(opt_init, out_shardings=opt_sh)(params)
-    if built.meta["mode"] == "off":
-        return params, opt, None, None, None
-    n_dp = built.meta["n_dp"]
-    buffer_struct, reps_struct, valid_struct = built.args[2], built.args[3], built.args[4]
-    # proper policy init (e.g. GRASP's +inf distance sentinels), not plain zeros
-    item_s = jax.tree_util.tree_map(
-        lambda s: jax.ShapeDtypeStruct(s.shape[2:], s.dtype), reps_struct)
-    buffer = jax.jit(
-        lambda: tuple(dist.init_distributed_buffer(
-            item_s, rcfg.num_buckets, built.meta["slots_per_bucket"], n_dp,
-            rcfg.policy)),
-        out_shardings=tuple(built.shardings[2]))()
-    def init_reps():
-        def leaf(path, s):
-            name = path[-1].key if hasattr(path[-1], "key") else ""
-            z = jnp.zeros(s.shape, s.dtype)
-            # invalid until the first issue: labels masked -> zero loss
-            return z - 1 if name in (rcfg.label_field, "label") else z
-
-        return jax.tree_util.tree_map_with_path(leaf, reps_struct)
-
-    reps = jax.jit(init_reps, out_shardings=built.shardings[3])()
-    valid = jax.jit(lambda: jnp.zeros(valid_struct.shape, bool),
-                    out_shardings=built.shardings[4])()
-    return params, opt, rb.BufferState(*buffer), reps, valid
 
 
 def main(argv=None):
@@ -96,6 +56,7 @@ def main(argv=None):
     d, m = (int(x) for x in args.mesh.split("x"))
     mesh = make_mesh((d, m), ("data", "model"))
     shape = ShapeConfig("train_cli", args.seq_len, args.global_batch, "train")
+    vocab_active = min(cfg.vocab_size, 2048)
     run = RunConfig(
         model=cfg,
         shape=shape,
@@ -103,62 +64,30 @@ def main(argv=None):
                           warmup_steps=20, linear_scaling=False,
                           compute_dtype="float32" if m * d == 1 else "bfloat16"),
         rehearsal=RehearsalConfig(num_buckets=max(args.tasks, 2), mode=args.mode),
+        scenario=ScenarioConfig(
+            name="class_incremental", modality="tokens",
+            strategy="rehearsal" if args.mode != "off" else "incremental",
+            num_tasks=args.tasks, epochs_per_task=1,
+            steps_per_epoch=args.steps_per_task, batch_size=args.global_batch,
+            seed=args.seed, vocab_size=vocab_active, seq_len=args.seq_len,
+            auto_defaults=False),  # the CLI's rehearsal flags are authoritative
     )
+    scenario = TokenClassIncremental(run.scenario)
 
-    vocab_active = min(cfg.vocab_size, 2048)
-    stream = TaskTokenStream(TokenStreamConfig(
-        num_tasks=args.tasks, vocab_size=vocab_active, seq_len=args.seq_len,
-        seed=args.seed))
-
-    with set_mesh(mesh):
-        built = build_train_step(run, mesh, exchange=args.exchange, donate=False)
-        log.info("arch=%s params=%.1fM mesh=%s mode=%s slots/bucket=%d",
-                 cfg.name, cfg.param_count() / 1e6, dict(mesh.shape), args.mode,
-                 built.meta["slots_per_bucket"])
-        key = jax.random.PRNGKey(args.seed)
-        state = materialize_state(built, run, mesh, key, args.exchange)
-        params, opt, buffer, reps, valid = state
-
-        ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
-        g = 0
-        t_start = time.time()
-        for task in range(args.tasks):
-            def fetch(cur, _task=task):
-                b = stream.batch(_task, args.global_batch, cur.step)
-                return {"tokens": b["tokens"], "labels": b["labels"],
-                        "task": b["task"]}
-
-            pf = Prefetcher(fetch).start()
-            for s in range(args.steps_per_task):
-                _, batch = pf.next()
-                batch = {k: jnp.asarray(v) for k, v in batch.items()}
-                kstep = jax.random.fold_in(key, g)
-                if built.meta["mode"] == "off":
-                    params, opt, metrics = built.fn(params, opt, batch, kstep)
-                else:
-                    params, opt, buffer, reps, valid, metrics = built.fn(
-                        params, opt, buffer, reps, valid, batch, kstep)
-                g += 1
-                if g % args.log_every == 0:
-                    log.info("task=%d step=%d loss=%.4f lr=%.2e %s",
-                             task, g, float(metrics["loss"]), float(metrics["lr"]),
-                             f"fill={int(jnp.sum(buffer.counts))}" if buffer is not None
-                             else "")
-                if ckpt and g % args.ckpt_every == 0:
-                    ckpt.save(g, {"params": params, "opt": opt}, {"cursor": g})
-            pf.stop()
-
-            # per-task eval on all tasks seen so far (paper Eq. 1 on loss)
-            model = build_model(cfg)
-            ctx = StackCtx(cfg=cfg, compute_dtype=jnp.float32, remat="none")
-            for j in range(task + 1):
-                ev = stream.eval_set(j, n=16)
-                eb = {k: jnp.asarray(v) for k, v in ev.items()}
-                l, _ = model.loss(params, eb, ctx)
-                log.info("eval after task %d on task %d: loss=%.4f", task, j, float(l))
-        if ckpt:
-            ckpt.wait()
-        log.info("done: %d steps in %.1fs", g, time.time() - t_start)
+    log.info("arch=%s params=%.1fM mesh=%s mode=%s",
+             cfg.name, cfg.param_count() / 1e6, dict(mesh.shape), args.mode)
+    trainer = ContinualTrainer(run, scenario, mesh=mesh, exchange=args.exchange,
+                               ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+                               log_every=args.log_every)
+    t_start = time.time()
+    res = trainer.fit()
+    for task in range(args.tasks):
+        for j in range(task + 1):
+            log.info("eval after task %d on task %d: loss=%.4f", task, j,
+                     res.accuracy_matrix[task, j])
+    steps = args.tasks * args.steps_per_task
+    log.info("done: %d steps in %.1fs", steps, time.time() - t_start)
+    return res
 
 
 if __name__ == "__main__":

@@ -1,0 +1,43 @@
+"""Scenario-first continual-learning API (DESIGN.md §7).
+
+    from repro.scenario import ContinualTrainer
+    from repro.configs.base import RunConfig, ScenarioConfig
+
+    run = RunConfig(scenario=ScenarioConfig(name="domain_incremental",
+                                            num_tasks=4, steps_per_epoch=50))
+    result = ContinualTrainer(run).fit()   # accuracy matrix, Eq.-1 metric
+
+A ``Scenario`` owns the task stream (boundaries, cursor-resumable batches,
+eval sets) plus recommended rehearsal defaults; ``ContinualTrainer`` composes
+it with a ``RunConfig`` into the full training loop — the single entry path
+that replaced ``run_continual`` / the hand-wired ``launch.train`` loop / the
+benchmark harness wiring.
+"""
+from repro.scenario.base import (
+    Problem,
+    SCENARIOS,
+    Scenario,
+    get_scenario,
+    register_scenario,
+)
+from repro.scenario.scenarios import (
+    BlurryBoundary,
+    ClassIncremental,
+    DomainIncremental,
+    TokenClassIncremental,
+)
+from repro.scenario.trainer import ContinualTrainer, materialize_state
+
+__all__ = [
+    "BlurryBoundary",
+    "ClassIncremental",
+    "ContinualTrainer",
+    "DomainIncremental",
+    "Problem",
+    "SCENARIOS",
+    "Scenario",
+    "TokenClassIncremental",
+    "get_scenario",
+    "materialize_state",
+    "register_scenario",
+]

@@ -1,0 +1,135 @@
+"""The Scenario protocol: one object owns the continual-learning task stream.
+
+A scenario is the single source of truth for
+  * the task stream — boundaries, deterministic cursor-resumable ``batch``,
+    per-task ``eval_set`` (the fault-tolerance contract of ``repro.data``);
+  * the record schema — ``item_spec`` + the ``label_field``/``task_field``
+    names the buffer subsystem buckets and masks by (``task_field=None``
+    declares that no clean task id exists, and bucketing falls back to labels);
+  * recommended rehearsal defaults — the policy/bucketing combination that
+    makes sense for this stream shape (``recommended()``/``apply_defaults``);
+  * the model coupling — ``build_problem(run)`` turns a ``RunConfig`` into the
+    (init_params, loss, eval) triple the trainer composes into a step.
+
+``ContinualTrainer`` (repro.scenario.trainer) is the only consumer: it wires a
+scenario + ``RunConfig`` through ``make_cl_step``/``build_train_step``, buffer
+init, prefetching, checkpointing, and the accuracy-matrix evaluation — the one
+entry path that used to be three (DESIGN.md §7).
+"""
+from __future__ import annotations
+
+import abc
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import numpy as np
+
+from repro.configs.base import RehearsalConfig, ScenarioConfig
+
+
+class Problem(NamedTuple):
+    """The model side of a run, as the trainer consumes it.
+
+    ``eval_fn(params, task) -> float`` is the scenario-defined per-task metric
+    (top-1 accuracy for the vision scenarios, mean loss for token streams —
+    higher-is-better is NOT assumed by the trainer, only recorded).
+    """
+
+    init_params_fn: Callable[[Any], Any]  # key -> params
+    loss_fn: Callable[[Any, Dict], Any]  # (params, batch) -> (loss, metrics)
+    eval_fn: Callable[[Any, int], float]  # (params, task) -> metric
+
+
+class Scenario(abc.ABC):
+    """Continual-learning scenario: task stream + schema + defaults + model."""
+
+    name: str = "scenario"
+    label_field: str = "label"
+    task_field: Optional[str] = "task"  # None: no clean task id in the stream
+
+    # ------------------------------------------------------------------ stream
+    @property
+    @abc.abstractmethod
+    def num_tasks(self) -> int:
+        ...
+
+    @property
+    @abc.abstractmethod
+    def item_spec(self) -> Dict[str, Any]:
+        """Per-record ShapeDtypeStructs (no batch dim) — the buffer layout."""
+
+    @abc.abstractmethod
+    def batch(self, task: int, batch_size: int, cursor: int) -> Dict[str, np.ndarray]:
+        """Deterministic mini-batch: pure function of (task, cursor)."""
+
+    def cumulative_batch(self, upto_task: int, batch_size: int, cursor: int):
+        """Uniform draw over tasks [0, upto_task] (the from-scratch baseline).
+        Scenarios without a meaningful cumulative view may raise."""
+        raise NotImplementedError(
+            f"scenario {self.name!r} does not support the from_scratch strategy"
+        )
+
+    @abc.abstractmethod
+    def eval_set(self, task: int) -> Dict[str, np.ndarray]:
+        """Held-out per-task eval batch (accuracy-matrix column ``task``)."""
+
+    # ---------------------------------------------------------------- defaults
+    def recommended(self) -> Dict[str, Any]:
+        """RehearsalConfig field recommendations for this stream shape."""
+        return {}
+
+    def apply_defaults(self, rcfg: RehearsalConfig) -> RehearsalConfig:
+        """Fill in recommended rehearsal fields the user left at their
+        dataclass defaults (explicit non-default settings always win)."""
+        updates = {}
+        for f in dataclasses.fields(RehearsalConfig):
+            if f.name in self.recommended() and getattr(rcfg, f.name) == f.default:
+                updates[f.name] = self.recommended()[f.name]
+        return dataclasses.replace(rcfg, **updates) if updates else rcfg
+
+    # ------------------------------------------------------------------ model
+    @abc.abstractmethod
+    def build_problem(self, run) -> Problem:
+        """Build (init_params, loss, eval) from ``RunConfig`` (scenario default
+        model when ``run.model is None``)."""
+
+    # ------------------------------------------------------------------- misc
+    @property
+    def buffer_task_field(self) -> str:
+        """The field the buffer buckets by: the task id when one exists, else
+        the label (the task_field-free path — blurry boundaries)."""
+        return self.task_field if self.task_field is not None else self.label_field
+
+    def __repr__(self) -> str:
+        return f"{type(self).__name__}(num_tasks={self.num_tasks})"
+
+
+# ---------------------------------------------------------------------------
+# Registry: ScenarioConfig.name -> factory(ScenarioConfig) -> Scenario
+# ---------------------------------------------------------------------------
+
+SCENARIOS: Dict[str, Callable[[ScenarioConfig], Scenario]] = {}
+
+
+def register_scenario(name: str, factory: Callable[[ScenarioConfig], Scenario]):
+    SCENARIOS[name] = factory
+    return factory
+
+
+def get_scenario(cfg, **overrides) -> Scenario:
+    """Resolve a scenario: a Scenario instance passes through; a name or a
+    ``ScenarioConfig`` goes through the registry (``overrides`` patch the
+    config first)."""
+    if isinstance(cfg, Scenario):
+        return cfg
+    if isinstance(cfg, str):
+        cfg = ScenarioConfig(name=cfg)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    try:
+        factory = SCENARIOS[cfg.name]
+    except KeyError:
+        raise KeyError(
+            f"unknown scenario {cfg.name!r}; registered: {sorted(SCENARIOS)}"
+        ) from None
+    return factory(cfg)

@@ -1,0 +1,261 @@
+"""The shipped scenarios: class-incremental (paper §VI-A), domain-incremental,
+and blurry-boundary — each pairing a deterministic stream from ``repro.data``
+with the rehearsal defaults that fit its shape (DESIGN.md §7).
+
+``class_incremental`` is pinned to reproduce ``run_continual``'s results
+bit-for-bit (tests/test_scenario.py::test_trainer_matches_run_continual); the
+other two exist so scenario×policy combinations are expressible without
+hand-wiring a fourth copy of the trainer plumbing.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import resnet50_cl
+from repro.configs.base import ScenarioConfig
+from repro.data import (
+    BlurryBoundaryImages,
+    BlurryStreamConfig,
+    ClassIncrementalImages,
+    DomainIncrementalImages,
+    DomainStreamConfig,
+    ImageStreamConfig,
+    TaskTokenStream,
+    TokenStreamConfig,
+)
+from repro.scenario.base import Problem, Scenario, register_scenario
+
+
+def _stream_seed(cfg: ScenarioConfig) -> int:
+    """Vision stream seed derived from the run seed, offset so data and model
+    init never share a seed (tokens thread cfg.seed into TokenStreamConfig the
+    same way): seed sweeps must change the data, not just the init."""
+    return 1234 + cfg.seed
+
+
+# ---------------------------------------------------------------------------
+# Vision scenarios (CNN classifier, top-1 accuracy matrix)
+# ---------------------------------------------------------------------------
+
+
+class _VisionScenario(Scenario):
+    """Shared vision plumbing: CNN problem + top-1 accuracy eval."""
+
+    label_field = "label"
+    stream: Any  # set by subclass __init__
+
+    @property
+    def num_tasks(self) -> int:
+        return self.stream.cfg.num_tasks
+
+    @property
+    def num_classes(self) -> int:
+        return self.stream.num_classes
+
+    @property
+    def item_spec(self) -> Dict[str, Any]:
+        c = self.stream.cfg
+        spec = {
+            "images": jax.ShapeDtypeStruct((c.image_size, c.image_size, c.channels),
+                                           jnp.float32),
+            "label": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+        if self.task_field is not None:
+            spec[self.task_field] = jax.ShapeDtypeStruct((), jnp.int32)
+        return spec
+
+    def batch(self, task, batch_size, cursor):
+        return self.stream.batch(task, batch_size, cursor)
+
+    def cumulative_batch(self, upto_task, batch_size, cursor):
+        return self.stream.cumulative_batch(upto_task, batch_size, cursor)
+
+    def eval_set(self, task):
+        return self.stream.eval_set(task)
+
+    def build_problem(self, run) -> Problem:
+        from repro.core.cl_loop import topk_accuracy
+        from repro.models.model_zoo import cross_entropy
+        from repro.models.resnet import apply_cnn, init_cnn
+
+        ccfg = run.model if run.model is not None else resnet50_cl.reduced(
+            num_classes=self.num_classes)
+        if getattr(ccfg, "num_classes", self.num_classes) < self.num_classes:
+            raise ValueError(
+                f"model has {ccfg.num_classes} classes but scenario "
+                f"{self.name!r} emits labels up to {self.num_classes - 1}"
+            )
+
+        def loss_fn(params, batch):
+            logits = apply_cnn(params, batch["images"], ccfg)
+            return cross_entropy(logits[:, None, :],
+                                 batch[self.label_field][:, None]), {}
+
+        eval_logits = jax.jit(lambda p, im: apply_cnn(p, im, ccfg))
+
+        def eval_fn(params, task):
+            ev = self.eval_set(task)
+            return float(topk_accuracy(eval_logits(params, jnp.asarray(ev["images"])),
+                                       jnp.asarray(ev[self.label_field]), k=1))
+
+        return Problem(lambda k: init_cnn(k, ccfg), loss_fn, eval_fn)
+
+
+class ClassIncremental(_VisionScenario):
+    """The paper's scenario: T disjoint tasks, each introducing new classes.
+    Buckets by task id, reservoir policy — exactly Algorithm 1."""
+
+    name = "class_incremental"
+    task_field = "task"
+
+    def __init__(self, cfg: Optional[ScenarioConfig] = None, stream=None):
+        cfg = cfg or ScenarioConfig()
+        self.stream = stream if stream is not None else ClassIncrementalImages(
+            ImageStreamConfig(
+                num_tasks=cfg.num_tasks, classes_per_task=cfg.classes_per_task,
+                image_size=cfg.image_size, noise=cfg.noise, seed=_stream_seed(cfg)))
+
+    def recommended(self):
+        return {"num_buckets": self.num_tasks, "policy": "reservoir",
+                "label_field": "label", "task_field": "task"}
+
+
+class DomainIncremental(_VisionScenario):
+    """One label space, T input distributions (per-domain style transform).
+    Buckets by domain; the class-balanced policy keeps per-class coverage
+    inside each domain bucket, which reservoir sampling does not guarantee
+    when domains repeat classes unevenly."""
+
+    name = "domain_incremental"
+    task_field = "task"
+
+    def __init__(self, cfg: Optional[ScenarioConfig] = None, stream=None):
+        cfg = cfg or ScenarioConfig(name="domain_incremental")
+        self.stream = stream if stream is not None else DomainIncrementalImages(
+            DomainStreamConfig(
+                num_tasks=cfg.num_tasks, num_classes=cfg.num_classes,
+                image_size=cfg.image_size, noise=cfg.noise,
+                domain_shift=cfg.domain_shift, seed=_stream_seed(cfg)))
+
+    def recommended(self):
+        return {"num_buckets": self.num_tasks, "policy": "class_balanced",
+                "label_field": "label", "task_field": "task"}
+
+
+class BlurryBoundary(_VisionScenario):
+    """Probabilistic task mixing near boundaries; batches carry NO task id, so
+    the buffer buckets by label (the task_field-free path): K = num_classes,
+    one bucket per class — the paper's vision bucketing mode, minus the clean
+    task signal."""
+
+    name = "blurry_boundary"
+    task_field = None
+
+    def __init__(self, cfg: Optional[ScenarioConfig] = None, stream=None):
+        cfg = cfg or ScenarioConfig(name="blurry_boundary")
+        self.stream = stream if stream is not None else BlurryBoundaryImages(
+            BlurryStreamConfig(
+                num_tasks=cfg.num_tasks, classes_per_task=cfg.classes_per_task,
+                image_size=cfg.image_size, noise=cfg.noise,
+                task_len=cfg.steps_per_task, blur=cfg.blur,
+                seed=_stream_seed(cfg)))
+
+    def recommended(self):
+        # task_field -> the label field: bucketing keyed on class ids
+        return {"num_buckets": self.num_classes, "policy": "reservoir",
+                "label_field": "label", "task_field": "label"}
+
+    def cumulative_batch(self, upto_task, batch_size, cursor):
+        raise NotImplementedError(
+            "blurry_boundary has no clean per-task view to accumulate "
+            "(no task ids) — the from_scratch strategy does not apply")
+
+
+# ---------------------------------------------------------------------------
+# Token (LM) class-incremental: the quickstart / CLI-trainer stream
+# ---------------------------------------------------------------------------
+
+
+class TokenClassIncremental(Scenario):
+    """Class-incremental over token distributions: each task a disjoint Markov-1
+    vocab range (the LM analogue of new classes). Metric: per-task eval LOSS
+    (lower is better) — recorded in the same matrix slot accuracy occupies for
+    the vision scenarios."""
+
+    name = "class_incremental"
+    label_field = "labels"
+    task_field = "task"
+
+    def __init__(self, cfg: Optional[ScenarioConfig] = None, stream=None,
+                 eval_n: int = 16):
+        cfg = cfg or ScenarioConfig(modality="tokens")
+        self.cfg = cfg
+        self.eval_n = eval_n
+        self.stream = stream if stream is not None else TaskTokenStream(TokenStreamConfig(
+            num_tasks=cfg.num_tasks, vocab_size=cfg.vocab_size,
+            seq_len=cfg.seq_len, seed=cfg.seed))
+
+    @property
+    def num_tasks(self) -> int:
+        return self.stream.cfg.num_tasks
+
+    @property
+    def seq_len(self) -> int:
+        return self.stream.cfg.seq_len
+
+    @property
+    def item_spec(self) -> Dict[str, Any]:
+        s = self.seq_len
+        return {"tokens": jax.ShapeDtypeStruct((s,), jnp.int32),
+                "labels": jax.ShapeDtypeStruct((s,), jnp.int32),
+                "task": jax.ShapeDtypeStruct((), jnp.int32)}
+
+    def batch(self, task, batch_size, cursor):
+        return self.stream.batch(task, batch_size, cursor)
+
+    def eval_set(self, task):
+        return self.stream.eval_set(task, n=self.eval_n)
+
+    def recommended(self):
+        return {"num_buckets": self.num_tasks, "policy": "reservoir",
+                "label_field": "labels", "task_field": "task"}
+
+    def build_problem(self, run) -> Problem:
+        from repro.configs import get_reduced
+        from repro.models import StackCtx, build_model
+
+        cfg = run.model
+        if cfg is None:
+            base = get_reduced("smollm-135m")
+            cfg = type(base)(**{**base.__dict__,
+                                "vocab_size": self.stream.cfg.vocab_size,
+                                "num_layers": 2})
+        model = build_model(cfg)
+        dtype = jnp.float32 if run.train.compute_dtype == "float32" else jnp.bfloat16
+        ctx = StackCtx(cfg=cfg, compute_dtype=dtype, remat=run.train.remat)
+        eval_ctx = StackCtx(cfg=cfg, compute_dtype=jnp.float32, remat="none")
+
+        def loss_fn(params, batch):
+            loss, _ = model.loss(params, batch, ctx)
+            return loss, {}
+
+        def eval_fn(params, task):
+            ev = {k: jnp.asarray(v) for k, v in self.eval_set(task).items()}
+            loss, _ = model.loss(params, ev, eval_ctx)
+            return float(loss)
+
+        return Problem(lambda k: model.init(k, self.seq_len), loss_fn, eval_fn)
+
+
+def _class_incremental_factory(cfg: ScenarioConfig) -> Scenario:
+    if cfg.modality == "tokens":
+        return TokenClassIncremental(cfg)
+    return ClassIncremental(cfg)
+
+
+register_scenario("class_incremental", _class_incremental_factory)
+register_scenario("domain_incremental", DomainIncremental)
+register_scenario("blurry_boundary", BlurryBoundary)

@@ -1,0 +1,458 @@
+"""ContinualTrainer: the one entry path for continual training.
+
+``ContinualTrainer(run, scenario)`` composes everything the three historical
+entry paths (``core.cl_loop.run_continual``, the hand-wired pjit loop in
+``launch.train``, ``benchmarks.common.Harness``) each re-plumbed by hand:
+
+    RunConfig + Scenario
+        │
+        ├─ scenario.apply_defaults(run.rehearsal)   # policy/bucketing defaults
+        ├─ scenario.build_problem(run)              # init_params / loss / eval
+        ├─ make_cl_step  (carry backend)  ──or──  build_train_step (pjit backend)
+        ├─ init_carry / materialize_state           # buffer + pipeline slot init
+        ├─ Prefetcher                               # background Load stage
+        ├─ CheckpointManager                        # per-task / every-N-steps
+        └─ accuracy-matrix evaluation               # paper Eq. (1)
+
+The carry backend reproduces ``run_continual`` bit-for-bit on the
+class-incremental scenario (the pinned parity contract,
+tests/test_scenario.py); ``run_continual`` itself is now a deprecated shim
+over this class. The pjit backend absorbs ``launch.train``'s
+``materialize_state`` wiring and serves the mesh-parameterised LM path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.buffer.api import resolve_field
+from repro.configs.base import RunConfig
+from repro.data import Cursor, Prefetcher
+from repro.scenario.base import Scenario, get_scenario
+
+# Escape-hatch keys honoured by ``ContinualTrainer(..., overrides=...)`` — the
+# documented bridge for the run_continual shim and bespoke harnesses. Anything
+# not overridden is composed from (RunConfig, Scenario).
+OVERRIDE_KEYS = frozenset({
+    "batch_fn", "cumulative_batch_fn", "eval_fn", "init_params_fn",
+    "init_opt_fn", "step_fn", "loss_fn", "item_spec", "rcfg", "label_field",
+    "checkpoint_cb",
+})
+
+
+def _log():
+    from repro.utils.logging import get_logger
+    return get_logger("repro.trainer")
+
+
+class ContinualTrainer:
+    """Scenario-first continual-training facade (DESIGN.md §7).
+
+    Args:
+      run: the ``RunConfig``; ``run.scenario`` holds the schedule (tasks,
+        epochs, steps, batch size, seed, strategy) and names the scenario when
+        ``scenario`` is not passed explicitly.
+      scenario: a ``Scenario`` instance, a registry name, or None (resolve
+        from ``run.scenario``).
+      mesh: when given, train through the pjit step builder
+        (``launch.steps.build_train_step``) instead of the carry-based
+        ``make_cl_step`` — the production LM path.
+      exchange: rehearsal exchange mode (full | pod_local | local).
+      ckpt_dir / ckpt_every: checkpointing; the carry backend saves per task,
+        the pjit backend every ``ckpt_every`` steps (0 = per task only).
+      prefetch: stage batches on a background thread (identical values — the
+        streams are pure functions of the cursor).
+      overrides: escape hatches (see OVERRIDE_KEYS) replacing individual
+        composed pieces; used by the deprecated ``run_continual`` shim.
+    """
+
+    def __init__(self, run: RunConfig, scenario=None, *, mesh=None,
+                 exchange: str = "full", strategy: Optional[str] = None,
+                 ckpt_dir: str = "", ckpt_every: int = 0, prefetch: bool = True,
+                 log_every: int = 0, donate: bool = True,
+                 step_form: str = "fused",
+                 overrides: Optional[Dict[str, Any]] = None):
+        from repro.core.strategies import STRATEGIES
+
+        ov = dict(overrides or {})
+        unknown = set(ov) - OVERRIDE_KEYS
+        if unknown:
+            raise TypeError(f"unknown trainer overrides: {sorted(unknown)}")
+        self.run = run
+        self.mesh = mesh
+        self.exchange = exchange
+        self.ckpt_dir = ckpt_dir
+        self.ckpt_every = ckpt_every
+        self.prefetch = prefetch
+        self.log_every = log_every
+        self._checkpoint_cb = ov.get("checkpoint_cb")
+
+        sc = run.scenario
+        self.scenario: Optional[Scenario] = None
+        if isinstance(scenario, str):
+            # a registry name selects the scenario KIND; its stream parameters
+            # still come from run.scenario (else shape and schedule desync)
+            self.scenario = get_scenario(dataclasses.replace(sc, name=scenario))
+        elif scenario is not None:
+            self.scenario = get_scenario(scenario)
+        elif not {"batch_fn", "eval_fn", "item_spec"} <= set(ov):
+            self.scenario = get_scenario(sc)
+
+        self.strategy = strategy or sc.strategy
+        if self.strategy not in STRATEGIES:
+            raise ValueError(
+                f"unknown strategy {self.strategy!r}; expected one of {STRATEGIES}")
+        self.num_tasks = (self.scenario.num_tasks if self.scenario is not None
+                          else sc.num_tasks)
+        self.epochs_per_task = sc.epochs_per_task
+        self.steps_per_epoch = sc.steps_per_epoch
+        self.batch_size = sc.batch_size
+        self.seed = sc.seed
+
+        # --- rehearsal config: explicit override > scenario defaults > run ---
+        if "rcfg" in ov:
+            rcfg = ov["rcfg"]
+        else:
+            rcfg = run.rehearsal
+            if self.scenario is not None and sc.auto_defaults:
+                rcfg = self.scenario.apply_defaults(rcfg)
+                if self.strategy != "rehearsal" and rcfg is not None:
+                    # non-rehearsal strategies never touch the buffer — skip
+                    # allocating one (explicit rcfg overrides opt out of this)
+                    rcfg = dataclasses.replace(rcfg, mode="off")
+        self.rcfg = rcfg
+        self.label_field = resolve_field(
+            ov.get("label_field",
+                   self.scenario.label_field if self.scenario else None),
+            rcfg, "label_field", "label")
+
+        # --- problem (model coupling) ---
+        need_problem = not {"init_params_fn", "eval_fn"} <= set(ov) or \
+            ("step_fn" not in ov and "loss_fn" not in ov)
+        problem = (self.scenario.build_problem(run)
+                   if need_problem and self.scenario is not None else None)
+        self.init_params_fn = ov.get(
+            "init_params_fn", problem.init_params_fn if problem else None)
+        self.loss_fn = ov.get("loss_fn", problem.loss_fn if problem else None)
+        self.eval_fn = ov.get("eval_fn", problem.eval_fn if problem else None)
+        self.item_spec = ov.get(
+            "item_spec", self.scenario.item_spec if self.scenario else None)
+        self._batch_fn = ov.get(
+            "batch_fn", self.scenario.batch if self.scenario else None)
+        self._cumulative_batch_fn = ov.get(
+            "cumulative_batch_fn",
+            self.scenario.cumulative_batch if self.scenario else None)
+
+        if "init_opt_fn" in ov:
+            self.init_opt_fn, self._opt_update = ov["init_opt_fn"], None
+        else:
+            from repro.optim import make_optimizer
+            self.init_opt_fn, self._opt_update = make_optimizer(run.train)
+
+        self._validate_bucketing()
+        self._step_fn = ov.get("step_fn")
+        self._halves = None
+        task_field = self.scenario.buffer_task_field if self.scenario else None
+        if step_form not in ("fused", "split"):
+            raise ValueError(f"unknown step_form {step_form!r}")
+        if step_form == "split":
+            # two separately-dispatched XLA programs (DESIGN.md §3): the issue
+            # half's device execution overlaps the host-side load of the next
+            # batch — the CPU-visible analogue of the paper's Argobots threads
+            from repro.core.strategies import make_pipelined_halves
+            if (self.mesh is not None or self.strategy != "rehearsal"
+                    or rcfg is None or not rcfg.is_pipelined):
+                raise ValueError("step_form='split' needs the single-device "
+                                 "pipelined rehearsal path (mode='async')")
+            if self._opt_update is None:
+                raise TypeError("step_form='split' composes its own step; it "
+                                "cannot be combined with an init_opt_fn override")
+            self._halves = make_pipelined_halves(
+                self.loss_fn, self._opt_update, rcfg, exchange=exchange,
+                label_field=self.label_field, task_field=task_field)
+        elif self._step_fn is None and self.mesh is None:
+            from repro.core.strategies import make_cl_step
+            if self._opt_update is None:
+                raise TypeError("step_fn or a full make_optimizer pair is required")
+            self._step_fn = make_cl_step(
+                self.loss_fn, self._opt_update, rcfg, strategy=self.strategy,
+                exchange=exchange, label_field=self.label_field,
+                task_field=task_field, donate=donate)
+
+    # ------------------------------------------------------------------ util
+    def _validate_bucketing(self):
+        """A task_field-free scenario must not be bucketed by a field its
+        batches do not carry — fail at construction, not mid-jit."""
+        rcfg, spec = self.rcfg, self.item_spec
+        if (self.scenario is not None and rcfg is not None
+                and getattr(rcfg, "enabled", False) and spec is not None):
+            bucket = self.scenario.buffer_task_field
+            if bucket not in spec:
+                # the scenario's schema is authoritative for the bucket field
+                # (rcfg.task_field is overridden on this path), so the fix is
+                # in the scenario, not the rehearsal config
+                raise ValueError(
+                    f"scenario {self.scenario.name!r} declares bucket field "
+                    f"{bucket!r} (task_field={self.scenario.task_field!r}) but "
+                    f"its records only carry {sorted(spec)}; fix the "
+                    f"scenario's task_field/label_field (task_field=None "
+                    f"buckets by the label field)")
+
+    def _source(self, task: int) -> Callable[[int], Dict[str, np.ndarray]]:
+        """cursor -> raw batch for the given task segment, strategy-aware."""
+        if self.strategy == "from_scratch":
+            if self._cumulative_batch_fn is None:
+                raise NotImplementedError(
+                    "from_scratch needs a cumulative batch source")
+            return lambda cur, _t=task: self._cumulative_batch_fn(
+                _t, self.batch_size, cur)
+        return lambda cur, _t=task: self._batch_fn(_t, self.batch_size, cur)
+
+    def _checkpoint_task(self, task: int, carry, global_step: int, manager):
+        if self._checkpoint_cb is not None:
+            self._checkpoint_cb(task, carry)
+        elif manager is not None:
+            manager.save(task, {"params": carry.params, "opt": carry.opt},
+                         {"task": task, "global_step": global_step})
+
+    # ------------------------------------------------------------------- fit
+    def fit(self):
+        """Train through every task; returns ``CLRunResult`` (Eq.-1 metric
+        matrix, per-task runtimes, loss history)."""
+        if self.mesh is not None:
+            return self._fit_pjit()
+        return self._fit_carry()
+
+    def _fit_carry(self):
+        from repro.core.cl_loop import CLRunResult
+        from repro.core.strategies import init_carry
+
+        if None in (self.init_params_fn, self.eval_fn, self._batch_fn) or \
+                (self._step_fn is None and self._halves is None):
+            raise TypeError("trainer is missing a scenario or explicit overrides")
+        manager = None
+        if self.ckpt_dir and self._checkpoint_cb is None:
+            from repro.checkpoint import CheckpointManager
+            manager = CheckpointManager(self.ckpt_dir)
+
+        key = jax.random.PRNGKey(self.seed)
+        params = self.init_params_fn(key)
+        carry = init_carry(params, self.init_opt_fn(params), self.item_spec,
+                           self.rcfg, label_field=self.label_field,
+                           seed=self.seed)
+
+        T = self.num_tasks
+        acc = np.zeros((T, T))
+        runtimes, history = [], []
+        global_step = 0
+        for task in range(T):
+            if self.strategy == "from_scratch":
+                # fresh model, cumulative data, proportionally more steps (the
+                # quadratic-runtime regime) — same re-init keys as run_continual
+                k = jax.random.fold_in(key, 1000 + task)
+                params = self.init_params_fn(k)
+                carry = init_carry(params, self.init_opt_fn(params),
+                                   self.item_spec, self.rcfg,
+                                   label_field=self.label_field, seed=self.seed)
+                n_steps = self.epochs_per_task * self.steps_per_epoch * (task + 1)
+            else:
+                n_steps = self.epochs_per_task * self.steps_per_epoch
+
+            source = self._source(task)
+            pf = None
+            if self.prefetch:
+                pf = Prefetcher(lambda cur, _src=source: _src(cur.step),
+                                cursor=Cursor(task, global_step),
+                                convert=jnp.asarray, limit=n_steps).start()
+            t0 = time.perf_counter()
+            try:
+                for s in range(n_steps):
+                    if pf is not None:
+                        _, batch = pf.next()
+                    else:
+                        batch = {k_: jnp.asarray(v)
+                                 for k_, v in source(global_step).items()}
+                    kstep = jax.random.fold_in(key, global_step)
+                    if self._halves is not None:
+                        # dispatch train THEN issue: the issue program's device
+                        # execution overlaps the prefetcher's next host load
+                        train_half, issue_half = self._halves
+                        params, opt, metrics = train_half(
+                            carry.params, carry.opt, carry.pipe, batch)
+                        buffer, pipe = issue_half(carry.buffer, carry.pipe,
+                                                  batch, kstep)
+                        carry = type(carry)(params, opt, buffer, pipe, carry.ef)
+                    else:
+                        carry, metrics = self._step_fn(carry, batch, kstep)
+                    global_step += 1
+                    if self.log_every and global_step % self.log_every == 0:
+                        _log().info("task=%d step=%d loss=%.4f", task,
+                                    global_step, float(metrics["loss"]))
+                    if s % max(1, n_steps // 4) == 0:
+                        history.append({"task": task, "step": s,
+                                        "loss": float(metrics["loss"])})
+            finally:
+                if pf is not None:
+                    pf.stop()
+            jax.block_until_ready(carry.params)
+            runtimes.append(time.perf_counter() - t0)
+
+            for j in range(task + 1):
+                acc[task, j] = self.eval_fn(carry.params, j)
+            self._checkpoint_task(task, carry, global_step, manager)
+
+        if manager is not None:
+            manager.wait()
+        final = float(np.mean(acc[T - 1, :T]))
+        return CLRunResult(strategy=self.strategy, accuracy_matrix=acc,
+                           task_runtimes=runtimes, final_accuracy=final,
+                           history=history)
+
+    # ------------------------------------------------------------------ pjit
+    def _fit_pjit(self):
+        from repro.core.cl_loop import CLRunResult
+        from repro.launch.steps import build_train_step
+        from repro.utils.compat import set_mesh
+        from repro.utils.logging import get_logger
+
+        if self.scenario is None:
+            raise TypeError("the pjit backend requires a scenario")
+        if self.strategy == "from_scratch":
+            raise NotImplementedError(
+                "the pjit backend does not implement from_scratch semantics "
+                "(per-task re-init + cumulative sampling); use the carry "
+                "backend (mesh=None)")
+        # the effective rehearsal config (scenario defaults applied in
+        # __init__) drives the step builder too — both backends must bucket
+        # and mask identically for the same RunConfig
+        run, mesh = self.run, self.mesh
+        if self.rcfg is not None:
+            run = dataclasses.replace(run, rehearsal=self.rcfg)
+        if self.strategy != "rehearsal" and run.rehearsal.mode != "off":
+            raise ValueError("pjit backend: non-rehearsal strategies run with "
+                             "rehearsal.mode='off'")
+        log = get_logger("repro.trainer")
+        manager = None
+        if self.ckpt_dir:
+            from repro.checkpoint import CheckpointManager
+            manager = CheckpointManager(self.ckpt_dir)
+
+        T = self.num_tasks
+        bs = run.shape.global_batch  # pjit: the sharded global batch
+        if self.batch_size != bs:
+            raise ValueError(
+                f"pjit backend trains at shape.global_batch={bs} but "
+                f"scenario.batch_size={self.batch_size}; set them equal so the "
+                f"declared scenario schedule is the one that actually runs")
+        acc = np.zeros((T, T))
+        runtimes, history = [], []
+        with set_mesh(mesh):
+            built = build_train_step(run, mesh, exchange=self.exchange,
+                                     donate=False)
+            key = jax.random.PRNGKey(self.seed)
+            params, opt, buffer, reps, valid = materialize_state(
+                built, run, mesh, key)
+            global_step = 0
+            for task in range(T):
+                def fetch(cur, _t=task):
+                    return self.scenario.batch(_t, bs, cur.step)
+
+                n_steps = self.epochs_per_task * self.steps_per_epoch
+                pf = Prefetcher(fetch, cursor=Cursor(task, global_step),
+                                convert=jnp.asarray, limit=n_steps)
+                if self.prefetch:
+                    pf.start()
+                t0 = time.perf_counter()
+                try:
+                    for s in range(n_steps):
+                        _, batch = pf.next()
+                        kstep = jax.random.fold_in(key, global_step)
+                        if built.meta["mode"] == "off":
+                            params, opt, metrics = built.fn(params, opt, batch,
+                                                            kstep)
+                        else:
+                            params, opt, buffer, reps, valid, metrics = built.fn(
+                                params, opt, buffer, reps, valid, batch, kstep)
+                        global_step += 1
+                        if self.log_every and global_step % self.log_every == 0:
+                            log.info("task=%d step=%d loss=%.4f", task,
+                                     global_step, float(metrics["loss"]))
+                        if s % max(1, n_steps // 4) == 0:
+                            history.append({"task": task, "step": s,
+                                            "loss": float(metrics["loss"])})
+                        if (manager is not None and self.ckpt_every
+                                and global_step % self.ckpt_every == 0):
+                            manager.save(global_step,
+                                         {"params": params, "opt": opt},
+                                         {"task": task,
+                                          "global_step": global_step})
+                finally:
+                    pf.stop()
+                jax.block_until_ready(params)
+                runtimes.append(time.perf_counter() - t0)
+                for j in range(task + 1):
+                    acc[task, j] = self.eval_fn(params, j)
+                if manager is not None and not (
+                        self.ckpt_every and global_step % self.ckpt_every == 0):
+                    # end-of-task snapshot (skip if the in-loop save just did)
+                    manager.save(global_step, {"params": params, "opt": opt},
+                                 {"task": task, "global_step": global_step})
+        if manager is not None:
+            manager.wait()
+        final = float(np.mean(acc[T - 1, :T]))
+        return CLRunResult(strategy=self.strategy, accuracy_matrix=acc,
+                           task_runtimes=runtimes, final_accuracy=final,
+                           history=history)
+
+
+# ---------------------------------------------------------------------------
+# pjit state materialisation (absorbed from launch.train)
+# ---------------------------------------------------------------------------
+
+
+def materialize_state(built, run, mesh, key, exchange: str = "full"):
+    """Turn a BuiltStep's abstract args into real (sharded) arrays."""
+    from repro.core import distributed as dist
+    from repro.core import rehearsal as rb
+    from repro.models import build_model
+    from repro.optim import make_optimizer
+
+    cfg, shape, rcfg = run.model, run.shape, run.rehearsal
+    model = build_model(cfg)
+    params_sh, opt_sh = built.shardings[0], built.shardings[1]
+    params = jax.jit(lambda k: model.init(k, shape.seq_len),
+                     out_shardings=params_sh)(key)
+    opt_init, _ = make_optimizer(run.train, n_workers=built.meta["n_dp"])
+    opt = jax.jit(opt_init, out_shardings=opt_sh)(params)
+    if built.meta["mode"] == "off":
+        return params, opt, None, None, None
+    n_dp = built.meta["n_dp"]
+    buffer_struct, reps_struct, valid_struct = (
+        built.args[2], built.args[3], built.args[4])
+    # proper policy init (e.g. GRASP's +inf distance sentinels), not plain zeros
+    item_s = jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape[2:], s.dtype), reps_struct)
+    buffer = jax.jit(
+        lambda: tuple(dist.init_distributed_buffer(
+            item_s, rcfg.num_buckets, built.meta["slots_per_bucket"], n_dp,
+            rcfg.policy)),
+        out_shardings=tuple(built.shardings[2]))()
+
+    def init_reps():
+        def leaf(path, s):
+            name = path[-1].key if hasattr(path[-1], "key") else ""
+            z = jnp.zeros(s.shape, s.dtype)
+            # invalid until the first issue: labels masked -> zero loss
+            return z - 1 if name in (rcfg.label_field, "label") else z
+
+        return jax.tree_util.tree_map_with_path(leaf, reps_struct)
+
+    reps = jax.jit(init_reps, out_shardings=built.shardings[3])()
+    valid = jax.jit(lambda: jnp.zeros(valid_struct.shape, bool),
+                    out_shardings=built.shardings[4])()
+    return params, opt, rb.BufferState(*buffer), reps, valid

@@ -1,0 +1,59 @@
+"""Perf-trajectory tooling: BENCH_*.json merge, time-series append, regression
+detection with metric-direction awareness."""
+import json
+
+import pytest
+
+from benchmarks import trajectory
+
+
+def _write_bench(path, load_us, acc, vs_sync):
+    payload = {"bench": "fig6", "smoke": True,
+               "rows": {"load_us": load_us, "final_accuracy": acc,
+                        "pipelined_vs_sync": vs_sync}}
+    path.write_text(json.dumps(payload))
+
+
+def test_merge_appends_and_flags_regressions(tmp_path, capsys):
+    bench = tmp_path / "BENCH_fig6.json"
+    out = tmp_path / "trajectory.jsonl"
+    _write_bench(bench, load_us=100.0, acc=0.9, vs_sync=0.8)
+    r1 = trajectory.run(bench_glob=str(bench), out_path=str(out), now=1000.0)
+    assert r1["regressions"] == []
+    assert len(out.read_text().strip().splitlines()) == 1
+
+    # 60% slower load, accuracy collapse, pipeline now slower than sync
+    _write_bench(bench, load_us=160.0, acc=0.5, vs_sync=1.2)
+    r2 = trajectory.run(bench_glob=str(bench), out_path=str(out), now=2000.0)
+    keys = "\n".join(r2["regressions"])
+    assert "load_us" in keys and "final_accuracy" in keys \
+        and "pipelined_vs_sync" in keys
+    assert len(out.read_text().strip().splitlines()) == 2
+    entries = [json.loads(l) for l in out.read_text().strip().splitlines()]
+    assert entries[0]["metrics"]["fig6/rows/load_us"] == 100.0
+    assert entries[1]["metrics"]["fig6/rows/load_us"] == 160.0
+
+    # within tolerance: no regression
+    _write_bench(bench, load_us=170.0, acc=0.52, vs_sync=1.1)
+    r3 = trajectory.run(bench_glob=str(bench), out_path=str(out), now=3000.0)
+    assert r3["regressions"] == []
+
+
+def test_gate_exits_nonzero_on_regression(tmp_path):
+    bench = tmp_path / "BENCH_fig6.json"
+    out = tmp_path / "trajectory.jsonl"
+    _write_bench(bench, load_us=100.0, acc=0.9, vs_sync=0.8)
+    trajectory.run(bench_glob=str(bench), out_path=str(out), now=1000.0)
+    _write_bench(bench, load_us=300.0, acc=0.9, vs_sync=0.8)
+    with pytest.raises(SystemExit):
+        trajectory.run(bench_glob=str(bench), out_path=str(out), gate=True,
+                       now=2000.0)
+    # the regressed entry must NOT have been persisted as the new baseline
+    assert len(out.read_text().strip().splitlines()) == 1
+
+
+def test_metric_direction():
+    assert trajectory.metric_direction("fig6/rows/load_us") == -1
+    assert trajectory.metric_direction("fig5a/x/us_per_step") == -1
+    assert trajectory.metric_direction("fig5a/x/final_accuracy") == 1
+    assert trajectory.metric_direction("fig5a/x/slots") == 0
