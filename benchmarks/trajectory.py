@@ -142,9 +142,11 @@ def run(bench_glob: str = "BENCH_*.json",
         entry["regressions"] = regressions
         if gate:
             # do NOT persist the regressed entry: it must not become the
-            # baseline the next run is compared against
+            # baseline the next run is compared against. Exit 2 distinguishes
+            # "regression found" from tool crashes (exit 1): a warn-only CI
+            # wrapper can downgrade ONLY the regression exit.
             print(f"trajectory: gate failed; {entry['sha']} not appended")
-            sys.exit(1)
+            sys.exit(2)
     os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
     with open(out_path, "a") as f:
         f.write(json.dumps(entry) + "\n")

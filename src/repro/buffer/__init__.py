@@ -36,6 +36,7 @@ from repro.buffer.tiered import (
     cold_shardings,
     init_tiered,
     record_spec_of,
+    resolve_cold_placement,
     tiered_dims,
     tiered_fill,
     tiered_sample,
@@ -46,6 +47,7 @@ from repro.buffer.api import (
     buffer_sample,
     buffer_update,
     init_from_config,
+    resolve_placement,
 )
 
 __all__ = [
@@ -72,6 +74,8 @@ __all__ = [
     "mask_invalid",
     "record_spec_of",
     "register_policy",
+    "resolve_cold_placement",
+    "resolve_placement",
     "resolve_policy",
     "tiered_dims",
     "tiered_fill",

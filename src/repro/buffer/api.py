@@ -63,6 +63,20 @@ def buffer_fill(state: AnyBufferState) -> jnp.ndarray:
     return jnp.sum(state.counts)
 
 
+def resolve_placement(rcfg, devices=None) -> str:
+    """Resolved storage placement of the configured buffer's bulk capacity:
+    ``'device'`` for flat (HBM-only) configs, and for tiered configs whatever
+    ``tiered.resolve_cold_placement`` probes (``'pinned_host'`` where the
+    runtime exposes it, ``'device'`` fallback). Dry-run records and
+    ``BuiltStep.meta`` surface this so a tiered config that silently landed in
+    HBM is visible."""
+    from repro.buffer.tiered import resolve_cold_placement
+
+    if not getattr(rcfg, "tiered", False):
+        return "device"
+    return resolve_cold_placement(devices)
+
+
 def resolve_field(explicit, rcfg, attr: str, default: str) -> str:
     """Record-field name resolution: explicit argument > RehearsalConfig > default.
 

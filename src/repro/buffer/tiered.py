@@ -164,22 +164,71 @@ def tiered_fill(state: TieredState) -> jnp.ndarray:
     return jnp.sum(state.hot.counts) + jnp.sum(state.cold.counts)
 
 
+COLD_MEMORY_KIND = "pinned_host"  # the HBM-relief memory the cold tier requests
+
+# One probe per process (keyed by device kind): whether the runtime exposes the
+# cold tier's host memory kind. A single warning is logged on the fallback —
+# per-leaf silent fallbacks hid "tiered" configs that actually landed in HBM.
+_PLACEMENT_CACHE: dict = {}
+
+
+def device_memory_kinds(dev) -> set:
+    """Memory kinds one device exposes ({} on runtimes without the API)."""
+    try:
+        return {m.kind for m in dev.addressable_memories()}
+    except (AttributeError, NotImplementedError, RuntimeError):
+        return set()
+
+
+def resolve_cold_placement(devices=None) -> str:
+    """Where cold-tier leaves will actually live: ``'pinned_host'`` when the
+    runtime exposes that memory kind (TPU/GPU), else ``'device'`` (CPU tests —
+    one warning per process, and the resolved value is surfaced in the dry-run
+    ``rehearsal_buffer`` record and ``BuiltStep.meta`` so a silently
+    device-resident "tiered" config is visible)."""
+    # probe a device THIS process can address: in a multi-host run the mesh's
+    # device 0 belongs to process 0, and addressable_memories() on a remote
+    # device raises — which would silently resolve divergent placements across
+    # the SPMD processes
+    proc = jax.process_index()
+    devs = [d for d in (list(devices) if devices is not None else [])
+            if getattr(d, "process_index", proc) == proc]
+    dev = devs[0] if devs else jax.local_devices()[0]
+    cache_key = getattr(dev, "device_kind", None) or dev.platform
+    if cache_key in _PLACEMENT_CACHE:
+        return _PLACEMENT_CACHE[cache_key]
+    kinds = device_memory_kinds(dev)
+    placement = COLD_MEMORY_KIND if COLD_MEMORY_KIND in kinds else "device"
+    if placement == "device":
+        from repro.utils.logging import get_logger
+
+        get_logger("repro.buffer").warning(
+            "tiered cold tier: %r memory kind unavailable on %s (kinds: %s); "
+            "cold records stay DEVICE-resident — capacity relief is disabled",
+            COLD_MEMORY_KIND, cache_key, sorted(kinds) or "none")
+    _PLACEMENT_CACHE[cache_key] = placement
+    return placement
+
+
 def cold_shardings(state: TieredState, mesh, dp_axes):
     """NamedShardings for a distributed TieredState (leading worker axis over dp),
     requesting host (``pinned_host``) memory for the cold tier's leaves on runtimes
     that support memory kinds — the actual HBM-relief mechanism on TPU. Falls back
-    to device placement where memory kinds are unavailable (CPU tests)."""
+    to device placement where the memory kind is unavailable (CPU tests); the
+    probe runs once per process and logs a single warning on fallback
+    (``resolve_cold_placement``)."""
     from jax.sharding import NamedSharding, PartitionSpec as P
+
+    placement = resolve_cold_placement(mesh.devices.flat)
 
     def worker_axis(leaf):
         return NamedSharding(mesh, P(dp_axes, *([None] * (len(leaf.shape) - 1))))
 
     def host(leaf):
         s = worker_axis(leaf)
-        try:
-            return s.with_memory_kind("pinned_host")
-        except (ValueError, AttributeError, NotImplementedError):
-            return s
+        if placement == COLD_MEMORY_KIND:
+            return s.with_memory_kind(COLD_MEMORY_KIND)
+        return s
 
     return TieredState(
         hot=jax.tree_util.tree_map(worker_axis, state.hot),

@@ -28,14 +28,32 @@ def _flatten(state) -> Dict[str, np.ndarray]:
     return flat
 
 
-def _unflatten(template, arrays: Dict[str, np.ndarray]):
-    leaves = []
+def _unflatten(template, arrays: Dict[str, np.ndarray], strict: bool = True):
+    """Rebuild ``template``'s structure from the flat array dict.
+
+    ``strict=False`` keeps the template's own value for leaves the checkpoint
+    does not carry (and warns once) — the escape hatch for checkpoints written
+    before a state field existed (e.g. policy ``aux`` / tiered staging from
+    pre-subsystem saves). Restored aux is otherwise round-tripped verbatim:
+    FIFO cursors, GRASP distances and ``stage_valid`` must NOT be rebuilt from
+    init on restore."""
+    leaves, missing = [], []
     for path, leaf in jax.tree_util.tree_flatten_with_path(template)[0]:
         key = jax.tree_util.keystr(path)
         if key not in arrays:
-            raise KeyError(f"checkpoint missing leaf {key}")
+            if strict:
+                raise KeyError(f"checkpoint missing leaf {key}")
+            missing.append(key)
+            leaves.append(leaf)
+            continue
         arr = arrays[key]
         leaves.append(arr.astype(leaf.dtype) if hasattr(leaf, "dtype") else arr)
+    if missing:
+        from repro.utils.logging import get_logger
+
+        get_logger("repro.checkpoint").warning(
+            "checkpoint predates %d state leaf/leaves (kept template init "
+            "values): %s", len(missing), missing[:4])
     treedef = jax.tree_util.tree_structure(template)
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
@@ -97,8 +115,14 @@ class CheckpointManager:
         steps = self.list_steps()
         return steps[-1] if steps else None
 
-    def restore(self, template, step: Optional[int] = None) -> Tuple[Any, Dict]:
-        """Restore into the structure of ``template``. Returns (state, metadata)."""
+    def restore(self, template, step: Optional[int] = None,
+                strict: bool = True) -> Tuple[Any, Dict]:
+        """Restore into the structure of ``template``. Returns (state, metadata).
+
+        The FULL pytree round-trips — including policy aux (FIFO cursors, GRASP
+        prototypes/distances) and tiered staging state (``stage``/``stage_valid``);
+        ``strict=False`` tolerates checkpoints written before such a leaf existed
+        (the template's init value is kept for the missing leaves only)."""
         self.wait()
         step = step if step is not None else self.latest_step()
         if step is None:
@@ -107,7 +131,7 @@ class CheckpointManager:
         arrays = dict(np.load(os.path.join(path, "state.npz"), allow_pickle=False))
         with open(os.path.join(path, "meta.json")) as f:
             meta = json.load(f)
-        return _unflatten(template, arrays), meta
+        return _unflatten(template, arrays, strict=strict), meta
 
 
 # ---------------------------------------------------------------------------

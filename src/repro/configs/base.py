@@ -205,6 +205,17 @@ class RehearsalConfig:
     label_field: str = "labels"
     task_field: str = "task"
 
+    def __post_init__(self):
+        if self.tiering == "on":  # convenience alias: 'on' means the host tier
+            object.__setattr__(self, "tiering", "host")
+        if self.tiering not in ("off", "host"):
+            raise ValueError(
+                f"unknown tiering {self.tiering!r}; expected 'off', 'host' "
+                f"(or the alias 'on')")
+        if self.mode not in ("async", "sync", "off"):
+            raise ValueError(
+                f"unknown rehearsal mode {self.mode!r}; expected async|sync|off")
+
     @property
     def enabled(self) -> bool:
         return self.mode != "off"

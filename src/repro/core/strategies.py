@@ -119,8 +119,9 @@ def carry_specs(carry: TrainCarry, dp_axis: Optional[str]) -> TrainCarry:
     )
 
 
-def _rep_checksum(reps, valid, label_field: str):
-    """Order-invariant fingerprint of the consumed representatives (parity tests)."""
+def rep_checksum(reps, valid, label_field: str):
+    """Order-invariant fingerprint of the consumed representatives (parity tests;
+    also emitted by the pjit train step so the two backends can be compared)."""
     labels = reps.get(label_field, reps.get("label")) if isinstance(reps, dict) else None
     if labels is None:
         labels = jax.tree_util.tree_leaves(reps)[0]
@@ -180,7 +181,7 @@ def make_cl_step(
             buf = new_buf
             pipe = PipelinedRehearsalCarry(pending.reps, pending.valid, key)
             metrics["buffer_fill"] = buffer_api.buffer_fill(buf).astype(jnp.float32)
-            metrics["rep_checksum"] = _rep_checksum(train_reps, train_valid, label_field)
+            metrics["rep_checksum"] = rep_checksum(train_reps, train_valid, label_field)
         else:
             train_batch = batch
 

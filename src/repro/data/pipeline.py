@@ -36,6 +36,12 @@ class _FetchError:
         self.exc = exc
 
 
+class _EndOfStream:
+    """Sentinel the worker enqueues after its last ``_limit``-bounded fetch —
+    without it, a ``next()`` call past the limit would block forever on an
+    empty queue whose producer has already exited."""
+
+
 class Prefetcher:
     """Wraps ``fetch(cursor) -> batch`` with a bounded background prefetch queue.
 
@@ -57,6 +63,8 @@ class Prefetcher:
         self._q: "queue.Queue" = queue.Queue(maxsize=depth)
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
+        self._exhausted = False  # worker hit _limit and enqueued _EndOfStream
+        self._served = 0  # batches handed out by next(), either path: ONE limit
 
     def _place(self, batch):
         if self._sharding is None:
@@ -70,24 +78,29 @@ class Prefetcher:
         fetched = 0
         while not self._stop.is_set():
             if self._limit is not None and fetched >= self._limit:
-                return  # don't speculate past the consumer's last step
+                # don't speculate past the consumer's last step — but DO tell
+                # the consumer the stream ended (next() raises StopIteration)
+                self._enqueue((None, _EndOfStream()))
+                return
             try:
                 batch = self._fetch(cur)
                 if self._convert is not None:
                     batch = {k: self._convert(v) for k, v in batch.items()}
             except BaseException as e:  # surface in next(), don't hang the consumer
                 batch = _FetchError(e)
-            item = (Cursor(cur.task, cur.step), batch)
-            while not self._stop.is_set():
-                try:
-                    self._q.put(item, timeout=0.1)
-                    break
-                except queue.Full:
-                    continue
+            self._enqueue((Cursor(cur.task, cur.step), batch))
             if isinstance(batch, _FetchError):
                 return
             fetched += 1
             cur.step += 1
+
+    def _enqueue(self, item):
+        while not self._stop.is_set():
+            try:
+                self._q.put(item, timeout=0.1)
+                return
+            except queue.Full:
+                continue
 
     def start(self):
         if self._thread is None:
@@ -99,20 +112,33 @@ class Prefetcher:
         return self
 
     def next(self):
+        # ONE limit across both serving modes: a stopped threaded prefetcher
+        # falling back to synchronous fetches must not serve extra batches
+        if self._exhausted or (self._limit is not None
+                               and self._served >= self._limit):
+            raise StopIteration(f"prefetch limit ({self._limit}) reached")
         if self._thread is None:  # synchronous fallback
             batch = self._fetch(self.cursor)
             if self._convert is not None:
                 batch = {k: self._convert(v) for k, v in batch.items()}
             cur = Cursor(self.cursor.task, self.cursor.step)
             self.cursor.step += 1
+            self._served += 1
             return cur, self._place(batch)
         cur, batch = self._q.get()
+        if isinstance(batch, _EndOfStream):
+            # the producer exited after its last allowed fetch; reclaim the
+            # (already finished) thread and report exhaustion, not a hang
+            self._exhausted = True
+            self.stop()
+            raise StopIteration(f"prefetch limit ({self._limit}) reached")
         if isinstance(batch, _FetchError):
             # the producer thread exited; reset so a caller that catches the
             # error and retries hits the synchronous path, not a dead queue
             self.stop()
             raise batch.exc
         self.cursor = Cursor(cur.task, cur.step + 1)
+        self._served += 1
         return cur, self._place(batch)
 
     def stop(self):
@@ -130,4 +156,6 @@ class Prefetcher:
         """Reposition (e.g. new task, or checkpoint restore)."""
         self.stop()
         self.cursor = cursor
+        self._exhausted = False
+        self._served = 0
         return self

@@ -65,8 +65,14 @@ def rehearsal_buffer_cost(built, rcfg) -> dict:
         hot = k * hot_slots * raw_row
         cold = 0
         rows = hot_slots
+    from repro.buffer.api import resolve_placement
+
     return {
         "mode": "tiered" if cold_slots else "flat",
+        # where the cold bytes actually land: 'pinned_host' when the runtime
+        # exposes the memory kind, 'device' when the fallback kicked in — a
+        # "tiered" config whose cold tier silently stayed in HBM is visible here
+        "cold_placement": resolve_placement(rcfg) if cold_slots else None,
         "raw_row_bytes": raw_row,
         "cold_row_bytes": cold_row,
         "hot_slots_per_bucket": hot_slots,

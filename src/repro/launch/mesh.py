@@ -25,5 +25,17 @@ def make_mesh(shape, axes):
     return _compat_make_mesh(shape, axes)
 
 
+def memory_kinds(mesh) -> set:
+    """Memory kinds addressable by the mesh's devices (e.g. {'device',
+    'pinned_host'} on TPU, {'unpinned_host'} on CPU) — the probe behind the
+    tiered cold tier's host placement (repro.buffer.tiered)."""
+    from repro.buffer.tiered import device_memory_kinds
+
+    kinds = set()
+    for dev in mesh.devices.flat:
+        kinds |= device_memory_kinds(dev)
+    return kinds
+
+
 def describe(mesh) -> str:
     return " x ".join(f"{a}={s}" for a, s in mesh.shape.items())

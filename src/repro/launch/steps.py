@@ -32,9 +32,12 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.buffer import api as buffer_api
+from repro.buffer import tiered as tiered_mod
 from repro.configs.base import RunConfig, ShapeConfig
 from repro.core import distributed as dist
 from repro.core import rehearsal as rb
+from repro.core.strategies import rep_checksum
 from repro.models import StackCtx, build_model
 from repro.optim import make_optimizer
 from repro.parallel import (
@@ -95,7 +98,7 @@ def build_train_step(
     *,
     rehearsal_mode: Optional[str] = None,  # None -> run.rehearsal.mode
     exchange: str = "full",
-    buffer_budget_bytes: int = 64 << 20,
+    buffer_budget_bytes: Optional[int] = 64 << 20,
     donate: bool = True,
 ) -> BuiltStep:
     cfg, shape, tcfg, rcfg = run.model, run.shape, run.train, run.rehearsal
@@ -130,19 +133,34 @@ def build_train_step(
     use_rehearsal = mode != "off"
     r = rcfg.num_representatives
     task_field = rcfg.task_field
-    if use_rehearsal and rcfg.tiered:
-        raise NotImplementedError(
-            "tiered buffers are not wired through the pjit step builder yet "
-            "(ROADMAP: tiered distributed path); use repro.core.make_cl_step or "
-            "set tiering='off'"
+    tiered = use_rehearsal and rcfg.tiered
+    cold_placement = None
+    if tiered:
+        # Tiered configs are explicit about their capacity split (hot_slots /
+        # cold_slots / demote_stage), so the config — not the flat budget knob —
+        # is authoritative: the carry and pjit backends must materialize the
+        # SAME TieredState for the same RunConfig (the parity contract).
+        slots = rcfg.resolved_hot_slots
+        buffer_s = jax.eval_shape(
+            functools.partial(dist.init_distributed_from_config, item_s, rcfg, n_dp)
         )
-    if use_rehearsal:
-        slots = slots_for_budget(item_s, rcfg.num_buckets, buffer_budget_bytes)
+        buffer_sh = tiered_mod.cold_shardings(buffer_s, mesh, dp)
+        cold_placement = tiered_mod.resolve_cold_placement(mesh.devices.flat)
+    elif use_rehearsal:
+        # buffer_budget_bytes=None: the config's slots_per_bucket is
+        # authoritative (the trainer path — carry and pjit backends must
+        # allocate the SAME buffer); a byte budget derives slots the paper's
+        # S_max way (the dry-run / direct-caller path).
+        slots = (rcfg.slots_per_bucket if buffer_budget_bytes is None
+                 else slots_for_budget(item_s, rcfg.num_buckets,
+                                       buffer_budget_bytes))
         buffer_s = jax.eval_shape(
             functools.partial(dist.init_distributed_buffer, item_s, rcfg.num_buckets,
                               slots, n_dp, rcfg.policy)
         )
         buffer_s = rb.BufferState(*buffer_s)
+        buffer_sh = buffer_shardings(buffer_s, mesh)
+    if use_rehearsal:
         reps_s = jax.tree_util.tree_map(
             lambda l: jax.ShapeDtypeStruct((n_dp, r) + l.shape, l.dtype), item_s
         )
@@ -150,7 +168,7 @@ def build_train_step(
         sharded_update = dist.make_sharded_update(mesh, dp, rcfg, exchange=exchange)
     else:
         slots = 0
-        buffer_s = reps_s = valid_s = None
+        buffer_s = reps_s = valid_s = buffer_sh = None
     key_s = jax.ShapeDtypeStruct(key0.shape, key0.dtype)
 
     # --- step fn ---
@@ -184,12 +202,16 @@ def build_train_step(
                                       rcfg.label_field)
             (loss, metrics), grads = grad_fn(params, aug)
             params, opt_state, om = opt_update(grads, opt_state, params)
+            fingerprints = {
+                "buffer_fill": buffer_api.buffer_fill(buffer).astype(jnp.float32),
+                "rep_checksum": rep_checksum(new_reps, new_valid, rcfg.label_field),
+            }
             return params, opt_state, buffer, new_reps, new_valid, dict(
-                metrics, **om, loss=loss
+                metrics, **om, **fingerprints, loss=loss
             )
 
         args = (params_s, opt_s, buffer_s, reps_s, valid_s, batch_s, key_s)
-        shardings = _rehearsal_shardings(params_s, opt_s, buffer_s, reps_s, batch_s,
+        shardings = _rehearsal_shardings(params_s, opt_s, buffer_sh, reps_s, batch_s,
                                          cfg, mesh, zero1=tcfg.zero1)
     else:  # pipelined — the paper's contribution (one-step-stale double buffer)
 
@@ -198,26 +220,42 @@ def build_train_step(
             aug = dist.augment_global(batch, reps, valid, n_dp, rcfg.label_field)
             (loss, metrics), grads = grad_fn(params, aug)
             # issue t+1's sample: independent of grads -> overlaps with backward
+            # (tiered configs flush last step's staged demotions inside this
+            # update — also free of any dependency on the gradient subgraph)
             buffer, next_reps, next_valid = sharded_update(
                 buffer, batch, batch[task_field], key
             )
             params, opt_state, om = opt_update(grads, opt_state, params)
+            fingerprints = {
+                "buffer_fill": buffer_api.buffer_fill(buffer).astype(jnp.float32),
+                "rep_checksum": rep_checksum(reps, valid, rcfg.label_field),
+            }
             return params, opt_state, buffer, next_reps, next_valid, dict(
-                metrics, **om, loss=loss
+                metrics, **om, **fingerprints, loss=loss
             )
 
         args = (params_s, opt_s, buffer_s, reps_s, valid_s, batch_s, key_s)
-        shardings = _rehearsal_shardings(params_s, opt_s, buffer_s, reps_s, batch_s,
+        shardings = _rehearsal_shardings(params_s, opt_s, buffer_sh, reps_s, batch_s,
                                          cfg, mesh, zero1=tcfg.zero1)
 
     donate_argnums = tuple(range(len(args) - 2)) if donate else ()
-    fn = jax.jit(step, in_shardings=shardings, donate_argnums=donate_argnums)
+    # out shardings pin the carried state to its input layout (params, opt,
+    # buffer, reps, valid round-trip through the step across calls — without
+    # the constraint GSPMD may pick a different layout for an output leaf and
+    # the next call's in_shardings reject it); metrics replicate.
+    n_state = len(args) - 2
+    out_shardings = tuple(shardings[:n_state]) + (NamedSharding(mesh, P()),)
+    fn = jax.jit(step, in_shardings=shardings, out_shardings=out_shardings,
+                 donate_argnums=donate_argnums)
     meta = {
         "kind": "train",
         "mode": mode if use_rehearsal else "off",
         "pipelined": bool(use_rehearsal and pipelined),
         "n_dp": n_dp,
         "slots_per_bucket": slots,
+        "tiering": rcfg.tiering if use_rehearsal else "off",
+        "cold_slots_per_bucket": rcfg.resolved_cold_slots if tiered else 0,
+        "cold_placement": cold_placement,  # None unless tiered
         "augmented_global_batch": shape.global_batch + (n_dp * r if use_rehearsal else 0),
         "tokens_per_step": (shape.global_batch + (n_dp * r if use_rehearsal else 0))
         * shape.seq_len,
@@ -267,13 +305,16 @@ def _opt_shardings(opt_s, params_s, cfg, mesh, zero1: bool = False):
     return type(opt_s)(rep, moment(opt_s.mu), moment(opt_s.nu))
 
 
-def _rehearsal_shardings(params_s, opt_s, buffer_s, reps_s, batch_s, cfg, mesh,
+def _rehearsal_shardings(params_s, opt_s, buffer_sh, reps_s, batch_s, cfg, mesh,
                          zero1: bool = False):
+    """``buffer_sh`` is the pre-built buffer sharding tree: worker-axis
+    ``buffer_shardings`` for flat stores, ``tiered.cold_shardings`` (worker axis
+    + ``pinned_host`` cold leaves) for tiered ones."""
     dp = dp_axes(mesh)
     return (
         params_shardings(params_s, cfg, mesh),
         _opt_shardings(opt_s, params_s, cfg, mesh, zero1=zero1),
-        rb.BufferState(*buffer_shardings(tuple(buffer_s), mesh)),
+        buffer_sh,
         _rep_sharding(reps_s, mesh),
         NamedSharding(mesh, P(dp, None)),
         batch_shardings(batch_s, mesh),

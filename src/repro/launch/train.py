@@ -44,6 +44,15 @@ def main(argv=None):
     ap.add_argument("--mode", default="async", choices=["async", "sync", "off"])
     ap.add_argument("--exchange", default="full",
                     choices=["full", "pod_local", "local"])
+    ap.add_argument("--policy", default="reservoir",
+                    help="buffer policy (reservoir|fifo|class_balanced|grasp)")
+    ap.add_argument("--tiering", default="off", choices=["off", "host", "on"],
+                    help="two-tier buffer: cold records spill to host as int8")
+    ap.add_argument("--hot-slots", type=int, default=0,
+                    help="tiered: hot (HBM) slots/bucket; 0 = slots_per_bucket")
+    ap.add_argument("--cold-slots", type=int, default=0,
+                    help="tiered: cold (host int8) slots/bucket; 0 = 3x hot")
+    ap.add_argument("--slots-per-bucket", type=int, default=16)
     ap.add_argument("--optimizer", default="adamw")
     ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--ckpt-dir", default="")
@@ -63,7 +72,11 @@ def main(argv=None):
         train=TrainConfig(optimizer=args.optimizer, peak_lr=args.lr,
                           warmup_steps=20, linear_scaling=False,
                           compute_dtype="float32" if m * d == 1 else "bfloat16"),
-        rehearsal=RehearsalConfig(num_buckets=max(args.tasks, 2), mode=args.mode),
+        rehearsal=RehearsalConfig(num_buckets=max(args.tasks, 2), mode=args.mode,
+                                  slots_per_bucket=args.slots_per_bucket,
+                                  policy=args.policy, tiering=args.tiering,
+                                  hot_slots=args.hot_slots,
+                                  cold_slots=args.cold_slots),
         scenario=ScenarioConfig(
             name="class_incremental", modality="tokens",
             strategy="rehearsal" if args.mode != "off" else "incremental",
@@ -76,6 +89,11 @@ def main(argv=None):
 
     log.info("arch=%s params=%.1fM mesh=%s mode=%s",
              cfg.name, cfg.param_count() / 1e6, dict(mesh.shape), args.mode)
+    if run.rehearsal.tiered:
+        from repro.launch.mesh import memory_kinds
+        log.info("tiered buffer: hot=%d cold=%d slots/bucket; mesh memory "
+                 "kinds: %s", run.rehearsal.resolved_hot_slots,
+                 run.rehearsal.resolved_cold_slots, sorted(memory_kinds(mesh)))
     trainer = ContinualTrainer(run, scenario, mesh=mesh, exchange=args.exchange,
                                ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
                                log_every=args.log_every)

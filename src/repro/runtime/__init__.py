@@ -1,4 +1,5 @@
 from repro.runtime.fault_tolerance import InjectedFailure, ResilientLoop, StragglerPolicy
-from repro.runtime.elastic import reshard_carry
+from repro.runtime.elastic import reshard_carry, reshard_tiered
 
-__all__ = ["InjectedFailure", "ResilientLoop", "StragglerPolicy", "reshard_carry"]
+__all__ = ["InjectedFailure", "ResilientLoop", "StragglerPolicy", "reshard_carry",
+           "reshard_tiered"]

@@ -8,6 +8,13 @@ pipeline re-shards trivially (cursor-deterministic streams).
 Shrink (N→N′<N): buffer contents are pooled per bucket and re-dealt; aggregate
 capacity drops to N′·S_max exactly as the paper's scaling law predicts.
 Grow (N→N′>N): new workers start with partially-filled buffers and fill via Alg-1.
+
+Tiered stores reshard tier-by-tier: the hot tier exactly like a flat buffer
+(policy aux rebuilt per worker via ``Policy.reshard_aux``), the cold tier's int8
+rows pooled + re-dealt the same way (its reservoir archive carries no aux), and
+the demotion staging slot's pending rows pooled across workers and re-dealt
+round-robin — overflow beyond the per-worker ``stage_rows`` is dropped, exactly
+the bounded-staging semantics of ``tiered._pack_stage``.
 """
 from __future__ import annotations
 
@@ -17,39 +24,22 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.buffer.tiered import TieredState
 from repro.checkpoint.manager import reshard_buffer
 from repro.core.rehearsal import BufferState
 from repro.core.strategies import PipelinedRehearsalCarry, TrainCarry
 
 
-def reshard_carry(carry: TrainCarry, n_new: int, policy=None) -> TrainCarry:
-    """Adapt a TrainCarry saved with N workers to ``n_new`` workers.
-
-    ``policy`` (name or Policy) must identify the buffer policy when it carries
-    aux state — resharding compacts each worker's slots, so cloned aux (FIFO
-    cursor, GRASP distances) would be misaligned; it is rebuilt per worker via
-    ``Policy.reshard_aux``."""
-    if carry.buffer is None:
-        return carry
-    if not isinstance(carry.buffer, BufferState):
-        raise NotImplementedError(
-            "elastic resharding of tiered buffers is not supported yet; "
-            "drain the cold tier (tiering='off') before changing worker count"
-        )
-    new_data, new_counts = reshard_buffer(carry.buffer.data, np.asarray(carry.buffer.counts),
+def _reshard_buffer_state(buffer: BufferState, n_new: int, policy) -> BufferState:
+    """Pool + re-deal one BufferState (leaves [N, K, slots, ...]) to ``n_new``
+    workers, rebuilding policy aux for the compacted slots."""
+    new_data, new_counts = reshard_buffer(buffer.data, np.asarray(buffer.counts),
                                           n_new)
-    n_old, k = np.asarray(carry.buffer.counts).shape
-    seen = np.asarray(carry.buffer.seen).sum(axis=0, keepdims=True)
+    n_old, k = np.asarray(buffer.counts).shape
+    seen = np.asarray(buffer.seen).sum(axis=0, keepdims=True)
     new_seen = np.broadcast_to(seen // n_new, (n_new, k)).copy()
 
-    def resize_reps(x):
-        x = np.asarray(x)
-        if n_new <= x.shape[0]:
-            return jnp.asarray(x[:n_new])
-        tiles = -(-n_new // x.shape[0])  # ceil: handles n_new > 2x the old count
-        return jnp.asarray(np.concatenate([x] * tiles, axis=0)[:n_new])
-
-    if jax.tree_util.tree_leaves(carry.buffer.aux):
+    if jax.tree_util.tree_leaves(buffer.aux):
         from repro.buffer import resolve_policy
 
         if policy is None:
@@ -68,13 +58,166 @@ def reshard_carry(carry: TrainCarry, n_new: int, policy=None) -> TrainCarry:
         ]
         aux = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *per_worker)
     else:
-        aux = carry.buffer.aux
-    buffer = BufferState(
+        aux = buffer.aux
+    return BufferState(
         data=jax.tree_util.tree_map(jnp.asarray, new_data),
         counts=jnp.asarray(new_counts),
         seen=jnp.asarray(new_seen.astype(np.int32)),
         aux=aux,
     )
+
+
+def _reshard_stage(stage, stage_labels, stage_valid, n_new: int):
+    """Re-deal the pending demotions ([N, rows, ...] leaves) round-robin across
+    the new worker axis. Valid rows beyond the aggregate ``n_new * rows``
+    staging capacity are dropped — the same records a full staging slot would
+    have dropped at the next eviction burst."""
+    labels = np.asarray(stage_labels)
+    valid = np.asarray(stage_valid)
+    n_old, rows = valid.shape
+    leaves, treedef = jax.tree_util.tree_flatten(stage)
+    leaves = [np.asarray(l) for l in leaves]
+
+    new_leaves = [np.zeros((n_new,) + l.shape[1:], l.dtype) for l in leaves]
+    new_labels = np.zeros((n_new, rows), labels.dtype)
+    new_valid = np.zeros((n_new, rows), bool)
+    pool = [(w, r) for w in range(n_old) for r in range(rows) if valid[w, r]]
+    for j, (w, r) in enumerate(pool):
+        dst_w, dst_r = j % n_new, j // n_new
+        if dst_r >= rows:
+            break  # aggregate staging capacity shrank: drop the tail
+        for l_old, l_new in zip(leaves, new_leaves):
+            l_new[dst_w, dst_r] = l_old[w, r]
+        new_labels[dst_w, dst_r] = labels[w, r]
+        new_valid[dst_w, dst_r] = True
+    return (
+        jax.tree_util.tree_unflatten(
+            treedef, [jnp.asarray(l) for l in new_leaves]),
+        jnp.asarray(new_labels),
+        jnp.asarray(new_valid),
+    )
+
+
+def reshard_tiered(state: TieredState, n_new: int, policy=None) -> TieredState:
+    """Redistribute a distributed TieredState (leaves [N, ...]) to ``n_new``
+    workers, tier by tier:
+
+      * hot rows are pooled per bucket and dealt round-robin; rows beyond the
+        new aggregate hot capacity are *demoted* — int8-encoded and appended to
+        the cold pool, exactly what the store itself does on eviction — rather
+        than destroyed (so a shrink preserves every record the cold tier can
+        absorb);
+      * cold rows (existing archive first, fresh demotions after) are pooled +
+        dealt the same way; only rows beyond the new aggregate cold capacity
+        are dropped;
+      * staging rows (pending demotions) pool + re-deal with overflow dropped
+        (bounded-queue semantics);
+      * hot policy aux is rebuilt per worker via ``Policy.reshard_aux``
+        (cloned cursors/distances would be misaligned with the re-dealt slots).
+    """
+    from repro.core import compression as comp
+
+    hot_counts = np.asarray(state.hot.counts)
+    cold_counts = np.asarray(state.cold.counts)
+    n_old, k = hot_counts.shape
+    hot_leaves, hot_def = jax.tree_util.tree_flatten(state.hot.data)
+    cold_leaves, cold_def = jax.tree_util.tree_flatten(state.cold.data)
+    hot_leaves = [np.asarray(l) for l in hot_leaves]
+    cold_leaves = [np.asarray(l) for l in cold_leaves]
+    hot_slots = hot_leaves[0].shape[2]
+    cold_slots = cold_leaves[0].shape[2]
+    item_spec = jax.tree_util.tree_map(
+        lambda l: jax.ShapeDtypeStruct(np.asarray(l).shape[3:], l.dtype),
+        state.hot.data)
+
+    new_hot = [np.zeros((n_new,) + l.shape[1:], l.dtype) for l in hot_leaves]
+    new_cold = [np.zeros((n_new,) + l.shape[1:], l.dtype) for l in cold_leaves]
+    new_hot_counts = np.zeros((n_new, k), np.int32)
+    new_cold_counts = np.zeros((n_new, k), np.int32)
+    for b in range(k):
+        pool = [(w, s) for w in range(n_old) for s in range(int(hot_counts[w, b]))]
+        keep, overflow = pool[: n_new * hot_slots], pool[n_new * hot_slots:]
+        for j, (w, s) in enumerate(keep):
+            dst_w, dst_s = j % n_new, j // n_new
+            for l_old, l_new in zip(hot_leaves, new_hot):
+                l_new[dst_w, b, dst_s] = l_old[w, b, s]
+            new_hot_counts[dst_w, b] = max(new_hot_counts[dst_w, b], dst_s + 1)
+
+        # cold pool: the existing archive first, fresh demotions last (they are
+        # the first to go if the new aggregate cold capacity cannot hold all)
+        cold_pool = [("cold", w, s) for w in range(n_old)
+                     for s in range(int(cold_counts[w, b]))]
+        demoted = None
+        if overflow:
+            rows = jax.tree_util.tree_unflatten(
+                hot_def,
+                [np.stack([l[w, b, s] for (w, s) in overflow]) for l in hot_leaves])
+            demoted = [np.asarray(l) for l in jax.tree_util.tree_leaves(
+                comp.encode_batch(
+                    jax.tree_util.tree_map(jnp.asarray, rows), item_spec))]
+            cold_pool += [("demoted", 0, i) for i in range(len(overflow))]
+        for j, (src, w, s) in enumerate(cold_pool[: n_new * cold_slots]):
+            dst_w, dst_s = j % n_new, j // n_new
+            src_leaves = cold_leaves if src == "cold" else demoted
+            for l_old, l_new in zip(src_leaves, new_cold):
+                l_new[dst_w, b, dst_s] = l_old[w, b, s] if src == "cold" else l_old[s]
+            new_cold_counts[dst_w, b] = max(new_cold_counts[dst_w, b], dst_s + 1)
+
+    def seen_of(seen):
+        pooled = np.asarray(seen).sum(axis=0, keepdims=True)
+        return jnp.asarray(
+            np.broadcast_to(pooled // n_new, (n_new, k)).astype(np.int32).copy())
+
+    hot_data = jax.tree_util.tree_unflatten(
+        hot_def, [jnp.asarray(l) for l in new_hot])
+    if jax.tree_util.tree_leaves(state.hot.aux):
+        from repro.buffer import resolve_policy
+
+        if policy is None:
+            raise ValueError(
+                "the hot tier carries policy aux state; pass the policy so "
+                "reshard_tiered can rebuild it for the re-dealt slots")
+        pol = resolve_policy(policy)
+        per_worker = [
+            pol.reshard_aux(
+                jax.tree_util.tree_map(lambda x: x[w], hot_data),
+                new_hot_counts[w])
+            for w in range(n_new)
+        ]
+        hot_aux = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *per_worker)
+    else:
+        hot_aux = state.hot.aux
+    hot = BufferState(hot_data, jnp.asarray(new_hot_counts),
+                      seen_of(state.hot.seen), hot_aux)
+    cold = BufferState(
+        jax.tree_util.tree_unflatten(cold_def, [jnp.asarray(l) for l in new_cold]),
+        jnp.asarray(new_cold_counts), seen_of(state.cold.seen), state.cold.aux)
+    stage, stage_labels, stage_valid = _reshard_stage(
+        state.stage, state.stage_labels, state.stage_valid, n_new)
+    return TieredState(hot, cold, stage, stage_labels, stage_valid)
+
+
+def reshard_carry(carry: TrainCarry, n_new: int, policy=None) -> TrainCarry:
+    """Adapt a TrainCarry saved with N workers to ``n_new`` workers.
+
+    ``policy`` (name or Policy) must identify the buffer policy when it carries
+    aux state — resharding compacts each worker's slots, so cloned aux (FIFO
+    cursor, GRASP distances) would be misaligned; it is rebuilt per worker via
+    ``Policy.reshard_aux``. Flat and tiered buffers both reshard; see
+    ``reshard_tiered`` for the tier-by-tier semantics."""
+    if carry.buffer is None:
+        return carry
+    if isinstance(carry.buffer, TieredState):
+        buffer: Any = reshard_tiered(carry.buffer, n_new, policy)
+    else:
+        buffer = _reshard_buffer_state(carry.buffer, n_new, policy)
+
+    def resize_reps(x):
+        x = np.asarray(x)
+        if n_new <= x.shape[0]:
+            return jnp.asarray(x[:n_new])
+        tiles = -(-n_new // x.shape[0])  # ceil: handles n_new > 2x the old count
+        return jnp.asarray(np.concatenate([x] * tiles, axis=0)[:n_new])
 
     pipe = carry.pipe
     if pipe is not None:

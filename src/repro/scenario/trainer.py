@@ -90,6 +90,7 @@ class ContinualTrainer:
         self.ckpt_every = ckpt_every
         self.prefetch = prefetch
         self.log_every = log_every
+        self.donate = donate
         self._checkpoint_cb = ov.get("checkpoint_cb")
 
         sc = run.scenario
@@ -213,11 +214,27 @@ class ContinualTrainer:
                 _t, self.batch_size, cur)
         return lambda cur, _t=task: self._batch_fn(_t, self.batch_size, cur)
 
+    @staticmethod
+    def _history_entry(task: int, step: int, metrics) -> Dict[str, float]:
+        """One history record; rehearsal runs also carry the buffer fingerprints
+        (rep_checksum / buffer_fill) so the two backends can be compared
+        step-for-step (the tiered pjit parity contract)."""
+        entry = {"task": task, "step": step, "loss": float(metrics["loss"])}
+        for k in ("rep_checksum", "buffer_fill"):
+            if k in metrics:
+                entry[k] = float(metrics[k])
+        return entry
+
     def _checkpoint_task(self, task: int, carry, global_step: int, manager):
         if self._checkpoint_cb is not None:
             self._checkpoint_cb(task, carry)
         elif manager is not None:
-            manager.save(task, {"params": carry.params, "opt": carry.opt},
+            # the FULL carry: buffer (data + counts + policy aux, incl. the
+            # tiered staging slot) and the in-flight pipeline state — restore
+            # must not rebuild FIFO cursors / GRASP distances / stage_valid
+            # from init (the checkpoint-roundtrip contract, tests/test_system)
+            manager.save(task, {"params": carry.params, "opt": carry.opt,
+                                "buffer": carry.buffer, "pipe": carry.pipe},
                          {"task": task, "global_step": global_step})
 
     # ------------------------------------------------------------------- fit
@@ -282,11 +299,25 @@ class ContinualTrainer:
                         # dispatch train THEN issue: the issue program's device
                         # execution overlaps the prefetcher's next host load
                         train_half, issue_half = self._halves
+                        prev_pipe = carry.pipe
                         params, opt, metrics = train_half(
                             carry.params, carry.opt, carry.pipe, batch)
                         buffer, pipe = issue_half(carry.buffer, carry.pipe,
                                                   batch, kstep)
                         carry = type(carry)(params, opt, buffer, pipe, carry.ef)
+                        if s % max(1, n_steps // 4) == 0:
+                            # fingerprints the fused step emits, computed only
+                            # on the steps history records — the split form
+                            # exists for overlap; keep its hot loop dispatch-free
+                            from repro.buffer.api import buffer_fill
+                            from repro.core.strategies import rep_checksum
+                            metrics = dict(
+                                metrics,
+                                rep_checksum=rep_checksum(
+                                    prev_pipe.reps, prev_pipe.valid,
+                                    self.label_field),
+                                buffer_fill=jnp.asarray(
+                                    buffer_fill(buffer), jnp.float32))
                     else:
                         carry, metrics = self._step_fn(carry, batch, kstep)
                     global_step += 1
@@ -294,8 +325,7 @@ class ContinualTrainer:
                         _log().info("task=%d step=%d loss=%.4f", task,
                                     global_step, float(metrics["loss"]))
                     if s % max(1, n_steps // 4) == 0:
-                        history.append({"task": task, "step": s,
-                                        "loss": float(metrics["loss"])})
+                        history.append(self._history_entry(task, s, metrics))
             finally:
                 if pf is not None:
                     pf.stop()
@@ -352,12 +382,32 @@ class ContinualTrainer:
         acc = np.zeros((T, T))
         runtimes, history = [], []
         with set_mesh(mesh):
+            # buffer_budget_bytes=None: rcfg.slots_per_bucket is authoritative,
+            # so both backends allocate the same buffer for the same RunConfig.
+            # State (incl. the TieredState) is donated: the buffer update is
+            # in-place on device, no host round-trip on the step; checkpoints
+            # snapshot to numpy before the next call, so donation is safe.
             built = build_train_step(run, mesh, exchange=self.exchange,
-                                     donate=False)
+                                     buffer_budget_bytes=None,
+                                     donate=self.donate)
             key = jax.random.PRNGKey(self.seed)
             params, opt, buffer, reps, valid = materialize_state(
                 built, run, mesh, key)
+            # RNG lineage matches the carry backend's PipelinedRehearsalCarry:
+            # the key handed to step t's issue half is step t-1's step key,
+            # rooted at PRNGKey(seed) — so for the same RunConfig both backends
+            # draw the identical sample sequence (the tiered parity contract).
+            issue_key = key
             global_step = 0
+
+            def snapshot(step_id, task):
+                state = {"params": params, "opt": opt}
+                if built.meta["mode"] != "off":
+                    state.update(buffer=buffer, reps=reps, valid=valid,
+                                 issue_key=issue_key)
+                manager.save(step_id, state,
+                             {"task": task, "global_step": global_step})
+
             for task in range(T):
                 def fetch(cur, _t=task):
                     return self.scenario.batch(_t, bs, cur.step)
@@ -377,20 +427,18 @@ class ContinualTrainer:
                                                             kstep)
                         else:
                             params, opt, buffer, reps, valid, metrics = built.fn(
-                                params, opt, buffer, reps, valid, batch, kstep)
+                                params, opt, buffer, reps, valid, batch,
+                                issue_key)
+                            issue_key = kstep
                         global_step += 1
                         if self.log_every and global_step % self.log_every == 0:
                             log.info("task=%d step=%d loss=%.4f", task,
                                      global_step, float(metrics["loss"]))
                         if s % max(1, n_steps // 4) == 0:
-                            history.append({"task": task, "step": s,
-                                            "loss": float(metrics["loss"])})
+                            history.append(self._history_entry(task, s, metrics))
                         if (manager is not None and self.ckpt_every
                                 and global_step % self.ckpt_every == 0):
-                            manager.save(global_step,
-                                         {"params": params, "opt": opt},
-                                         {"task": task,
-                                          "global_step": global_step})
+                            snapshot(global_step, task)
                 finally:
                     pf.stop()
                 jax.block_until_ready(params)
@@ -400,8 +448,7 @@ class ContinualTrainer:
                 if manager is not None and not (
                         self.ckpt_every and global_step % self.ckpt_every == 0):
                     # end-of-task snapshot (skip if the in-loop save just did)
-                    manager.save(global_step, {"params": params, "opt": opt},
-                                 {"task": task, "global_step": global_step})
+                    snapshot(global_step, task)
         if manager is not None:
             manager.wait()
         final = float(np.mean(acc[T - 1, :T]))
@@ -437,11 +484,19 @@ def materialize_state(built, run, mesh, key, exchange: str = "full"):
     # proper policy init (e.g. GRASP's +inf distance sentinels), not plain zeros
     item_s = jax.tree_util.tree_map(
         lambda s: jax.ShapeDtypeStruct(s.shape[2:], s.dtype), reps_struct)
-    buffer = jax.jit(
-        lambda: tuple(dist.init_distributed_buffer(
-            item_s, rcfg.num_buckets, built.meta["slots_per_bucket"], n_dp,
-            rcfg.policy)),
-        out_shardings=tuple(built.shardings[2]))()
+    if built.meta.get("tiering", "off") != "off":
+        # tiered: the config is authoritative for hot/cold/stage sizes (mirrors
+        # build_train_step); out_shardings place the cold tier in pinned_host
+        # where available (tiered.cold_shardings), device elsewhere
+        buffer = jax.jit(
+            lambda: dist.init_distributed_from_config(item_s, rcfg, n_dp),
+            out_shardings=built.shardings[2])()
+    else:
+        buffer = rb.BufferState(*jax.jit(
+            lambda: tuple(dist.init_distributed_buffer(
+                item_s, rcfg.num_buckets, built.meta["slots_per_bucket"], n_dp,
+                rcfg.policy)),
+            out_shardings=tuple(built.shardings[2]))())
 
     def init_reps():
         def leaf(path, s):
@@ -455,4 +510,4 @@ def materialize_state(built, run, mesh, key, exchange: str = "full"):
     reps = jax.jit(init_reps, out_shardings=built.shardings[3])()
     valid = jax.jit(lambda: jnp.zeros(valid_struct.shape, bool),
                     out_shardings=built.shardings[4])()
-    return params, opt, rb.BufferState(*buffer), reps, valid
+    return params, opt, buffer, reps, valid

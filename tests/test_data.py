@@ -59,6 +59,38 @@ def test_prefetcher_resume_bitexact():
     np.testing.assert_array_equal(batch["images"], seen[3][1]["images"])
 
 
+def test_prefetcher_limit_signals_end_of_stream():
+    """``next()`` past ``limit`` must raise StopIteration, not block forever on
+    a queue whose producer exited (regression: the worker returned without
+    enqueuing any sentinel)."""
+    fetch = lambda cur: {"x": np.full((2,), cur.step)}
+    limit = 3
+    p = Prefetcher(fetch, limit=limit).start()
+    steps = [p.next()[0].step for _ in range(limit)]
+    assert steps == [0, 1, 2]
+    with pytest.raises(StopIteration):
+        p.next()  # the limit+1'th call: end-of-stream, not a hang
+    with pytest.raises(StopIteration):
+        p.next()  # stays exhausted (no silent fall-through to sync fetches)
+    p.stop()
+    # the synchronous (non-started) path honours the same limit
+    p_sync = Prefetcher(fetch, limit=2)
+    assert [p_sync.next()[0].step for _ in range(2)] == [0, 1]
+    with pytest.raises(StopIteration):
+        p_sync.next()
+    # reset() re-arms the stream
+    p_sync.reset(Cursor(0, 0))
+    assert p_sync.next()[0].step == 0
+    # ONE limit across modes: stopping a partially-consumed threaded
+    # prefetcher must not grant the sync fallback a fresh allowance
+    p_mixed = Prefetcher(fetch, limit=3).start()
+    assert [p_mixed.next()[0].step for _ in range(2)] == [0, 1]
+    p_mixed.stop()
+    p_mixed.next()  # 3rd and last batch, now via the sync path
+    with pytest.raises(StopIteration):
+        p_mixed.next()
+
+
 def test_prefetcher_overlaps_load():
     """Prefetch hides a slow producer behind consumer think-time (the paper's DALI
     role): consuming 4 batches with 50ms think-time costs ~max(load, think), not sum."""

@@ -105,6 +105,99 @@ def test_checkpoint_restart_bitexact_mid_cl(lm_setup, tmp_path):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+def test_checkpoint_roundtrip_keeps_policy_aux_and_tiered_staging(lm_setup, tmp_path):
+    """Restore must NOT rebuild FIFO cursors / tiered staging from init: a
+    fifo-policy tiered run stopped at step 10 and restored continues exactly
+    like the uninterrupted run (params bit-equal, buffer fingerprints equal)."""
+    stream, cfg, model, ctx, loss_fn, opt_init, opt_update, item_spec = lm_setup
+    rcfg = RehearsalConfig(num_buckets=2, slots_per_bucket=4,
+                           num_representatives=4, num_candidates=8, mode="async",
+                           policy="fifo", tiering="host", hot_slots=4,
+                           cold_slots=12)
+    step = make_cl_step(loss_fn, opt_update, rcfg, strategy="rehearsal",
+                        label_field="labels", donate=False)
+    key = jax.random.PRNGKey(2)
+
+    def fresh():
+        params = model.init(key, max_seq=16)
+        return init_carry(params, opt_init(params), item_spec, rcfg,
+                          label_field="labels")
+
+    def advance(carry, start, end):
+        m = {}
+        for s in range(start, end):
+            batch = {k: jnp.asarray(v) for k, v in stream.batch(0, 8, s).items()}
+            carry, m = step(carry, batch, jax.random.fold_in(key, s))
+        return carry, m
+
+    ref, ref_m = advance(fresh(), 0, 18)
+
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    half, _ = advance(fresh(), 0, 10)
+    assert "cursor" in half.buffer.hot.aux  # fifo aux present
+    assert int(half.buffer.stage_valid.sum()) > 0  # staged demotions in flight
+    mgr.save(10, half._asdict(), {"cursor": 10})
+
+    template = fresh()._asdict()  # freshly-initialised aux/staging in the template
+    restored_dict, meta = mgr.restore(template)
+    restored = TrainCarry(**restored_dict)
+    # the restored aux/staging are the SAVED ones, not the template's init
+    np.testing.assert_array_equal(np.asarray(restored.buffer.hot.aux["cursor"]),
+                                  np.asarray(half.buffer.hot.aux["cursor"]))
+    np.testing.assert_array_equal(np.asarray(restored.buffer.stage_valid),
+                                  np.asarray(half.buffer.stage_valid))
+    resumed, res_m = advance(restored, int(meta["cursor"]), 18)
+    for a, b in zip(jax.tree_util.tree_leaves(ref.params),
+                    jax.tree_util.tree_leaves(resumed.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert float(ref_m["rep_checksum"]) == float(res_m["rep_checksum"])
+    assert float(ref_m["buffer_fill"]) == float(res_m["buffer_fill"])
+    for a, b in zip(jax.tree_util.tree_leaves(ref.buffer),
+                    jax.tree_util.tree_leaves(resumed.buffer)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_restore_tolerates_missing_new_leaves(lm_setup, tmp_path):
+    """strict=False: a checkpoint written before a state leaf existed restores
+    with the template's init value for the missing leaves only."""
+    stream, cfg, model, ctx, loss_fn, opt_init, opt_update, item_spec = lm_setup
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    mgr.save(1, {"params": {"w": np.ones((2,), np.float32)}}, {})
+    template = {"params": {"w": np.zeros((2,), np.float32)},
+                "aux": {"cursor": np.full((3,), 7, np.int32)}}
+    with pytest.raises(KeyError):
+        mgr.restore(template)  # strict default: missing leaf is an error
+    state, _ = mgr.restore(template, strict=False)
+    np.testing.assert_array_equal(state["params"]["w"], np.ones((2,)))
+    np.testing.assert_array_equal(state["aux"]["cursor"], np.full((3,), 7))
+
+
+def test_trainer_checkpoints_carry_full_buffer(tmp_path):
+    """ContinualTrainer's per-task snapshots persist the FULL carry — buffer
+    data + counts + policy aux + pipeline slot — not just params/opt."""
+    from repro.configs.base import RunConfig, ScenarioConfig, TrainConfig
+    from repro.scenario import ContinualTrainer
+
+    run = RunConfig(
+        train=TrainConfig(optimizer="sgd", peak_lr=0.05, warmup_steps=5,
+                          linear_scaling=False),
+        rehearsal=RehearsalConfig(num_buckets=4, slots_per_bucket=8,
+                                  num_representatives=3, num_candidates=6,
+                                  mode="async", policy="fifo",
+                                  label_field="label"),
+        scenario=ScenarioConfig(num_tasks=1, epochs_per_task=1,
+                                steps_per_epoch=4, batch_size=8, image_size=8,
+                                classes_per_task=4, auto_defaults=False))
+    trainer = ContinualTrainer(run, ckpt_dir=str(tmp_path))
+    trainer.fit()
+    import numpy as _np
+    arrays = dict(_np.load(str(tmp_path / "step_0000000000" / "state.npz")))
+    keys = set(arrays)
+    assert any(k.startswith("['buffer']") for k in keys), sorted(keys)[:8]
+    assert any("aux" in k and "cursor" in k for k in keys), sorted(keys)[:8]
+    assert any(k.startswith("['pipe']") for k in keys)
+
+
 def test_elastic_reshard_mid_run(lm_setup):
     """Restore a 4-worker carry as 2 workers: buffer pooled + re-dealt, invariants
     hold (counts bounded by the shrunken aggregate capacity)."""

@@ -45,9 +45,12 @@ def test_gate_exits_nonzero_on_regression(tmp_path):
     _write_bench(bench, load_us=100.0, acc=0.9, vs_sync=0.8)
     trajectory.run(bench_glob=str(bench), out_path=str(out), now=1000.0)
     _write_bench(bench, load_us=300.0, acc=0.9, vs_sync=0.8)
-    with pytest.raises(SystemExit):
+    with pytest.raises(SystemExit) as exc:
         trajectory.run(bench_glob=str(bench), out_path=str(out), gate=True,
                        now=2000.0)
+    # exit 2 = "regression found" (a tool crash exits 1): the warn-only CI
+    # wrapper downgrades only this code
+    assert exc.value.code == 2
     # the regressed entry must NOT have been persisted as the new baseline
     assert len(out.read_text().strip().splitlines()) == 1
 
