@@ -18,6 +18,7 @@ from repro.configs.base import (
     RehearsalConfig,
     RunConfig,
     ScenarioConfig,
+    StrategyConfig,
     TrainConfig,
 )
 from repro.core import topk_accuracy
@@ -58,12 +59,13 @@ class VisionCL:
         return float(topk_accuracy(self._eval_logits(params, jnp.asarray(ev["images"])),
                                    jnp.asarray(ev["label"]), k=1))
 
-    def run_config(self, rcfg: RehearsalConfig, strategy: str) -> RunConfig:
+    def run_config(self, rcfg: RehearsalConfig, strategy: str,
+                   scfg: StrategyConfig = StrategyConfig()) -> RunConfig:
         """The RunConfig one harness invocation trains under; ``rcfg`` is
         authoritative (auto_defaults off — benchmark sweeps set policy/tiering
         explicitly, including mode='off' baselines)."""
         return RunConfig(
-            model=self.ccfg, train=self.tcfg, rehearsal=rcfg,
+            model=self.ccfg, train=self.tcfg, rehearsal=rcfg, strategy=scfg,
             scenario=ScenarioConfig(
                 name="class_incremental", strategy=strategy,
                 num_tasks=self.num_tasks, epochs_per_task=self.epochs_per_task,
@@ -72,14 +74,15 @@ class VisionCL:
 
     def run(self, strategy: str, mode: str = "async", slots: int = 64,
             r: int = 8, exchange: str = "full", policy: str = "reservoir",
-            tiering: str = "off", hot_slots: int = 0, cold_slots: int = 0):
+            tiering: str = "off", hot_slots: int = 0, cold_slots: int = 0,
+            scfg: StrategyConfig = StrategyConfig()):
         # label_field/task_field plumbed once through the config, not per call site
         rcfg = RehearsalConfig(num_buckets=self.num_tasks, slots_per_bucket=slots,
                                num_representatives=r, num_candidates=14, mode=mode,
                                policy=policy, tiering=tiering, hot_slots=hot_slots,
                                cold_slots=cold_slots, label_field="label")
-        trainer = ContinualTrainer(self.run_config(rcfg, strategy), self.scenario,
-                                   exchange=exchange)
+        trainer = ContinualTrainer(self.run_config(rcfg, strategy, scfg),
+                                   self.scenario, exchange=exchange)
         t0 = time.perf_counter()
         res = trainer.fit()
         res.wall = time.perf_counter() - t0

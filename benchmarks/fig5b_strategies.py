@@ -1,24 +1,60 @@
-"""Paper Fig. 5b: accuracy + runtime for the three strategies.
+"""Paper Fig. 5b: accuracy + runtime across training strategies.
 
 Expected ordering (paper): accuracy incremental << rehearsal <= from_scratch;
 runtime incremental ~ rehearsal (linear) << from_scratch (quadratic in tasks).
-derived column = final accuracy | per-task runtimes.
+Beyond-paper rows: DER / DER++ (repro.strategy.der — replayed rows trained by
+logit distillation; DER++ adds replay-row CE), expected >= plain rehearsal on
+retained accuracy at equal runtime class.
+
+derived column = final accuracy | per-task runtimes. ``--smoke`` shrinks the
+stream for CI and emits ``BENCH_fig5b.json`` (merged into the perf trajectory
+by ``benchmarks.trajectory``).
 """
+import json
+import os
+
+from repro.configs.base import StrategyConfig
+
 from benchmarks.common import VisionCL
 
+# (row label, trainer strategy, rehearsal mode)
+CURVES = (
+    ("incremental", "incremental", "off"),
+    ("rehearsal", "rehearsal", "async"),
+    ("rehearsal_sync", "rehearsal", "sync"),
+    ("der", "der", "async"),
+    ("der_pp", "der_pp", "async"),
+    ("from_scratch", "from_scratch", "off"),
+)
 
-def run(writer):
-    h = VisionCL()
-    for strategy, mode in (("incremental", "off"), ("rehearsal", "async"),
-                           ("rehearsal_sync", "sync"), ("from_scratch", "off")):
-        s = "rehearsal" if strategy.startswith("rehearsal") else strategy
-        res = h.run(s, mode=mode)
+
+def run(writer, smoke: bool = False, json_path: str = "BENCH_fig5b.json"):
+    h = VisionCL(num_tasks=2, classes_per_task=3, image_size=8, batch_size=8,
+                 epochs_per_task=1, steps_per_epoch=10) if smoke else VisionCL()
+    scfg = StrategyConfig(alpha=0.5, beta=0.5, top_k=0)
+    rows = {}
+    for label, strategy, mode in CURVES:
+        res = h.run(strategy, mode=mode, scfg=scfg)
         rts = "/".join(f"{t:.1f}" for t in res.task_runtimes)
-        writer.row(f"fig5b/{strategy}", f"{res.us_per_step:.0f}",
+        writer.row(f"fig5b/{label}", f"{res.us_per_step:.0f}",
                    f"acc={res.final_accuracy:.3f};task_runtimes_s={rts}")
+        rows[label] = {"name": label, "final_accuracy": res.final_accuracy,
+                       "us_per_step": res.us_per_step}
+
+    if smoke:
+        payload = {"bench": "fig5b", "smoke": True, "rows": rows}
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2)
+        writer.row("fig5b/json", "0", os.path.abspath(json_path))
 
 
 if __name__ == "__main__":
+    import argparse
+
     from repro.utils.logging import CSVWriter
 
-    run(CSVWriter())
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--json", default="BENCH_fig5b.json")
+    args = ap.parse_args()
+    run(CSVWriter(), smoke=args.smoke, json_path=args.json)

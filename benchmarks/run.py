@@ -33,7 +33,7 @@ def main() -> None:
         "roofline": roofline_table.run,
     }
     writer = CSVWriter()
-    smoke_aware = {"fig5a", "fig6"}  # emit BENCH_*.json, accept --smoke
+    smoke_aware = {"fig5a", "fig5b", "fig6"}  # emit BENCH_*.json, accept --smoke
     failures = 0
     for name, fn in benches.items():
         if only and name not in only:

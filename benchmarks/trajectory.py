@@ -10,6 +10,9 @@ trajectory file from the workflow cache, so history accumulates across runs.
 
     PYTHONPATH=src python -m benchmarks.trajectory            # merge + report
     PYTHONPATH=src python -m benchmarks.trajectory --gate     # exit 1 on regression
+    PYTHONPATH=src python -m benchmarks.trajectory --plot     # render the series
+                                  # (markdown sparklines; CI pipes it into the
+                                  # job summary — no merge happens in this mode)
 """
 from __future__ import annotations
 
@@ -154,6 +157,59 @@ def run(bench_glob: str = "BENCH_*.json",
     return {"entry": entry, "regressions": regressions}
 
 
+# ---------------------------------------------------------------------------
+# --plot: render the cached series as a markdown sparkline table
+# ---------------------------------------------------------------------------
+
+_SPARK = "▁▂▃▄▅▆▇█"
+
+
+def sparkline(values: List[float]) -> str:
+    lo, hi = min(values), max(values)
+    if hi == lo:
+        return _SPARK[0] * len(values)
+    idx = [int((v - lo) / (hi - lo) * (len(_SPARK) - 1)) for v in values]
+    return "".join(_SPARK[i] for i in idx)
+
+
+def render_plot(out_path: str = "benchmarks/results/trajectory.jsonl",
+                last: int = 30, max_metrics: int = 40) -> str:
+    """The cached trajectory as GitHub-flavoured markdown: one sparkline row
+    per metric over the last ``last`` entries, directional metrics first
+    (they are the ones the gate watches). Returns '' when there is no history
+    — callers can pipe the result straight into $GITHUB_STEP_SUMMARY."""
+    if not os.path.exists(out_path):
+        return ""
+    with open(out_path) as f:
+        history = [json.loads(line) for line in f if line.strip()]
+    history = history[-last:]
+    if not history:
+        return ""
+    series: Dict[str, List[float]] = {}
+    for entry in history:
+        for k, v in entry["metrics"].items():
+            series.setdefault(k, []).append(float(v))
+    # directional metrics first, then the rest; drop single-point flat noise
+    keys = sorted(series, key=lambda k: (metric_direction(k) == 0, k))
+    lines = [f"### Perf trajectory ({len(history)} entries, "
+             f"{history[0]['sha']} → {history[-1]['sha']})", "",
+             "| metric | trend | first | last | Δ |",
+             "|---|---|---:|---:|---:|"]
+    shown = 0
+    for k in keys:
+        vals = series[k]
+        if len(vals) < 2 or shown >= max_metrics:
+            continue
+        delta = (vals[-1] - vals[0]) / abs(vals[0]) if vals[0] else 0.0
+        arrow = {1: "↑ better", -1: "↓ better", 0: ""}[metric_direction(k)]
+        lines.append(f"| `{k}` {arrow} | `{sparkline(vals)}` | "
+                     f"{vals[0]:.4g} | {vals[-1]:.4g} | {delta:+.1%} |")
+        shown += 1
+    if shown == 0:
+        lines.append("| _(fewer than two entries per metric so far)_ | | | | |")
+    return "\n".join(lines) + "\n"
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--glob", default="BENCH_*.json", dest="bench_glob",
@@ -164,7 +220,14 @@ def main():
                          "counts as a regression")
     ap.add_argument("--gate", action="store_true",
                     help="exit 1 when a regression is found")
+    ap.add_argument("--plot", action="store_true",
+                    help="render the cached series as markdown sparklines "
+                         "(no merge) — pipe into $GITHUB_STEP_SUMMARY in CI")
     args = ap.parse_args()
+    if args.plot:
+        md = render_plot(out_path=args.out)
+        print(md if md else f"trajectory: no history at {args.out}")
+        return
     run(bench_glob=args.bench_glob, out_path=args.out, gate=args.gate,
         tolerance=args.tolerance)
 

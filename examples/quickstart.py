@@ -20,12 +20,13 @@ from repro.configs.base import (
     RehearsalConfig,
     RunConfig,
     ScenarioConfig,
+    StrategyConfig,
     TrainConfig,
 )
 from repro.scenario import ContinualTrainer
 
 
-def main(smoke: bool = False):
+def main(smoke: bool = False, strategy: str = "rehearsal"):
     steps = 8 if smoke else 30
     run = RunConfig(
         # model=None: the token scenario builds its default tiny LM
@@ -39,7 +40,12 @@ def main(smoke: bool = False):
                                   num_representatives=4, num_candidates=8,
                                   mode="async", policy="reservoir",
                                   label_field="labels"),
+        # the strategy picks the loss shape + buffer aux fields (repro.strategy):
+        # rehearsal | der | der_pp | grasp_embed | incremental | from_scratch.
+        # DER stores top-8 logits per position (8-16x smaller than the vocab row)
+        strategy=StrategyConfig(alpha=0.5, beta=0.5, top_k=8),
         scenario=ScenarioConfig(name="class_incremental", modality="tokens",
+                                strategy=strategy,
                                 num_tasks=2, epochs_per_task=1,
                                 steps_per_epoch=steps, batch_size=8,
                                 vocab_size=256, seq_len=32, seed=99),
@@ -64,4 +70,7 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="tiny run for CI (exercises the same API path)")
+    ap.add_argument("--strategy", default="rehearsal",
+                    help="training strategy (rehearsal | der | der_pp | "
+                         "grasp_embed | incremental | from_scratch)")
     main(**vars(ap.parse_args()))

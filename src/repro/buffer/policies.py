@@ -33,21 +33,32 @@ from repro.buffer.state import BufferState, buffer_dims
 
 _BIG = 1e30
 
+# Record field holding model embeddings (the grasp_embed strategy's feature
+# tap, DESIGN.md §9). When present, GRASP's prototype distances run in
+# embedding space — "GRASP at scale" — instead of on the raw first float leaf.
+FEATURE_FIELD = "embed"
+
+
+def _feature_leaf(items):
+    """The record leaf GRASP features come from: the ``embed`` field when the
+    records carry one, else the first float leaf, else the first leaf."""
+    if isinstance(items, dict) and FEATURE_FIELD in items:
+        return items[FEATURE_FIELD]
+    leaves = jax.tree_util.tree_leaves(items)
+    return next(
+        (l for l in leaves if jnp.issubdtype(jnp.dtype(l.dtype), jnp.floating)),
+        leaves[0])
+
 
 def _features(items):
-    """[b, D] float features of a record batch: the first float leaf (flattened),
-    falling back to the first leaf. Drives GRASP's prototype distances."""
-    leaves = jax.tree_util.tree_leaves(items)
-    leaf = next((l for l in leaves if jnp.issubdtype(jnp.asarray(l).dtype, jnp.floating)),
-                leaves[0])
-    leaf = jnp.asarray(leaf)
+    """[b, D] float features of a record batch (flattened feature leaf).
+    Drives GRASP's prototype distances."""
+    leaf = jnp.asarray(_feature_leaf(items))
     return leaf.reshape((leaf.shape[0], -1)).astype(jnp.float32)
 
 
 def _feature_dim(item_spec) -> int:
-    leaves = jax.tree_util.tree_leaves(item_spec)
-    leaf = next((l for l in leaves if jnp.issubdtype(jnp.dtype(l.dtype), jnp.floating)),
-                leaves[0])
+    leaf = _feature_leaf(item_spec)
     d = 1
     for s in leaf.shape:
         d *= s
@@ -211,11 +222,7 @@ class GraspPolicy(Policy):
     def reshard_aux(self, data, counts):
         # recompute prototypes + per-slot distances from the re-dealt records
         # (the stored features ARE the records, so aux is fully reconstructible)
-        leaves = jax.tree_util.tree_leaves(data)
-        leaf = next(
-            (l for l in leaves if jnp.issubdtype(jnp.asarray(l).dtype, jnp.floating)),
-            leaves[0])
-        leaf = jnp.asarray(leaf)
+        leaf = jnp.asarray(_feature_leaf(data))
         k_buckets, cap = leaf.shape[0], leaf.shape[1]
         feats = leaf.reshape((k_buckets, cap, -1)).astype(jnp.float32)  # [K, cap, D]
         counts = jnp.asarray(counts, jnp.int32)

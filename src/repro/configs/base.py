@@ -250,6 +250,35 @@ class RehearsalConfig:
 
 
 # ---------------------------------------------------------------------------
+# Training strategy (loss shape + buffer aux fields; see repro.strategy)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class StrategyConfig:
+    """Hyper-parameters of the training strategy (``repro.strategy``).
+
+    The strategy *name* lives in ``ScenarioConfig.strategy`` (or the trainer's
+    ``strategy=`` argument); this config carries the knobs the registered
+    strategies read. The built-in trio (incremental / from_scratch /
+    rehearsal) ignores all of them; DER/DER++ (Buzzega et al., NeurIPS'20)
+    read ``alpha``/``beta``/``top_k``.
+    """
+
+    alpha: float = 0.5  # DER: weight of the logit-MSE distillation term
+    beta: float = 0.5  # DER++: weight of the replay-row CE term (der ignores it)
+    # Stored-logit compression: keep only the top-k (value, index) pairs per
+    # position instead of the dense vocab row — an 8–16x buffer-byte saving for
+    # big vocabularies (0 = store dense logits). The cold tier additionally
+    # int8-quantizes whatever is stored (kernels/quantize via core.compression).
+    top_k: int = 0
+
+    def __post_init__(self):
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0, got {self.top_k}")
+
+
+# ---------------------------------------------------------------------------
 # Continual-learning scenario (task stream + schedule; see repro.scenario)
 # ---------------------------------------------------------------------------
 
@@ -265,7 +294,9 @@ class ScenarioConfig:
 
     name: str = "class_incremental"  # registry key (repro.scenario.SCENARIOS)
     modality: str = "vision"  # vision | tokens (class_incremental supports both)
-    strategy: str = "rehearsal"  # incremental | from_scratch | rehearsal
+    # Training strategy, resolved via repro.strategy.get_strategy:
+    # incremental | from_scratch | rehearsal | der | der_pp | grasp_embed.
+    strategy: str = "rehearsal"
     # --- schedule (the trainer's outer loop; boundaries belong to the scenario) ---
     num_tasks: int = 4
     epochs_per_task: int = 1
@@ -349,6 +380,8 @@ class RunConfig:
     mesh: MeshConfig = MeshConfig()
     train: TrainConfig = TrainConfig()
     rehearsal: RehearsalConfig = RehearsalConfig()
+    # Strategy hyper-parameters; the strategy NAME is ScenarioConfig.strategy.
+    strategy: StrategyConfig = StrategyConfig()
     scenario: ScenarioConfig = ScenarioConfig()
 
     def replace(self, **kw) -> "RunConfig":

@@ -1,63 +1,13 @@
-"""Dark Experience Replay (DER/DER++) on top of the distributed rehearsal buffer.
+"""Back-compat shim: DER/DER++ now lives in ``repro.strategy.der``.
 
-Beyond-paper extension (the paper's §III cites Buzzega et al., NeurIPS'20: replaying
-the model's *logits* alongside/instead of labels beats plain Experience Replay). The
-buffer records are arbitrary pytrees, so DER needs no new infrastructure: records
-gain a ``logits`` field (the model's outputs when the sample was seen), and the loss
-adds an MSE distillation term on replayed representatives.
-
-  DER   : loss = CE(new) + alpha * MSE(logits(reps), stored_logits)
-  DER++ : ... + beta * CE(reps)        (both: set beta > 0)
-
-Works with every strategy/exchange mode; the stored logits ride the same all_to_all.
+The orphaned helper module became a pair of registered strategies (``der``,
+``der_pp``) with stored-logit aux fields wired through the exchange, tiering,
+checkpoint and pjit layers (DESIGN.md §9). The historical helpers are
+re-exported unchanged; new code should select ``strategy='der'`` (or
+``'der_pp'``) on the trainer/CLI instead of hand-wiring the loss.
 """
 from __future__ import annotations
 
-from typing import Callable
+from repro.strategy.der import attach_logits, der_loss  # noqa: F401
 
-import jax
-import jax.numpy as jnp
-
-
-def attach_logits(batch, logits, top_k: int = 0):
-    """Extend a record batch with the logits to store (optionally top-k compressed:
-    values + indices — an 8-16x buffer-space saving for big vocabularies)."""
-    if top_k:
-        vals, idx = jax.lax.top_k(logits, top_k)
-        return dict(batch, logit_vals=vals, logit_idx=idx.astype(jnp.int32))
-    return dict(batch, logits=logits)
-
-
-def der_loss(
-    model_loss: Callable,  # (params, batch) -> (ce, metrics) on labels
-    forward: Callable,  # (params, batch) -> logits
-    *,
-    alpha: float = 0.5,
-    beta: float = 0.5,
-    top_k: int = 0,
-):
-    """Build a DER(++) loss over an augmented batch of b new + r replayed records.
-
-    The replayed rows carry stored logits; new rows carry zeros (masked out via the
-    ``is_replay`` flag)."""
-
-    def loss_fn(params, batch):
-        ce, metrics = model_loss(params, batch)
-        logits = forward(params, batch)
-        is_replay = batch["is_replay"].astype(jnp.float32)  # [B]
-        denom = jnp.maximum(jnp.sum(is_replay), 1.0)
-        if top_k:
-            got = jnp.take_along_axis(logits, batch["logit_idx"], axis=-1)
-            mse = jnp.mean(jnp.square(got - batch["logit_vals"]), axis=(-2, -1))
-        else:
-            mse = jnp.mean(
-                jnp.square(logits - batch["logits"].astype(logits.dtype)), axis=(-2, -1)
-            )
-        distill = jnp.sum(mse * is_replay) / denom
-        total = ce * (1.0 if beta else 0.0) + alpha * distill
-        if beta:  # DER++: CE on replayed rows is already inside ce (labels present)
-            total = ce + alpha * distill
-        metrics = dict(metrics, distill=distill)
-        return total, metrics
-
-    return loss_fn
+__all__ = ["attach_logits", "der_loss"]

@@ -207,6 +207,30 @@ def make_sharded_update(mesh, dp_axes: Tuple[str, ...], rcfg, exchange: str = "f
     return caller
 
 
+def global_replay_mask(global_batch: int, n_dp: int, valid):
+    """The ``is_replay`` row mask of an ``augment_global`` layout: f32
+    [B_g + N_dp*r], 1.0 exactly on *valid* replay rows (each worker's shard is
+    its b new rows followed by its r representatives). Tap strategies (DER)
+    mask distillation/CE terms with it."""
+    bw = global_batch // n_dp
+    m = jnp.concatenate(
+        [jnp.zeros((n_dp, bw), jnp.float32), valid.astype(jnp.float32)], axis=1)
+    return m.reshape(-1)
+
+
+def global_batch_rows(aug_tree, global_batch: int, n_dp: int, r: int):
+    """Inverse of ``augment_global`` for the new rows: slice the b-per-worker
+    batch rows out of augmented [B_g + N_dp*r, ...] leaves and restore the
+    original [B_g, ...] order (the rows ``on_store`` attaches aux values to)."""
+    bw = global_batch // n_dp
+
+    def one(x):
+        x2 = x.reshape((n_dp, bw + r) + x.shape[1:])
+        return x2[:, :bw].reshape((global_batch,) + x.shape[1:])
+
+    return jax.tree_util.tree_map(one, aug_tree)
+
+
 def augment_global(batch, reps, valid, n_dp: int, label_field: str = "labels"):
     """Concat per-worker shards: batch [B_g, ...] (dp-sharded) + reps [N_dp, r, ...] →
     augmented [B_g + N_dp*r, ...] where each worker's shard is its own b + r rows.

@@ -1,302 +1,37 @@
-"""Training-step factories for the three strategies the paper evaluates (§VI-D):
+"""Back-compat shim: the strategy machinery now lives in ``repro.strategy``.
 
-  * ``incremental``   — train on the new task only (lower bound: runtime; forgets).
-  * ``from_scratch``  — retrain on all accumulated data (upper bound: accuracy; slow).
-                        (Differs only in data selection + per-task re-init; same step.)
-  * ``rehearsal``     — the paper's contribution. The step is software-pipelined and
-    double-buffered (DESIGN.md §3): at step t the model trains on representatives
-    that were sampled (local draw + all_to_all exchange) at step t−1, while the
-    exchange producing step t+1's representatives is issued in the same program —
-    the collectives carry no data dependency on this step's grads, so XLA's
-    latency-hiding scheduler overlaps them with the backward pass (the paper's
-    Fig. 4 pipeline). ``RehearsalConfig`` picks the variant:
-      - ``pipelined=True`` or ``mode='async'``: the one-step-stale pipeline above.
-      - ``mode='sync'`` (and ``pipelined=False``): sample → wait → augment → train,
-        exchange on the critical path (the blocking baseline of Fig. 6).
-    Both variants run the *identical* issue half (Alg-1 push + global sample) under
-    the same carried RNG lineage, so pipelined representatives at step t are exactly
-    the sync representatives of step t−1 (the parity contract, tests/test_pipelined).
-
-Steps come in two flavours: single-device (CPU experiments) and manual-DP via
-``shard_map`` over a data axis, with optional int8 error-feedback gradient compression.
-The large-model pjit path lives in ``repro.launch.steps``.
+Historically this module held the hard-coded three-strategy tuple and the
+step factories. That machinery moved into the ``repro.strategy`` subsystem —
+``repro.strategy.base`` (the ``Strategy`` protocol + registry),
+``repro.strategy.builtin`` (the paper's trio + the GRASP embedding tap),
+``repro.strategy.der`` (DER/DER++), ``repro.strategy.step`` (the step
+factories) — so strategies are first-class plug points like buffer policies
+(DESIGN.md §9). Every public name is re-exported here unchanged; with the
+built-in strategies the emitted program is bit-for-bit the pre-subsystem code
+(tests/test_buffer_policies.py pins the trace). ``STRATEGIES`` is now the
+registry view (name -> Strategy): membership tests and iteration keep
+working. New code should import ``repro.strategy`` directly.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, NamedTuple, Optional
+from repro.strategy.base import STRATEGIES  # noqa: F401
+from repro.strategy.step import (  # noqa: F401
+    PipelinedRehearsalCarry,
+    TrainCarry,
+    carry_specs,
+    init_carry,
+    make_cl_step,
+    make_pipelined_halves,
+    rep_checksum,
+)
 
-import jax
-import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
-
-from repro.buffer import api as buffer_api
-from repro.core import rehearsal as rb
-from repro.core import distributed as dist
-from repro.core.distributed import PendingSample
-from repro.optim.grad_compress import compressed_psum, plain_psum
-from repro.utils.compat import shard_map
-
-
-# The three training strategies the paper evaluates (§VI-D); validated by
-# make_cl_step and by ContinualTrainer (repro.scenario.trainer).
-STRATEGIES = ("incremental", "from_scratch", "rehearsal")
-
-
-class PipelinedRehearsalCarry(NamedTuple):
-    """The double buffer threaded through the train loop (DESIGN.md §3):
-
-    ``reps``/``valid`` — the pending representatives, sampled + exchanged at step
-    t−1, that the pipelined step consumes at step t (its stale-by-one slot);
-    ``key`` — the RNG lineage: the PRNG key the *next* step's issue half will use
-    (established one step ahead so sync and pipelined runs draw the identical key
-    sequence, and so the lineage survives checkpoint/restart inside the carry).
-    """
-
-    reps: Any  # record pytree [r, ...] ([N_dp, r, ...] in manual-DP carries)
-    valid: Any  # bool[r]
-    key: Any  # PRNG key, replicated
-
-
-class TrainCarry(NamedTuple):
-    params: Any
-    opt: Any
-    buffer: Any  # BufferState | TieredState | None
-    pipe: Optional[PipelinedRehearsalCarry]  # in-flight sample + RNG lineage
-    ef: Any  # error-feedback state (int8 compression) or None
-
-    # Back-compat views of the double buffer (pre-pipeline field names).
-    @property
-    def reps(self):
-        return None if self.pipe is None else self.pipe.reps
-
-    @property
-    def reps_valid(self):
-        return None if self.pipe is None else self.pipe.valid
-
-
-def _add_worker_axis(tree, n_dp):
-    return jax.tree_util.tree_map(lambda x: jnp.broadcast_to(x, (n_dp,) + x.shape), tree)
-
-
-def init_carry(params, opt_state, item_spec=None, rcfg=None, ef=None, n_dp: int = 1,
-               label_field: Optional[str] = None, seed: int = 0):
-    """Fresh carry. With rehearsal on, the buffer (flat or tiered, per the config)
-    starts empty and the in-flight representatives start invalid — the first
-    iteration trains un-augmented, exactly the paper's bootstrap (§IV-D). ``seed``
-    roots the sampling RNG lineage; ``label_field=None`` inherits
-    ``rcfg.label_field``."""
-    buffer = pipe = None
-    if rcfg is not None and rcfg.enabled:
-        label_field = buffer_api.resolve_field(label_field, rcfg, "label_field", "label")
-        buffer = buffer_api.init_from_config(item_spec, rcfg)
-        key0 = jax.random.PRNGKey(seed)
-        reps, valid = buffer_api.buffer_sample(buffer, key0, rcfg.num_representatives,
-                                              rcfg)
-        reps = rb.mask_invalid(reps, valid, label_field)
-        if n_dp > 1:
-            buffer = _add_worker_axis(buffer, n_dp)
-            reps = _add_worker_axis(reps, n_dp)
-            valid = _add_worker_axis(valid, n_dp)
-        pipe = PipelinedRehearsalCarry(reps, valid, key0)
-    return TrainCarry(params, opt_state, buffer, pipe, ef)
-
-
-def carry_specs(carry: TrainCarry, dp_axis: Optional[str]) -> TrainCarry:
-    """Spec prefix-tree for shard_map / jit: params+opt replicated, buffer/reps
-    per-worker (leading worker axis sharded over the data axis), RNG key replicated."""
-    rep = P()
-    per_worker = P(dp_axis) if dp_axis else P()
-    pipe = None
-    if carry.pipe is not None:
-        pipe = PipelinedRehearsalCarry(reps=per_worker, valid=per_worker, key=rep)
-    return TrainCarry(
-        params=rep,
-        opt=rep,
-        buffer=None if carry.buffer is None else per_worker,
-        pipe=pipe,
-        ef=None if carry.ef is None else rep,
-    )
-
-
-def rep_checksum(reps, valid, label_field: str):
-    """Order-invariant fingerprint of the consumed representatives (parity tests;
-    also emitted by the pjit train step so the two backends can be compared)."""
-    labels = reps.get(label_field, reps.get("label")) if isinstance(reps, dict) else None
-    if labels is None:
-        labels = jax.tree_util.tree_leaves(reps)[0]
-    mask = valid.reshape(valid.shape + (1,) * (labels.ndim - valid.ndim))
-    return jnp.sum(jnp.asarray(labels, jnp.float32) * mask)
-
-
-def make_cl_step(
-    loss_fn: Callable,
-    opt_update: Callable,
-    rcfg,
-    *,
-    strategy: str = "rehearsal",
-    mesh=None,
-    dp_axis: str = "data",
-    exchange: str = "full",
-    compress: str = "none",
-    label_field: Optional[str] = None,
-    task_field: Optional[str] = None,
-    donate: bool = True,
-):
-    """Build ``step(carry, batch, key) -> (carry, metrics)`` (jitted).
-
-    ``loss_fn(params, batch) -> (loss, metrics_dict)``;
-    ``opt_update(grads, opt_state, params) -> (params, opt_state, metrics_dict)``.
-    With ``mesh``, the whole step runs in shard_map over ``dp_axis``: batch sharded,
-    params replicated, gradients explicitly psum'd (optionally int8-compressed).
-    ``label_field``/``task_field`` default to the ``RehearsalConfig`` field names.
-    """
-    if strategy not in STRATEGIES:
-        raise ValueError(f"unknown strategy {strategy!r}; expected one of {STRATEGIES}")
-    rehearse = strategy == "rehearsal" and rcfg is not None and rcfg.enabled
-    pipelined = rehearse and rcfg.is_pipelined
-    label_field = buffer_api.resolve_field(label_field, rcfg, "label_field", "label")
-    task_field = buffer_api.resolve_field(task_field, rcfg, "task_field", "task")
-
-    def worker(carry: TrainCarry, batch, key, axis, n_workers):
-        buf, pipe = carry.buffer, carry.pipe
-        metrics = {}
-        if rehearse:
-            idx = jax.lax.axis_index(axis) if axis is not None else 0
-            # RNG lineage: this step's issue half draws with the key established at
-            # step t-1 (carried), never with this step's own key — so sync and
-            # pipelined runs consume the identical key sequence.
-            k_issue = jax.random.fold_in(pipe.key, idx)
-            ex_axis = None if exchange == "local" else axis
-            new_buf, pending = dist.issue_sample(
-                buf, batch, batch[task_field], k_issue, rcfg, ex_axis, exchange
-            )
-            if pipelined:  # consume the reps sampled at t-1 (double buffer)
-                train_reps, train_valid = dist.consume_reps(
-                    PendingSample(pipe.reps, pipe.valid), label_field
-                )
-            else:  # sync: this step's freshly issued sample, blocking
-                train_reps, train_valid = dist.consume_reps(pending, label_field)
-            train_batch = rb.augment_batch(batch, train_reps, train_valid, label_field)
-            buf = new_buf
-            pipe = PipelinedRehearsalCarry(pending.reps, pending.valid, key)
-            metrics["buffer_fill"] = buffer_api.buffer_fill(buf).astype(jnp.float32)
-            metrics["rep_checksum"] = rep_checksum(train_reps, train_valid, label_field)
-        else:
-            train_batch = batch
-
-        (loss, aux_metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
-            carry.params, train_batch
-        )
-        ef = carry.ef
-        if axis is not None:
-            if compress == "int8":
-                grads, ef = compressed_psum(grads, axis, ef, n_workers)
-            else:
-                grads = plain_psum(grads, axis, n_workers)
-            loss = jax.lax.pmean(loss, axis)
-        params, opt, opt_metrics = opt_update(grads, carry.opt, carry.params)
-        metrics.update(loss=loss, **aux_metrics, **opt_metrics)
-        if axis is not None:
-            metrics = jax.tree_util.tree_map(
-                lambda m: jax.lax.pmean(jnp.asarray(m, jnp.float32), axis), metrics
-            )
-        return TrainCarry(params, opt, buf, pipe, ef), metrics
-
-    if mesh is None:
-        @functools.partial(jax.jit, donate_argnums=(0,) if donate else ())
-        def step(carry, batch, key):
-            return worker(carry, batch, key, None, 1)
-
-        return step
-
-    n_workers = mesh.shape[dp_axis]
-
-    def body(carry, batch, key):
-        # strip the worker axis from per-worker carry fields (key stays replicated)
-        def squeeze(t):
-            return None if t is None else jax.tree_util.tree_map(lambda x: x[0], t)
-
-        local = TrainCarry(
-            carry.params, carry.opt,
-            squeeze(carry.buffer),
-            None if carry.pipe is None else PipelinedRehearsalCarry(
-                squeeze(carry.pipe.reps), squeeze(carry.pipe.valid), carry.pipe.key),
-            carry.ef,
-        )
-        new_c, metrics = worker(local, batch, key, dp_axis, n_workers)
-
-        def unsqueeze(t):
-            return None if t is None else jax.tree_util.tree_map(lambda x: x[None], t)
-
-        out = TrainCarry(
-            new_c.params, new_c.opt,
-            unsqueeze(new_c.buffer),
-            None if new_c.pipe is None else PipelinedRehearsalCarry(
-                unsqueeze(new_c.pipe.reps), unsqueeze(new_c.pipe.valid), new_c.pipe.key),
-            new_c.ef,
-        )
-        return out, metrics
-
-    compiled = {}
-
-    def step(carry, batch, key):
-        if "fn" not in compiled:
-            cspecs = carry_specs(carry, dp_axis)
-            fn = shard_map(
-                body, mesh=mesh,
-                in_specs=(cspecs, P(dp_axis), P()),
-                out_specs=(cspecs, P()),
-                check_vma=False,
-            )
-            compiled["fn"] = jax.jit(fn, donate_argnums=(0,) if donate else ())
-        return compiled["fn"](carry, batch, key)
-
-    return step
-
-
-def make_pipelined_halves(
-    loss_fn: Callable,
-    opt_update: Callable,
-    rcfg,
-    *,
-    exchange: str = "local",
-    label_field: Optional[str] = None,
-    task_field: Optional[str] = None,
-):
-    """The pipelined step as TWO separately-dispatched XLA programs (single device):
-
-      ``train_half(params, opt, pipe, batch)``  — augment with the carried pending
-          reps and take the optimizer step (no dependency on this step's exchange);
-      ``issue_half(buffer, pipe, batch, key)``  — Alg-1 push + the global sample
-          producing step t+1's representatives.
-
-    Dispatch order ``train_half; issue_half; <host loads next batch>; block(loss)``
-    lets the issue program's device execution overlap the host-side data loading of
-    the next step — the CPU-visible analogue of the paper's background Argobots
-    threads (benchmarks/fig6_breakdown.py measures exactly this; DESIGN.md §3).
-    The fused single-program form (``make_cl_step``) is the deployed TPU path where
-    XLA's latency-hiding scheduler provides the overlap instead.
-    """
-    label_field = buffer_api.resolve_field(label_field, rcfg, "label_field", "label")
-    task_field = buffer_api.resolve_field(task_field, rcfg, "task_field", "task")
-
-    @jax.jit
-    def train_half(params, opt, pipe, batch):
-        train_reps, train_valid = dist.consume_reps(
-            PendingSample(pipe.reps, pipe.valid), label_field
-        )
-        train_batch = rb.augment_batch(batch, train_reps, train_valid, label_field)
-        (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, train_batch)
-        params, opt, om = opt_update(grads, opt, params)
-        return params, opt, dict(aux, **om, loss=loss)
-
-    @jax.jit
-    def issue_half(buffer, pipe, batch, key):
-        k_issue = jax.random.fold_in(pipe.key, 0)  # single worker: idx 0, as fused
-        new_buf, pending = dist.issue_sample(
-            buffer, batch, batch[task_field], k_issue, rcfg, None, exchange
-        )
-        return new_buf, PipelinedRehearsalCarry(pending.reps, pending.valid, key)
-
-    return train_half, issue_half
+__all__ = [
+    "PipelinedRehearsalCarry",
+    "STRATEGIES",
+    "TrainCarry",
+    "carry_specs",
+    "init_carry",
+    "make_cl_step",
+    "make_pipelined_halves",
+    "rep_checksum",
+]

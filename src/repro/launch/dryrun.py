@@ -25,7 +25,8 @@ from repro.utils.compat import cost_analysis, set_mesh
 
 
 def rehearsal_buffer_cost(built, rcfg) -> dict:
-    """Per-DP-worker rehearsal-buffer memory model, tiering-aware.
+    """Per-DP-worker rehearsal-buffer memory model, tiering- and
+    strategy-aware.
 
     Flat (``tiering='off'``): ``K × slots`` raw rows resident in HBM — exactly
     what the compiled step allocates. Tiered (``'host'``): the hot tier plus the
@@ -35,11 +36,18 @@ def rehearsal_buffer_cost(built, rcfg) -> dict:
     leaves stored raw). The cold tier never appears in the compiled HLO (it is
     host-resident), so it must be modeled here rather than read from XLA's
     memory analysis.
+
+    Strategy aux fields (DER stored logits, grasp_embed embeddings) are part
+    of the record spec the builder extends (``built.meta['aux_fields']``), so
+    their bytes land in ``raw_row_bytes`` automatically; the ``aux_*`` entries
+    break them out so the dense-vs-top-k logit saving (8–16x for big
+    vocabularies) is visible in the record.
     """
     if built.meta.get("mode", "off") == "off":
         return {"mode": "off", "hot_hbm_bytes": 0, "cold_host_bytes": 0,
                 "total_bytes": 0, "rows_per_bucket": 0}
     reps_s = built.args[3]  # [n_dp, r, ...] record structure
+    aux_fields = dict(built.meta.get("aux_fields", {}))
     raw_row = cold_row = 0
     for leaf in jax.tree_util.tree_leaves(reps_s):
         shape = leaf.shape[2:]
@@ -52,6 +60,7 @@ def rehearsal_buffer_cost(built, rcfg) -> dict:
             cold_row += n + 4  # int8 q + one f32 scale per row-leaf
         else:
             cold_row += n * itemsize
+    aux_row = sum(aux_fields.values())
     k = rcfg.num_buckets
     hot_slots = built.meta["slots_per_bucket"]
     if getattr(rcfg, "tiered", False):
@@ -75,6 +84,12 @@ def rehearsal_buffer_cost(built, rcfg) -> dict:
         "cold_placement": resolve_placement(rcfg) if cold_slots else None,
         "raw_row_bytes": raw_row,
         "cold_row_bytes": cold_row,
+        # strategy aux-field share of every stored row (DER logits: dense
+        # vocab rows vs top-k vals+idx pairs; grasp_embed embeddings)
+        "strategy": built.meta.get("strategy", "rehearsal"),
+        "aux_fields": aux_fields,
+        "aux_row_bytes": int(aux_row),
+        "aux_hot_bytes": int(aux_row) * k * hot_slots,
         "hot_slots_per_bucket": hot_slots,
         "cold_slots_per_bucket": cold_slots,
         "demote_stage_rows": stage,
@@ -107,6 +122,8 @@ def run_cell(
     kv_dtype: str = "bfloat16",
     tiering: str = "off",
     cold_slots: int = 0,
+    strategy: str = "rehearsal",
+    der_top_k: int = 0,
 ) -> dict:
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
@@ -121,7 +138,8 @@ def run_cell(
                            compute_dtype=compute_dtype, scan_layers=scan_layers,
                            attn=attn, sp=sp, param_dtype=param_dtype, zero1=zero1,
                            kv_dtype=kv_dtype, tiering=tiering,
-                           cold_slots=cold_slots)
+                           cold_slots=cold_slots, strategy=strategy,
+                           der_top_k=der_top_k)
     record["cell"] = cell_id
     os.makedirs(out_dir, exist_ok=True)
     with open(os.path.join(out_dir, cell_id + ".json"), "w") as f:
@@ -148,12 +166,16 @@ def _compile_cell(
     kv_dtype: str = "bfloat16",
     tiering: str = "off",
     cold_slots: int = 0,
+    strategy: str = "rehearsal",
+    der_top_k: int = 0,
 ) -> dict:
     if capacity != 1.25:
         cfg = dataclasses.replace(cfg, capacity_factor=capacity)
     mesh_name = "multi" if multi_pod else "single"
     # The compiled step always carries the flat (hot/HBM) buffer — the cold
     # tier is host-resident and enters only the analytic cost model below.
+    from repro.configs.base import ScenarioConfig, StrategyConfig
+
     run = RunConfig(
         model=cfg,
         shape=shape,
@@ -162,6 +184,8 @@ def _compile_cell(
                           sequence_parallel=sp, param_dtype=param_dtype,
                           zero1=zero1, kv_dtype=kv_dtype),
         rehearsal=RehearsalConfig(mode=mode),
+        strategy=StrategyConfig(top_k=der_top_k),
+        scenario=ScenarioConfig(strategy=strategy),
     )
     mesh = make_production_mesh(multi_pod=multi_pod)
     chips = 1
@@ -333,6 +357,12 @@ def main():
                     help="model a host int8 cold tier in the buffer cost model")
     ap.add_argument("--cold-slots", type=int, default=0,
                     help="cold rows/bucket for the tiered cost model (0 -> 3x hot)")
+    ap.add_argument("--strategy", default="rehearsal",
+                    help="training strategy for train cells (rehearsal | der | "
+                         "der_pp | grasp_embed); tap strategies extend the "
+                         "record spec with aux fields the cost model accounts")
+    ap.add_argument("--der-top-k", type=int, default=0,
+                    help="DER stored-logit top-k compression (0 = dense rows)")
     ap.add_argument("--method", default="scan", choices=["scan", "scaled"],
                     help="scan: full-depth compile proof; scaled: two-depth unrolled "
                          "fit for accurate roofline costs")
@@ -365,6 +395,7 @@ def main():
                         attn=args.attn, sp=args.sp, param_dtype=args.param_dtype,
                         zero1=args.zero1, kv_dtype=args.kv_dtype,
                         tiering=args.tiering, cold_slots=args.cold_slots,
+                        strategy=args.strategy, der_top_k=args.der_top_k,
                         out_dir=args.out, tag=args.tag,
                     )
                     if rec["status"] == "skipped":

@@ -37,7 +37,7 @@ from repro.buffer import tiered as tiered_mod
 from repro.configs.base import RunConfig, ShapeConfig
 from repro.core import distributed as dist
 from repro.core import rehearsal as rb
-from repro.core.strategies import rep_checksum
+from repro.strategy import outputs_row_spec, rep_checksum, resolve_strategy
 from repro.models import StackCtx, build_model
 from repro.optim import make_optimizer
 from repro.parallel import (
@@ -100,8 +100,12 @@ def build_train_step(
     exchange: str = "full",
     buffer_budget_bytes: Optional[int] = 64 << 20,
     donate: bool = True,
+    strategy=None,  # None -> run.scenario.strategy; name or Strategy
 ) -> BuiltStep:
     cfg, shape, tcfg, rcfg = run.model, run.shape, run.train, run.rehearsal
+    strat = resolve_strategy(strategy if strategy is not None
+                             else run.scenario.strategy)
+    scfg = run.strategy
     mode = rehearsal_mode if rehearsal_mode is not None else rcfg.mode
     # one-step-stale double buffering (DESIGN.md §3): async mode, or forced via
     # the ``rehearsal.pipelined`` flag (sync mode stays available for parity runs)
@@ -130,9 +134,50 @@ def build_train_step(
     item_s = jax.tree_util.tree_map(
         lambda l: jax.ShapeDtypeStruct(l.shape[1:], l.dtype), batch_s
     )
-    use_rehearsal = mode != "off"
+    use_rehearsal = mode != "off" and strat.uses_buffer
+    if strat.fresh_params_per_task or strat.cumulative_data:
+        raise NotImplementedError(
+            f"strategy {strat.name!r} needs per-task re-init / cumulative "
+            f"sampling, which the pjit step builder does not implement; use "
+            f"the carry backend (mesh=None)")
+    if not strat.uses_buffer and mode != "off":
+        # mirror the trainer: a non-buffer strategy with rehearsal on would
+        # compile a plain step while meta reports rehearsal semantics
+        raise ValueError(
+            f"strategy {strat.name!r} never touches the buffer; build with "
+            f"rehearsal.mode='off'")
+    if strat.needs_outputs and strat.uses_buffer and not use_rehearsal:
+        # without this, a der/grasp_embed run with mode='off' would silently
+        # train plain incremental while meta still reports the strategy name
+        raise ValueError(
+            f"strategy {strat.name!r} stores aux fields in the rehearsal "
+            f"buffer; rehearsal.mode='off' would silently degrade it to "
+            f"'incremental' — set mode='async'")
     r = rcfg.num_representatives
     task_field = rcfg.task_field
+    # Tap strategies (DER/DER++/grasp_embed): the record layout grows aux
+    # fields derived from the model-outputs tap; the extended item_s flows
+    # into the buffer, reps and exchange shapes below unchanged.
+    tap = use_rehearsal and strat.needs_outputs
+    aux_spec = {}
+    if tap:
+        if not pipelined:
+            raise ValueError(
+                f"strategy {strat.name!r} requires the pipelined rehearsal "
+                f"path (rehearsal.mode='async'): the sync form would need "
+                f"the sampled representatives before the forward that "
+                f"produces the aux values to store")
+        if model.outputs is None:
+            raise NotImplementedError(
+                f"model family {cfg.family!r} exposes no outputs tap; "
+                f"strategy {strat.name!r} is unavailable for it")
+
+        def outputs_of(params, batch):
+            return model.outputs(tree_cast(params, compute_dtype), batch, ctx)
+
+        aux_spec = strat.record_fields(
+            item_s, outputs_row_spec(outputs_of, params_s, batch_s), scfg)
+        item_s = dict(item_s, **aux_spec)
     tiered = use_rehearsal and rcfg.tiered
     cold_placement = None
     if tiered:
@@ -210,9 +255,41 @@ def build_train_step(
                 metrics, **om, **fingerprints, loss=loss
             )
 
-        args = (params_s, opt_s, buffer_s, reps_s, valid_s, batch_s, key_s)
-        shardings = _rehearsal_shardings(params_s, opt_s, buffer_sh, reps_s, batch_s,
-                                         cfg, mesh, zero1=tcfg.zero1)
+    elif tap:  # pipelined tap strategy: DER(++) / grasp_embed (DESIGN.md §9)
+        tap_loss = strat.build_loss(None, outputs_of, scfg,
+                                    label_field=rcfg.label_field)
+        grad_tap = jax.value_and_grad(tap_loss, has_aux=True)
+        bg = shape.global_batch
+
+        def step(params, opt_state, buffer, reps, valid, batch, key):
+            # consume the pending slot; new rows carry aux placeholders
+            # (masked out of the loss via is_replay — only valid replay rows
+            # distill), replay rows their stored aux fields
+            aug = dist.augment_global(
+                dict(batch, **strat.placeholder_fields(aux_spec, bg)),
+                reps, valid, n_dp, rcfg.label_field)
+            aug = dict(aug, is_replay=dist.global_replay_mask(bg, n_dp, valid))
+            (loss, (metrics, outs)), grads = grad_tap(params, aug)
+            # store the new rows with this step's outputs; depends on the
+            # forward only, so the exchange still overlaps the backward pass.
+            # r comes from the actual pending slot: a small exchange group can
+            # deliver fewer than num_representatives rows (sample_global).
+            outs_b = dist.global_batch_rows(
+                {k: v for k, v in outs.items() if getattr(v, "ndim", 0)},
+                bg, n_dp, valid.shape[1])
+            store = strat.on_store(batch, outs_b, scfg)
+            buffer, next_reps, next_valid = sharded_update(
+                buffer, store, batch[task_field], key
+            )
+            params, opt_state, om = opt_update(grads, opt_state, params)
+            fingerprints = {
+                "buffer_fill": buffer_api.buffer_fill(buffer).astype(jnp.float32),
+                "rep_checksum": rep_checksum(reps, valid, rcfg.label_field),
+            }
+            return params, opt_state, buffer, next_reps, next_valid, dict(
+                metrics, **om, **fingerprints, loss=loss
+            )
+
     else:  # pipelined — the paper's contribution (one-step-stale double buffer)
 
         def step(params, opt_state, buffer, reps, valid, batch, key):
@@ -234,10 +311,11 @@ def build_train_step(
                 metrics, **om, **fingerprints, loss=loss
             )
 
-        args = (params_s, opt_s, buffer_s, reps_s, valid_s, batch_s, key_s)
-        shardings = _rehearsal_shardings(params_s, opt_s, buffer_sh, reps_s, batch_s,
-                                         cfg, mesh, zero1=tcfg.zero1)
 
+    if use_rehearsal:  # all three rehearsal forms share the same signature
+        args = (params_s, opt_s, buffer_s, reps_s, valid_s, batch_s, key_s)
+        shardings = _rehearsal_shardings(params_s, opt_s, buffer_sh, reps_s,
+                                         batch_s, cfg, mesh, zero1=tcfg.zero1)
     donate_argnums = tuple(range(len(args) - 2)) if donate else ()
     # out shardings pin the carried state to its input layout (params, opt,
     # buffer, reps, valid round-trip through the step across calls — without
@@ -247,10 +325,16 @@ def build_train_step(
     out_shardings = tuple(shardings[:n_state]) + (NamedSharding(mesh, P()),)
     fn = jax.jit(step, in_shardings=shardings, out_shardings=out_shardings,
                  donate_argnums=donate_argnums)
+    aux_bytes = {
+        name: int(np.prod(s.shape)) * np.dtype(s.dtype).itemsize
+        for name, s in aux_spec.items()
+    }
     meta = {
         "kind": "train",
         "mode": mode if use_rehearsal else "off",
         "pipelined": bool(use_rehearsal and pipelined),
+        "strategy": strat.name,
+        "aux_fields": aux_bytes,  # per-record bytes of strategy aux fields
         "n_dp": n_dp,
         "slots_per_bucket": slots,
         "tiering": rcfg.tiering if use_rehearsal else "off",

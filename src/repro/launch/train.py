@@ -22,6 +22,7 @@ from repro.configs.base import (
     RunConfig,
     ScenarioConfig,
     ShapeConfig,
+    StrategyConfig,
     TrainConfig,
 )
 from repro.launch.mesh import make_mesh
@@ -42,6 +43,17 @@ def main(argv=None):
     ap.add_argument("--seq-len", type=int, default=128)
     ap.add_argument("--global-batch", type=int, default=8)
     ap.add_argument("--mode", default="async", choices=["async", "sync", "off"])
+    ap.add_argument("--strategy", default="",
+                    help="training strategy (rehearsal | der | der_pp | "
+                         "grasp_embed | incremental); default: rehearsal, or "
+                         "incremental when --mode off")
+    ap.add_argument("--der-alpha", type=float, default=0.5,
+                    help="DER: weight of the logit-MSE distillation term")
+    ap.add_argument("--der-beta", type=float, default=0.5,
+                    help="DER++: weight of the replay-row CE term")
+    ap.add_argument("--der-top-k", type=int, default=0,
+                    help="store top-k (value,index) logit pairs instead of the "
+                         "dense vocab row (0 = dense; 8-16x buffer saving)")
     ap.add_argument("--exchange", default="full",
                     choices=["full", "pod_local", "local"])
     ap.add_argument("--policy", default="reservoir",
@@ -62,6 +74,8 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    strategy = args.strategy or (
+        "rehearsal" if args.mode != "off" else "incremental")
     d, m = (int(x) for x in args.mesh.split("x"))
     mesh = make_mesh((d, m), ("data", "model"))
     shape = ShapeConfig("train_cli", args.seq_len, args.global_batch, "train")
@@ -77,9 +91,11 @@ def main(argv=None):
                                   policy=args.policy, tiering=args.tiering,
                                   hot_slots=args.hot_slots,
                                   cold_slots=args.cold_slots),
+        strategy=StrategyConfig(alpha=args.der_alpha, beta=args.der_beta,
+                                top_k=args.der_top_k),
         scenario=ScenarioConfig(
             name="class_incremental", modality="tokens",
-            strategy="rehearsal" if args.mode != "off" else "incremental",
+            strategy=strategy,
             num_tasks=args.tasks, epochs_per_task=1,
             steps_per_epoch=args.steps_per_task, batch_size=args.global_batch,
             seed=args.seed, vocab_size=vocab_active, seq_len=args.seq_len,
@@ -87,8 +103,13 @@ def main(argv=None):
     )
     scenario = TokenClassIncremental(run.scenario)
 
-    log.info("arch=%s params=%.1fM mesh=%s mode=%s",
-             cfg.name, cfg.param_count() / 1e6, dict(mesh.shape), args.mode)
+    log.info("arch=%s params=%.1fM mesh=%s mode=%s strategy=%s",
+             cfg.name, cfg.param_count() / 1e6, dict(mesh.shape), args.mode,
+             strategy)
+    if strategy in ("der", "der_pp") and args.der_top_k:
+        log.info("der: storing top-%d logit (val,idx) pairs per position "
+                 "(alpha=%.2f beta=%.2f)", args.der_top_k, args.der_alpha,
+                 args.der_beta)
     if run.rehearsal.tiered:
         from repro.launch.mesh import memory_kinds
         log.info("tiered buffer: hot=%d cold=%d slots/bucket; mesh memory "

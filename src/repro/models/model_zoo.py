@@ -34,6 +34,17 @@ class LM:
     decode: Callable
     input_specs: Callable
     decode_specs: Callable
+    # Model-outputs tap (DESIGN.md §9): (params, batch, ctx) ->
+    # {"logits": [B,S,V], "embed": [B,D], "aux": scalar} — hidden state runs
+    # once, logits + per-record penultimate embedding share it. None for
+    # families without the tap (enc-dec).
+    outputs: Any = None
+
+
+# MoE load-balance aux-loss weight: the single definition the LM losses and
+# the tap-strategy losses (repro.strategy) share, so a strategy-built loss
+# stays comparable to the plain model loss on the same model.
+DEFAULT_AUX_WEIGHT = 0.01
 
 
 def cross_entropy(logits, labels, mask=None, label_smoothing: float = 0.0):
@@ -109,11 +120,19 @@ def _build_decoder(cfg) -> LM:
     def forward(params, batch, ctx: StackCtx):
         return tf.forward_decoder(params, batch, cfg, ctx)
 
-    def loss(params, batch, ctx: StackCtx, aux_weight: float = 0.01):
+    def loss(params, batch, ctx: StackCtx, aux_weight: float = DEFAULT_AUX_WEIGHT):
         logits, aux = forward(params, batch, ctx)
         ce = cross_entropy(logits, batch["labels"])
         metrics = {"ce": ce, "aux": aux}
         return ce + aux_weight * aux, metrics
+
+    def outputs(params, batch, ctx: StackCtx):
+        hidden, aux = tf.hidden_decoder(params, batch, cfg, ctx)
+        logits = tf.logits_from(params, hidden, cfg, ctx)
+        # per-record embedding: mean over sequence positions of the
+        # post-final-norm hidden state (the activations the head consumes)
+        embed = jnp.mean(hidden.astype(jnp.float32), axis=1)
+        return {"logits": logits, "embed": embed, "aux": aux}
 
     def init_cache(params, batch_size: int, seq_len: int, dtype=jnp.bfloat16):
         return tf.init_decoder_cache(cfg, batch_size, seq_len, dtype)
@@ -130,6 +149,7 @@ def _build_decoder(cfg) -> LM:
         decode=decode,
         input_specs=lambda shape: _train_specs(cfg, shape),
         decode_specs=lambda shape: _decode_specs(cfg, shape),
+        outputs=outputs,
     )
 
 

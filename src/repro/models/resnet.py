@@ -141,8 +141,12 @@ def init_cnn(key, cfg):
     return params
 
 
-def apply_cnn(params, images, cfg):
-    """images [B,H,W,C] -> logits [B,num_classes]."""
+def cnn_outputs(params, images, cfg):
+    """The model-outputs tap: images [B,H,W,C] ->
+    {"logits": [B,num_classes], "embed": [B,D]} where ``embed`` is the pooled
+    penultimate activation (the feature the head projects) — computed once per
+    step and shared by the loss, DER logit storage, and the GRASP
+    embedding-space prototype distances (DESIGN.md §9)."""
     _, apply_blk, _ = _BLOCKS[cfg.variant]
     x = jax.nn.relu(groupnorm(params["gn_stem"], conv(images, params["stem"])))
     for s, blocks in enumerate(params["stages"]):
@@ -150,4 +154,9 @@ def apply_cnn(params, images, cfg):
             stride = 2 if (b == 0 and s > 0) else 1
             x = apply_blk(blk, x, stride)
     x = jnp.mean(x, axis=(1, 2))
-    return x @ params["head"].astype(x.dtype)
+    return {"logits": x @ params["head"].astype(x.dtype), "embed": x}
+
+
+def apply_cnn(params, images, cfg):
+    """images [B,H,W,C] -> logits [B,num_classes]."""
+    return cnn_outputs(params, images, cfg)["logits"]

@@ -246,6 +246,15 @@ def _remat_wrap(fn, policy: str):
 
 def forward_decoder(params, batch, cfg, ctx: StackCtx, positions=None, causal=True):
     """Full-sequence forward. Returns (logits [B,S,V], aux_loss)."""
+    x, aux = hidden_decoder(params, batch, cfg, ctx, positions=positions,
+                            causal=causal)
+    return logits_from(params, x, cfg, ctx), aux
+
+
+def hidden_decoder(params, batch, cfg, ctx: StackCtx, positions=None, causal=True):
+    """The stack minus the head: returns (hidden [B,S,D] post-final-norm,
+    aux_loss) — the penultimate-activation tap the strategy subsystem shares
+    between logit computation and embedding storage (DESIGN.md §9)."""
     x = embed_inputs(params, batch, cfg, ctx)
     b, s, _ = x.shape
     if positions is None:
@@ -274,7 +283,7 @@ def forward_decoder(params, batch, cfg, ctx: StackCtx, positions=None, causal=Tr
             carry = unit(carry, unit_params)
     x, aux = carry
     x = apply_norm(params["final_norm"], x)
-    return logits_from(params, x, cfg, ctx), aux
+    return x, aux
 
 
 def init_decoder_cache(cfg, batch: int, seq_len: int, dtype=jnp.bfloat16):

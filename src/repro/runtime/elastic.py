@@ -27,7 +27,11 @@ import numpy as np
 from repro.buffer.tiered import TieredState
 from repro.checkpoint.manager import reshard_buffer
 from repro.core.rehearsal import BufferState
-from repro.core.strategies import PipelinedRehearsalCarry, TrainCarry
+from repro.strategy import PipelinedRehearsalCarry, TrainCarry
+
+# Strategy aux fields (DER stored logits, grasp_embed embeddings) are ordinary
+# record leaves: they pool + re-deal with their records through every path
+# below, and the hot-overflow demotion int8-encodes them like any float leaf.
 
 
 def _reshard_buffer_state(buffer: BufferState, n_new: int, policy) -> BufferState:

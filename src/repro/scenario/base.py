@@ -33,11 +33,17 @@ class Problem(NamedTuple):
     ``eval_fn(params, task) -> float`` is the scenario-defined per-task metric
     (top-1 accuracy for the vision scenarios, mean loss for token streams —
     higher-is-better is NOT assumed by the trainer, only recorded).
-    """
+
+    ``forward_outputs`` is the model-outputs tap (DESIGN.md §9):
+    ``(params, batch) -> {"logits": [B,...], "embed": [B,D], ...}`` — the
+    forward pass strategies like DER (stored logits) and grasp_embed
+    (prototype embeddings) build their loss and aux-field storage from, run
+    once per step. ``None`` restricts the run to non-tap strategies."""
 
     init_params_fn: Callable[[Any], Any]  # key -> params
     loss_fn: Callable[[Any, Dict], Any]  # (params, batch) -> (loss, metrics)
     eval_fn: Callable[[Any, int], float]  # (params, task) -> metric
+    forward_outputs: Optional[Callable] = None  # (params, batch) -> outputs
 
 
 class Scenario(abc.ABC):

@@ -79,7 +79,7 @@ class _VisionScenario(Scenario):
     def build_problem(self, run) -> Problem:
         from repro.core.cl_loop import topk_accuracy
         from repro.models.model_zoo import cross_entropy
-        from repro.models.resnet import apply_cnn, init_cnn
+        from repro.models.resnet import apply_cnn, cnn_outputs, init_cnn
 
         ccfg = run.model if run.model is not None else resnet50_cl.reduced(
             num_classes=self.num_classes)
@@ -94,6 +94,9 @@ class _VisionScenario(Scenario):
             return cross_entropy(logits[:, None, :],
                                  batch[self.label_field][:, None]), {}
 
+        def forward_outputs(params, batch):
+            return cnn_outputs(params, batch["images"], ccfg)
+
         eval_logits = jax.jit(lambda p, im: apply_cnn(p, im, ccfg))
 
         def eval_fn(params, task):
@@ -101,7 +104,8 @@ class _VisionScenario(Scenario):
             return float(topk_accuracy(eval_logits(params, jnp.asarray(ev["images"])),
                                        jnp.asarray(ev[self.label_field]), k=1))
 
-        return Problem(lambda k: init_cnn(k, ccfg), loss_fn, eval_fn)
+        return Problem(lambda k: init_cnn(k, ccfg), loss_fn, eval_fn,
+                       forward_outputs=forward_outputs)
 
 
 class ClassIncremental(_VisionScenario):
@@ -235,19 +239,26 @@ class TokenClassIncremental(Scenario):
                                 "num_layers": 2})
         model = build_model(cfg)
         dtype = jnp.float32 if run.train.compute_dtype == "float32" else jnp.bfloat16
-        ctx = StackCtx(cfg=cfg, compute_dtype=dtype, remat=run.train.remat)
+        # scan_layers mirrors the pjit backend's StackCtx so tap strategies
+        # (DER stored logits) produce bit-identical forwards on both backends
+        ctx = StackCtx(cfg=cfg, compute_dtype=dtype, remat=run.train.remat,
+                       scan_layers=run.train.scan_layers)
         eval_ctx = StackCtx(cfg=cfg, compute_dtype=jnp.float32, remat="none")
 
         def loss_fn(params, batch):
             loss, _ = model.loss(params, batch, ctx)
             return loss, {}
 
+        def forward_outputs(params, batch):
+            return model.outputs(params, batch, ctx)
+
         def eval_fn(params, task):
             ev = {k: jnp.asarray(v) for k, v in self.eval_set(task).items()}
             loss, _ = model.loss(params, ev, eval_ctx)
             return float(loss)
 
-        return Problem(lambda k: model.init(k, self.seq_len), loss_fn, eval_fn)
+        return Problem(lambda k: model.init(k, self.seq_len), loss_fn, eval_fn,
+                       forward_outputs=forward_outputs)
 
 
 def _class_incremental_factory(cfg: ScenarioConfig) -> Scenario:

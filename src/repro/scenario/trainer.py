@@ -41,7 +41,7 @@ from repro.scenario.base import Scenario, get_scenario
 OVERRIDE_KEYS = frozenset({
     "batch_fn", "cumulative_batch_fn", "eval_fn", "init_params_fn",
     "init_opt_fn", "step_fn", "loss_fn", "item_spec", "rcfg", "label_field",
-    "checkpoint_cb",
+    "checkpoint_cb", "forward_outputs",
 })
 
 
@@ -77,7 +77,7 @@ class ContinualTrainer:
                  log_every: int = 0, donate: bool = True,
                  step_form: str = "fused",
                  overrides: Optional[Dict[str, Any]] = None):
-        from repro.core.strategies import STRATEGIES
+        from repro.strategy import STRATEGIES, get_strategy
 
         ov = dict(overrides or {})
         unknown = set(ov) - OVERRIDE_KEYS
@@ -107,7 +107,12 @@ class ContinualTrainer:
         self.strategy = strategy or sc.strategy
         if self.strategy not in STRATEGIES:
             raise ValueError(
-                f"unknown strategy {self.strategy!r}; expected one of {STRATEGIES}")
+                f"unknown strategy {self.strategy!r}; expected one of "
+                f"{sorted(STRATEGIES)}")
+        # the resolved Strategy drives loss shape, buffer usage, and any
+        # record aux fields; the name stays for logging/result records
+        self.strat = get_strategy(self.strategy)
+        self.scfg = run.strategy  # StrategyConfig (alpha/beta/top_k)
         self.num_tasks = (self.scenario.num_tasks if self.scenario is not None
                           else sc.num_tasks)
         self.epochs_per_task = sc.epochs_per_task
@@ -122,10 +127,20 @@ class ContinualTrainer:
             rcfg = run.rehearsal
             if self.scenario is not None and sc.auto_defaults:
                 rcfg = self.scenario.apply_defaults(rcfg)
-                if self.strategy != "rehearsal" and rcfg is not None:
-                    # non-rehearsal strategies never touch the buffer — skip
+                if not self.strat.uses_buffer and rcfg is not None:
+                    # non-buffer strategies never touch the buffer — skip
                     # allocating one (explicit rcfg overrides opt out of this)
                     rcfg = dataclasses.replace(rcfg, mode="off")
+                elif (getattr(self.strat, "recommended_policy", None)
+                      and rcfg is not None
+                      and rcfg.policy == type(rcfg)().policy):
+                    # e.g. grasp_embed pairs with the grasp policy when the
+                    # config's policy sits at its dataclass default — the same
+                    # convention as Scenario.apply_defaults (an explicit
+                    # non-default policy always wins; auto_defaults=False
+                    # turns all pairing off)
+                    rcfg = dataclasses.replace(
+                        rcfg, policy=self.strat.recommended_policy)
         self.rcfg = rcfg
         self.label_field = resolve_field(
             ov.get("label_field",
@@ -141,8 +156,17 @@ class ContinualTrainer:
             "init_params_fn", problem.init_params_fn if problem else None)
         self.loss_fn = ov.get("loss_fn", problem.loss_fn if problem else None)
         self.eval_fn = ov.get("eval_fn", problem.eval_fn if problem else None)
+        self.forward_outputs = ov.get(
+            "forward_outputs",
+            problem.forward_outputs if problem else None)
         self.item_spec = ov.get(
             "item_spec", self.scenario.item_spec if self.scenario else None)
+        # tap strategies (DER/grasp_embed) extend the record layout with aux
+        # fields derived from the model-outputs tap — the buffer, exchange,
+        # tiering, checkpoint and reshard layers all see the extended spec
+        self.aux_spec = self._strategy_aux_spec()
+        if self.aux_spec:
+            self.item_spec = dict(self.item_spec, **self.aux_spec)
         self._batch_fn = ov.get(
             "batch_fn", self.scenario.batch if self.scenario else None)
         self._cumulative_batch_fn = ov.get(
@@ -165,7 +189,7 @@ class ContinualTrainer:
             # two separately-dispatched XLA programs (DESIGN.md §3): the issue
             # half's device execution overlaps the host-side load of the next
             # batch — the CPU-visible analogue of the paper's Argobots threads
-            from repro.core.strategies import make_pipelined_halves
+            from repro.strategy import make_pipelined_halves
             if (self.mesh is not None or self.strategy != "rehearsal"
                     or rcfg is None or not rcfg.is_pipelined):
                 raise ValueError("step_form='split' needs the single-device "
@@ -177,15 +201,39 @@ class ContinualTrainer:
                 self.loss_fn, self._opt_update, rcfg, exchange=exchange,
                 label_field=self.label_field, task_field=task_field)
         elif self._step_fn is None and self.mesh is None:
-            from repro.core.strategies import make_cl_step
+            from repro.strategy import make_cl_step
             if self._opt_update is None:
                 raise TypeError("step_fn or a full make_optimizer pair is required")
             self._step_fn = make_cl_step(
-                self.loss_fn, self._opt_update, rcfg, strategy=self.strategy,
+                self.loss_fn, self._opt_update, rcfg, strategy=self.strat,
                 exchange=exchange, label_field=self.label_field,
-                task_field=task_field, donate=donate)
+                task_field=task_field, donate=donate,
+                strategy_cfg=self.scfg, forward_outputs=self.forward_outputs,
+                aux_spec=self.aux_spec)
 
     # ------------------------------------------------------------------ util
+    def _strategy_aux_spec(self) -> Dict[str, Any]:
+        """The strategy's per-record aux field specs (``{}`` for the built-in
+        trio): eval_shape the model-outputs tap on a one-row batch and hand
+        the per-record shapes to ``Strategy.record_fields``."""
+        from repro.strategy import outputs_row_spec
+
+        strat, rcfg = self.strat, self.rcfg
+        if not (strat.needs_outputs and strat.uses_buffer
+                and rcfg is not None and getattr(rcfg, "enabled", False)):
+            return {}
+        if self.forward_outputs is None or self.init_params_fn is None \
+                or self.item_spec is None:
+            raise TypeError(
+                f"strategy {self.strategy!r} needs the model-outputs tap; the "
+                f"scenario's Problem must provide forward_outputs (or pass it "
+                f"via overrides)")
+        params_s = jax.eval_shape(self.init_params_fn, jax.random.PRNGKey(0))
+        batch_s = {k: jax.ShapeDtypeStruct((1,) + tuple(v.shape), v.dtype)
+                   for k, v in self.item_spec.items()}
+        row_spec = outputs_row_spec(self.forward_outputs, params_s, batch_s)
+        return dict(strat.record_fields(self.item_spec, row_spec, self.scfg))
+
     def _validate_bucketing(self):
         """A task_field-free scenario must not be bucketed by a field its
         batches do not carry — fail at construction, not mid-jit."""
@@ -206,10 +254,10 @@ class ContinualTrainer:
 
     def _source(self, task: int) -> Callable[[int], Dict[str, np.ndarray]]:
         """cursor -> raw batch for the given task segment, strategy-aware."""
-        if self.strategy == "from_scratch":
+        if self.strat.cumulative_data:
             if self._cumulative_batch_fn is None:
                 raise NotImplementedError(
-                    "from_scratch needs a cumulative batch source")
+                    f"{self.strategy} needs a cumulative batch source")
             return lambda cur, _t=task: self._cumulative_batch_fn(
                 _t, self.batch_size, cur)
         return lambda cur, _t=task: self._batch_fn(_t, self.batch_size, cur)
@@ -247,7 +295,7 @@ class ContinualTrainer:
 
     def _fit_carry(self):
         from repro.core.cl_loop import CLRunResult
-        from repro.core.strategies import init_carry
+        from repro.strategy import init_carry
 
         if None in (self.init_params_fn, self.eval_fn, self._batch_fn) or \
                 (self._step_fn is None and self._halves is None):
@@ -268,7 +316,7 @@ class ContinualTrainer:
         runtimes, history = [], []
         global_step = 0
         for task in range(T):
-            if self.strategy == "from_scratch":
+            if self.strat.fresh_params_per_task:
                 # fresh model, cumulative data, proportionally more steps (the
                 # quadratic-runtime regime) — same re-init keys as run_continual
                 k = jax.random.fold_in(key, 1000 + task)
@@ -310,7 +358,7 @@ class ContinualTrainer:
                             # on the steps history records — the split form
                             # exists for overlap; keep its hot loop dispatch-free
                             from repro.buffer.api import buffer_fill
-                            from repro.core.strategies import rep_checksum
+                            from repro.strategy import rep_checksum
                             metrics = dict(
                                 metrics,
                                 rep_checksum=rep_checksum(
@@ -352,19 +400,23 @@ class ContinualTrainer:
 
         if self.scenario is None:
             raise TypeError("the pjit backend requires a scenario")
-        if self.strategy == "from_scratch":
+        if self.strat.fresh_params_per_task or self.strat.cumulative_data:
             raise NotImplementedError(
                 "the pjit backend does not implement from_scratch semantics "
                 "(per-task re-init + cumulative sampling); use the carry "
                 "backend (mesh=None)")
         # the effective rehearsal config (scenario defaults applied in
         # __init__) drives the step builder too — both backends must bucket
-        # and mask identically for the same RunConfig
+        # and mask identically for the same RunConfig; the builder reads the
+        # strategy name off run.scenario, so pin it to the trainer's choice
         run, mesh = self.run, self.mesh
         if self.rcfg is not None:
             run = dataclasses.replace(run, rehearsal=self.rcfg)
-        if self.strategy != "rehearsal" and run.rehearsal.mode != "off":
-            raise ValueError("pjit backend: non-rehearsal strategies run with "
+        run = dataclasses.replace(
+            run, scenario=dataclasses.replace(run.scenario,
+                                              strategy=self.strategy))
+        if not self.strat.uses_buffer and run.rehearsal.mode != "off":
+            raise ValueError("pjit backend: non-buffer strategies run with "
                              "rehearsal.mode='off'")
         log = get_logger("repro.trainer")
         manager = None

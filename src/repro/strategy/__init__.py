@@ -1,0 +1,79 @@
+"""Pluggable training strategies (DESIGN.md §9).
+
+    from repro.strategy import get_strategy, make_cl_step, STRATEGIES
+
+The second of the three pluggable axes (policy × strategy × scenario): a
+``Strategy`` owns the loss shape and the buffer record's auxiliary fields —
+stored logits for DER/DER++ (Buzzega et al., NeurIPS'20), penultimate
+embeddings for the GRASP feature tap — and the step factories compile it into
+the same pipelined program the paper's rehearsal uses. Registered strategies:
+
+  incremental | from_scratch | rehearsal   — the paper's trio (§VI-D)
+  der | der_pp                             — dark experience replay
+  grasp_embed                              — rehearsal + embedding feature tap
+"""
+from repro.strategy.base import (
+    STRATEGIES,
+    Strategy,
+    ce_from_outputs,
+    get_strategy,
+    make_tap_ce_loss,
+    mask_rows,
+    outputs_row_spec,
+    register_strategy,
+    resolve_strategy,
+)
+from repro.strategy.builtin import (
+    FromScratchStrategy,
+    GraspEmbedStrategy,
+    IncrementalStrategy,
+    RehearsalStrategy,
+)
+from repro.strategy.der import (
+    DerPPStrategy,
+    DerStrategy,
+    attach_logits,
+    der_loss,
+    distill_mse,
+    make_der_loss,
+)
+from repro.strategy.step import (
+    PipelinedRehearsalCarry,
+    TrainCarry,
+    batch_rows,
+    carry_specs,
+    init_carry,
+    make_cl_step,
+    make_pipelined_halves,
+    rep_checksum,
+)
+
+__all__ = [
+    "DerPPStrategy",
+    "DerStrategy",
+    "FromScratchStrategy",
+    "GraspEmbedStrategy",
+    "IncrementalStrategy",
+    "PipelinedRehearsalCarry",
+    "RehearsalStrategy",
+    "STRATEGIES",
+    "Strategy",
+    "TrainCarry",
+    "attach_logits",
+    "batch_rows",
+    "carry_specs",
+    "ce_from_outputs",
+    "der_loss",
+    "distill_mse",
+    "get_strategy",
+    "init_carry",
+    "make_cl_step",
+    "make_der_loss",
+    "make_pipelined_halves",
+    "make_tap_ce_loss",
+    "mask_rows",
+    "outputs_row_spec",
+    "register_strategy",
+    "rep_checksum",
+    "resolve_strategy",
+]

@@ -1,0 +1,170 @@
+"""Pluggable training strategies: the protocol + registry (DESIGN.md §9).
+
+The paper evaluates three strategies (§VI-D): incremental, from_scratch,
+rehearsal. Its §III cites Dark Experience Replay (Buzzega et al., NeurIPS'20)
+as the rehearsal variant that beats plain ER by replaying stored *logits* —
+which needs per-record auxiliary fields flowing through every buffer layer
+(exchange, tiering, checkpoint, elastic reshard). Mirroring the buffer-policy
+refactor one layer up (``repro.buffer.policies``), this module makes the
+strategy a jit-safe plug point with a registry.
+
+A ``Strategy`` owns three hooks, all static-shape and trace-safe:
+
+  * ``record_fields(item_spec, outputs_spec, scfg)`` — aux field specs joined
+    into the buffer's ``item_spec`` (DER: stored logits, dense or top-k
+    compressed; grasp_embed: the penultimate embedding). ``{}`` means the
+    record layout is untouched — the built-in trio — and the whole step
+    compiles to the exact pre-subsystem program (the parity contract,
+    tests/test_strategy.py).
+  * ``on_store(batch, outputs, scfg)`` — attach the aux-field *values* for the
+    incoming mini-batch, computed from the model-outputs tap of the same
+    step's forward pass (the representatives stored at step t carry the
+    model's outputs as of step t, exactly DER's semantics).
+  * ``build_loss(base_loss, forward_outputs, scfg, label_field)`` — the loss
+    the step trains on. The default returns ``base_loss`` unchanged;
+    tap strategies rebuild it from ``forward_outputs`` so logits + penultimate
+    activations are computed ONCE per step and shared between the loss and
+    ``on_store``.
+
+Class attributes describe the trainer-facing shape of a strategy:
+``uses_buffer`` (does the rehearsal machinery run), ``needs_outputs`` (does
+the step need the model-outputs tap), ``fresh_params_per_task`` /
+``cumulative_data`` (the from_scratch baseline's re-init + data semantics).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class Strategy:
+    """Base strategy: plain task-stream training (the ``incremental`` lower
+    bound). Stateless; subclasses override the hooks they need."""
+
+    name: str = "incremental"
+    # Does the rehearsal buffer machinery run for this strategy? (The trainer
+    # forces rehearsal.mode='off' when False — no buffer is ever allocated.)
+    uses_buffer: bool = False
+    # Does the step need the model-outputs tap (logits + penultimate embed)?
+    needs_outputs: bool = False
+    # from_scratch semantics: re-init params at each task boundary / train on
+    # the cumulative data of all tasks seen so far.
+    fresh_params_per_task: bool = False
+    cumulative_data: bool = False
+
+    # ------------------------------------------------------------- aux fields
+    def record_fields(self, item_spec, outputs_spec, scfg) -> Dict[str, Any]:
+        """Aux field specs (name -> per-record ShapeDtypeStruct) joined into
+        the buffer ``item_spec``. ``outputs_spec`` is the per-record
+        ShapeDtypeStruct tree of the model-outputs tap (no batch dim)."""
+        return {}
+
+    def on_store(self, batch, outputs, scfg):
+        """Attach aux-field values to the incoming [b, ...] record batch.
+        ``outputs`` holds the tap's values for exactly these b rows."""
+        return batch
+
+    # ------------------------------------------------------------------ loss
+    def build_loss(self, base_loss, forward_outputs, scfg,
+                   label_field: str = "labels"):
+        """The loss the step differentiates. Tap strategies must return a
+        function ``(params, batch) -> (loss, (metrics, outputs))`` — the
+        outputs ride the ``has_aux`` channel to ``on_store``."""
+        return base_loss
+
+    # ------------------------------------------------------------------ misc
+    def placeholder_fields(self, aux_spec, batch_rows: int) -> Dict[str, Any]:
+        """Zero-valued aux fields for the incoming batch (the augmented batch
+        concatenates batch ⊕ reps treewise, so both sides must carry the aux
+        fields; new rows' placeholders are masked out of the loss via the
+        ``is_replay`` flag, exactly the DER convention)."""
+        return {
+            name: jnp.zeros((batch_rows,) + tuple(spec.shape), spec.dtype)
+            for name, spec in aux_spec.items()
+        }
+
+    def __repr__(self) -> str:
+        return f"{type(self).__name__}(name={self.name!r})"
+
+
+# ---------------------------------------------------------------------------
+# Shared loss helpers (modality-agnostic: vision [B,V] and token [B,S,V])
+# ---------------------------------------------------------------------------
+
+
+def mask_rows(labels, row_mask):
+    """Mask whole rows out of a CE: labels -> -1 where ``row_mask`` is 0.
+    ``row_mask`` is f32/bool [B]; labels [B] or [B, S, ...]."""
+    m = row_mask.reshape((labels.shape[0],) + (1,) * (labels.ndim - 1))
+    return jnp.where(m > 0, labels, -1)
+
+
+def ce_from_outputs(outputs, batch, label_field: str):
+    """Label cross-entropy from the outputs tap (+ the MoE aux term, weighted
+    identically to ``LM.loss``, when the model emits one) — the generic CE
+    every tap strategy shares."""
+    from repro.models.model_zoo import DEFAULT_AUX_WEIGHT, cross_entropy
+
+    ce = cross_entropy(outputs["logits"], batch[label_field])
+    total = ce
+    if "aux" in outputs:
+        total = total + DEFAULT_AUX_WEIGHT * outputs["aux"]
+    return total, ce
+
+
+def make_tap_ce_loss(forward_outputs, label_field: str):
+    """Plain CE loss routed through the outputs tap — numerically the standard
+    rehearsal loss, but exposing (metrics, outputs) for ``on_store``."""
+
+    def loss_fn(params, batch):
+        outputs = forward_outputs(params, batch)
+        total, ce = ce_from_outputs(outputs, batch, label_field)
+        return total, ({"ce": ce}, outputs)
+
+    return loss_fn
+
+
+# ---------------------------------------------------------------------------
+# Registry — STRATEGIES is the view legacy callers iterate / test membership on
+# ---------------------------------------------------------------------------
+
+STRATEGIES: Dict[str, Strategy] = {}
+
+
+def register_strategy(strategy: Strategy) -> Strategy:
+    """Register a strategy instance under ``strategy.name`` (last wins)."""
+    STRATEGIES[strategy.name] = strategy
+    return strategy
+
+
+def get_strategy(name: str) -> Strategy:
+    try:
+        return STRATEGIES[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown strategy {name!r}; registered: {sorted(STRATEGIES)}"
+        ) from None
+
+
+def resolve_strategy(strategy) -> Strategy:
+    """str -> registry lookup; Strategy -> itself; None -> rehearsal."""
+    if strategy is None:
+        return get_strategy("rehearsal")
+    if isinstance(strategy, str):
+        return get_strategy(strategy)
+    if isinstance(strategy, Strategy):
+        return strategy
+    raise TypeError(f"expected a strategy name or Strategy, got {strategy!r}")
+
+
+def outputs_row_spec(forward_outputs, params_spec, batch_spec) -> Dict[str, Any]:
+    """Per-record ShapeDtypeStructs of the outputs tap: eval_shape the tap on
+    a batch spec and strip the leading batch dim from the array leaves
+    (scalars — the MoE aux — pass through)."""
+    outs = jax.eval_shape(forward_outputs, params_spec, batch_spec)
+    return {
+        k: (jax.ShapeDtypeStruct(v.shape[1:], v.dtype) if v.shape else v)
+        for k, v in outs.items()
+    }

@@ -1,0 +1,83 @@
+"""The built-in strategies.
+
+The paper's trio (§VI-D) migrated bit-for-bit from the hard-coded tuple in
+``core/strategies.py`` — none of them touches the record layout or the loss,
+so a step built through the registry compiles to the exact pre-refactor
+program (pinned traces, tests/test_buffer_policies.py + tests/test_strategy.py)
+— plus ``grasp_embed``, the feature tap that closes the ROADMAP "GRASP at
+scale" item: records gain a penultimate-activation ``embed`` field, and the
+GRASP buffer policy's prototype distances run on model embeddings instead of
+raw first-float-leaf pixels (repro.buffer.policies.FEATURE_FIELD).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.strategy.base import (
+    Strategy,
+    make_tap_ce_loss,
+    register_strategy,
+)
+
+
+class IncrementalStrategy(Strategy):
+    """Train on the new task only — the runtime lower bound; forgets."""
+
+    name = "incremental"
+    uses_buffer = False
+
+
+class FromScratchStrategy(Strategy):
+    """Retrain on all accumulated data with fresh params per task — the
+    accuracy upper bound; quadratic runtime."""
+
+    name = "from_scratch"
+    uses_buffer = False
+    fresh_params_per_task = True
+    cumulative_data = True
+
+
+class RehearsalStrategy(Strategy):
+    """The paper's contribution: train each mini-batch augmented with
+    representatives from the asynchronous distributed rehearsal buffer."""
+
+    name = "rehearsal"
+    uses_buffer = True
+
+
+class GraspEmbedStrategy(Strategy):
+    """Rehearsal with a model-embedding feature tap (GRASP at scale).
+
+    Records gain an ``embed`` aux field holding the penultimate activations of
+    the model when the sample was seen; the GRASP policy's class prototypes
+    and per-slot distances are then computed in embedding space (Harun et al.,
+    2023 use exactly this feature) instead of on raw inputs. The loss is the
+    plain rehearsal CE — only the buffer's notion of "prototypical" changes.
+    """
+
+    name = "grasp_embed"
+    uses_buffer = True
+    needs_outputs = True
+    recommended_policy = "grasp"
+
+    def record_fields(self, item_spec, outputs_spec, scfg):
+        if "embed" not in outputs_spec:
+            raise ValueError(
+                f"strategy {self.name!r} needs an 'embed' outputs tap; the "
+                f"model exposes {sorted(outputs_spec)}")
+        row = outputs_spec["embed"]
+        return {"embed": jax.ShapeDtypeStruct(tuple(row.shape), jnp.float32)}
+
+    def on_store(self, batch, outputs, scfg):
+        return dict(batch, embed=outputs["embed"].astype(jnp.float32))
+
+    def build_loss(self, base_loss, forward_outputs, scfg,
+                   label_field: str = "labels"):
+        return make_tap_ce_loss(forward_outputs, label_field)
+
+
+register_strategy(IncrementalStrategy())
+register_strategy(FromScratchStrategy())
+register_strategy(RehearsalStrategy())
+register_strategy(GraspEmbedStrategy())

@@ -1,0 +1,194 @@
+"""Dark Experience Replay (DER / DER++) as registered strategies.
+
+Beyond-paper extension (the paper's §III cites Buzzega et al., NeurIPS'20:
+replaying the model's *logits* alongside/instead of labels beats plain
+Experience Replay). Buffer records gain stored-logit aux fields — the model's
+outputs when the sample was seen — and the loss adds an MSE distillation term
+on replayed representatives:
+
+  DER   : loss = CE(new)                + alpha * MSE(logits(reps), stored)
+  DER++ : loss = CE(new) + beta*CE(reps) + alpha * MSE(logits(reps), stored)
+
+The aux fields are ordinary record leaves, so they ride the same all_to_all
+exchange, tier through the hot/cold store (the cold tier int8-quantizes the
+float logit leaves via kernels/quantize — compounding with top-k), persist in
+checkpoints, and pool/re-deal under elastic resharding with zero new
+machinery.
+
+Top-k compression (``StrategyConfig.top_k``): store only the k largest
+(value, index) pairs per position — an 8–16x byte saving for big
+vocabularies. Stored pairs are index-sorted so that ``top_k == num_classes``
+reproduces the dense distillation term bit-for-bit (tests/test_der.py).
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.strategy.base import (
+    Strategy,
+    ce_from_outputs,
+    mask_rows,
+    register_strategy,
+)
+
+
+def attach_logits(batch, logits, top_k: int = 0, sort_by_index: bool = False):
+    """Extend a record batch with the logits to store (optionally top-k
+    compressed: values + indices — an 8-16x buffer-space saving for big
+    vocabularies). ``sort_by_index=True`` stores the k pairs in ascending
+    index order (value order otherwise) — the DER strategies sort so the
+    ``top_k == num_classes`` path recovers the dense layout bit-for-bit."""
+    if top_k:
+        vals, idx = jax.lax.top_k(logits, top_k)
+        if sort_by_index:
+            order = jnp.argsort(idx, axis=-1)
+            idx = jnp.take_along_axis(idx, order, axis=-1)
+            vals = jnp.take_along_axis(vals, order, axis=-1)
+        return dict(batch, logit_vals=vals, logit_idx=idx.astype(jnp.int32))
+    # logits keep their incoming dtype (the historical contract); the buffer
+    # scatter casts to the record spec's dtype (f32 via Strategy.record_fields)
+    return dict(batch, logits=logits)
+
+
+def distill_mse(logits, batch, top_k: int):
+    """Per-row MSE between this step's logits and the stored ones ([B])."""
+    if top_k:
+        got = jnp.take_along_axis(
+            logits.astype(jnp.float32), batch["logit_idx"], axis=-1)
+        sq = jnp.square(got - batch["logit_vals"])
+    else:
+        sq = jnp.square(logits.astype(jnp.float32) - batch["logits"])
+    return jnp.mean(sq, axis=tuple(range(1, sq.ndim)))
+
+
+def make_der_loss(
+    forward_outputs: Callable,
+    *,
+    alpha: float = 0.5,
+    beta: float = 0.0,
+    top_k: int = 0,
+    label_field: str = "labels",
+):
+    """Build the DER(++) loss over an augmented batch of b new + r replayed
+    rows. Replayed rows carry stored logits; new rows carry zero placeholders,
+    masked out via the ``is_replay`` flag (1.0 on *valid* replay rows). The
+    forward runs ONCE: its logits feed the CE terms, the distillation term,
+    and (through the returned outputs) the aux fields stored for this batch.
+    """
+
+    def loss_fn(params, batch):
+        outputs = forward_outputs(params, batch)
+        logits = outputs["logits"]
+        labels = batch[label_field]
+        is_replay = batch["is_replay"].astype(jnp.float32)  # [B]
+        from repro.models.model_zoo import DEFAULT_AUX_WEIGHT, cross_entropy
+
+        ce_new = cross_entropy(logits, mask_rows(labels, 1.0 - is_replay))
+        mse = distill_mse(logits, batch, top_k)
+        denom = jnp.maximum(jnp.sum(is_replay), 1.0)
+        distill = jnp.sum(mse * is_replay) / denom
+        total = ce_new + alpha * distill
+        metrics = {"ce": ce_new, "distill": distill}
+        if beta:
+            ce_replay = cross_entropy(logits, mask_rows(labels, is_replay))
+            total = total + beta * ce_replay
+            metrics["ce_replay"] = ce_replay
+        if "aux" in outputs:
+            total = total + DEFAULT_AUX_WEIGHT * outputs["aux"]
+        return total, (metrics, outputs)
+
+    return loss_fn
+
+
+def der_loss(
+    model_loss: Callable,  # (params, batch) -> (ce, metrics) on labels
+    forward: Callable,  # (params, batch) -> logits
+    *,
+    alpha: float = 0.5,
+    beta: float = 0.5,
+    top_k: int = 0,
+):
+    """Legacy standalone DER(++) loss (the pre-subsystem ``core.der`` API).
+
+    ``beta > 0`` keeps the full CE (which already includes replay rows —
+    DER++); ``beta == 0`` drops the CE entirely and trains on distillation
+    alone. New code should use the registered ``der``/``der_pp`` strategies,
+    whose CE terms split new/replay rows explicitly (``make_der_loss``)."""
+
+    def loss_fn(params, batch):
+        ce, metrics = model_loss(params, batch)
+        logits = forward(params, batch)
+        is_replay = batch["is_replay"].astype(jnp.float32)  # [B]
+        denom = jnp.maximum(jnp.sum(is_replay), 1.0)
+        if top_k:
+            got = jnp.take_along_axis(logits, batch["logit_idx"], axis=-1)
+            mse = jnp.mean(jnp.square(got - batch["logit_vals"]), axis=(-2, -1))
+        else:
+            mse = jnp.mean(
+                jnp.square(logits - batch["logits"].astype(logits.dtype)), axis=(-2, -1)
+            )
+        distill = jnp.sum(mse * is_replay) / denom
+        total = ce * (1.0 if beta else 0.0) + alpha * distill
+        if beta:  # DER++: CE on replayed rows is already inside ce (labels present)
+            total = ce + alpha * distill
+        metrics = dict(metrics, distill=distill)
+        return total, metrics
+
+    return loss_fn
+
+
+class DerStrategy(Strategy):
+    """DER: rehearsal where replayed rows are trained by logit distillation
+    (MSE to the stored logits) instead of their labels."""
+
+    name = "der"
+    uses_buffer = True
+    needs_outputs = True
+    beta_from_config = False  # pure DER: no CE on replay rows
+
+    def record_fields(self, item_spec, outputs_spec, scfg):
+        if "logits" not in outputs_spec:
+            raise ValueError(
+                f"strategy {self.name!r} needs a 'logits' outputs tap; the "
+                f"model exposes {sorted(outputs_spec)}")
+        row = outputs_spec["logits"]
+        k = getattr(scfg, "top_k", 0) if scfg is not None else 0
+        if k:
+            vocab = row.shape[-1]
+            if k > vocab:
+                raise ValueError(
+                    f"top_k={k} exceeds the logit dimension {vocab}")
+            shape = tuple(row.shape[:-1]) + (k,)
+            return {
+                "logit_vals": jax.ShapeDtypeStruct(shape, jnp.float32),
+                "logit_idx": jax.ShapeDtypeStruct(shape, jnp.int32),
+            }
+        return {"logits": jax.ShapeDtypeStruct(tuple(row.shape), jnp.float32)}
+
+    def on_store(self, batch, outputs, scfg):
+        k = getattr(scfg, "top_k", 0) if scfg is not None else 0
+        return attach_logits(batch, outputs["logits"], top_k=k,
+                             sort_by_index=True)
+
+    def build_loss(self, base_loss, forward_outputs, scfg,
+                   label_field: str = "labels"):
+        alpha = getattr(scfg, "alpha", 0.5) if scfg is not None else 0.5
+        beta = (getattr(scfg, "beta", 0.5) if scfg is not None else 0.5) \
+            if self.beta_from_config else 0.0
+        k = getattr(scfg, "top_k", 0) if scfg is not None else 0
+        return make_der_loss(forward_outputs, alpha=alpha, beta=beta, top_k=k,
+                             label_field=label_field)
+
+
+class DerPPStrategy(DerStrategy):
+    """DER++: DER plus a beta-weighted CE on the replayed rows' labels."""
+
+    name = "der_pp"
+    beta_from_config = True
+
+
+register_strategy(DerStrategy())
+register_strategy(DerPPStrategy())

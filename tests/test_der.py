@@ -69,3 +69,231 @@ def test_der_loss_distills_on_replay_rows():
     assert float(m["distill"]) > 0  # replay rows penalised toward stored logits
     g = jax.grad(lambda p: loss(p, batch)[0])(params)
     assert float(jnp.sum(jnp.abs(g["w"]))) > 0
+
+
+# ---------------------------------------------------------------------------
+# Registered-strategy path: e2e trainer runs, top-k exactness, checkpointing,
+# and carry-vs-pjit fingerprint parity (the PR acceptance pins)
+# ---------------------------------------------------------------------------
+
+import dataclasses
+
+import pytest
+
+from repro.configs.base import (
+    RehearsalConfig,
+    RunConfig,
+    ScenarioConfig,
+    StrategyConfig,
+    TrainConfig,
+)
+from repro.scenario import ContinualTrainer
+
+
+def _vision_run(strategy, *, top_k=0, steps=12, alpha=0.5, beta=0.5):
+    return RunConfig(
+        train=TrainConfig(optimizer="sgd", peak_lr=0.05, warmup_steps=5,
+                          linear_scaling=False),
+        rehearsal=RehearsalConfig(num_buckets=2, slots_per_bucket=16,
+                                  num_representatives=6, num_candidates=12,
+                                  mode="async", label_field="label",
+                                  task_field="task"),
+        strategy=StrategyConfig(alpha=alpha, beta=beta, top_k=top_k),
+        scenario=ScenarioConfig(name="class_incremental", strategy=strategy,
+                                num_tasks=2, epochs_per_task=1,
+                                steps_per_epoch=steps, batch_size=16,
+                                image_size=8, classes_per_task=3, noise=0.4,
+                                auto_defaults=False))
+
+
+def test_der_e2e_beats_incremental_on_forgetting():
+    """The two-task forgetting smoke: DER++ retains task 0 after training
+    task 1; incremental forgets it (no replay of any kind)."""
+    inc = ContinualTrainer(_vision_run("incremental")).fit()
+    der = ContinualTrainer(_vision_run("der_pp")).fit()
+    # retention of task 0 after task 1 (row 1, col 0)
+    assert der.accuracy_matrix[1, 0] > inc.accuracy_matrix[1, 0] + 0.15, (
+        der.accuracy_matrix, inc.accuracy_matrix)
+    assert der.final_accuracy > inc.final_accuracy
+    # plasticity on the current task retained
+    assert der.accuracy_matrix[1, 1] > 0.5
+
+
+def test_der_topk_full_width_bitexact_vs_dense_loss():
+    """The top-k compressed distillation term with top_k == num_classes
+    recovers the dense term bit-for-bit (index-sorted storage)."""
+    from repro.strategy.der import attach_logits, make_der_loss
+
+    v, b = 6, 8
+    key = jax.random.PRNGKey(0)
+    stored = jax.random.normal(key, (b, v))
+    cur_w = jax.random.normal(jax.random.fold_in(key, 1), (4, v))
+
+    def forward_outputs(params, batch):
+        return {"logits": batch["x"] @ params}
+
+    base = {"x": jax.random.normal(jax.random.fold_in(key, 2), (b, 4)),
+            "label": jnp.arange(b, dtype=jnp.int32) % v,
+            "is_replay": jnp.asarray([0, 0, 0, 0, 1, 1, 1, 1], jnp.float32)}
+    dense_b = attach_logits(base, stored)
+    topk_b = attach_logits(base, stored, top_k=v, sort_by_index=True)
+    np.testing.assert_array_equal(np.asarray(topk_b["logit_idx"][0]),
+                                  np.arange(v))
+    dense_loss = make_der_loss(forward_outputs, alpha=0.7, beta=0.3,
+                               top_k=0, label_field="label")
+    topk_loss = make_der_loss(forward_outputs, alpha=0.7, beta=0.3,
+                              top_k=v, label_field="label")
+    ld, (md, _) = dense_loss(cur_w, dense_b)
+    lt, (mt, _) = topk_loss(cur_w, topk_b)
+    assert float(ld) == float(lt)
+    assert float(md["distill"]) == float(mt["distill"])
+
+
+def test_der_topk_full_width_e2e_matches_dense():
+    """Trainer-level: a der run storing top-k == num_classes logit pairs
+    reproduces the dense run — fingerprints bit-equal every step, losses to
+    float tolerance (the gather-based distill term compiles to a different op
+    graph, so XLA fusion departs in the last ulps of the *gradients*; the
+    loss values themselves are bit-exact — the unit test above)."""
+    num_classes = 6  # 2 tasks x 3 classes
+    dense = ContinualTrainer(_vision_run("der_pp", top_k=0, steps=8)).fit()
+    topk = ContinualTrainer(
+        _vision_run("der_pp", top_k=num_classes, steps=8)).fit()
+    hd = [(h["rep_checksum"], h["buffer_fill"]) for h in dense.history]
+    ht = [(h["rep_checksum"], h["buffer_fill"]) for h in topk.history]
+    assert hd == ht
+    np.testing.assert_allclose([h["loss"] for h in dense.history],
+                               [h["loss"] for h in topk.history], rtol=1e-5)
+    np.testing.assert_allclose(dense.accuracy_matrix, topk.accuracy_matrix,
+                               atol=0.15)
+
+
+def test_der_checkpoint_restore_then_continue(tmp_path):
+    """Aux fields (stored logits) survive the checkpoint roundtrip: stop at
+    step 8, restore, continue to 14 == the uninterrupted run (params AND the
+    buffer's logit leaves bit-equal)."""
+    from repro.checkpoint import CheckpointManager
+    from repro.scenario import get_scenario
+    from repro.strategy import TrainCarry, get_strategy, init_carry, make_cl_step
+
+    run = _vision_run("der", top_k=4, steps=14)
+    sc = get_scenario(run.scenario)
+    problem = sc.build_problem(run)
+    from repro.optim import make_optimizer
+    opt_init, opt_update = make_optimizer(run.train)
+    strat = get_strategy("der")
+    trainer = ContinualTrainer(run)  # reuse its extended item_spec/aux wiring
+    item_spec, aux_spec = trainer.item_spec, trainer.aux_spec
+    assert set(aux_spec) == {"logit_vals", "logit_idx"}
+    step = make_cl_step(problem.loss_fn, opt_update, run.rehearsal,
+                        strategy=strat, exchange="local", label_field="label",
+                        task_field="task", donate=False,
+                        strategy_cfg=run.strategy,
+                        forward_outputs=problem.forward_outputs,
+                        aux_spec=aux_spec)
+    key = jax.random.PRNGKey(5)
+
+    def fresh():
+        params = problem.init_params_fn(key)
+        return init_carry(params, opt_init(params), item_spec, run.rehearsal,
+                          label_field="label")
+
+    def advance(carry, start, end):
+        for s in range(start, end):
+            batch = {k: jnp.asarray(v) for k, v in sc.batch(0, 16, s).items()}
+            carry, _ = step(carry, batch, jax.random.fold_in(key, s))
+        return carry
+
+    ref = advance(fresh(), 0, 14)
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    half = advance(fresh(), 0, 8)
+    assert float(jnp.abs(half.buffer.data["logit_vals"]).sum()) > 0
+    mgr.save(8, half._asdict(), {"cursor": 8})
+    restored_dict, meta = mgr.restore(half._asdict())
+    resumed = advance(TrainCarry(**restored_dict), int(meta["cursor"]), 14)
+    for a, b in zip(jax.tree_util.tree_leaves(ref.params),
+                    jax.tree_util.tree_leaves(resumed.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(ref.buffer.data["logit_vals"]),
+                                  np.asarray(resumed.buffer.data["logit_vals"]))
+
+
+def _der_token_run(top_k=0):
+    from repro.configs import get_reduced
+    from repro.configs.base import ShapeConfig
+
+    base = get_reduced("smollm-135m")
+    cfg = type(base)(**{**base.__dict__, "vocab_size": 128, "num_layers": 2,
+                        "name": "smollm-der-parity"})
+    return RunConfig(
+        model=cfg, shape=ShapeConfig("parity", 16, 8, "train"),
+        train=TrainConfig(optimizer="adamw", peak_lr=1e-3, warmup_steps=5,
+                          linear_scaling=False, compute_dtype="float32"),
+        rehearsal=RehearsalConfig(num_buckets=2, slots_per_bucket=4,
+                                  num_representatives=3, num_candidates=6,
+                                  mode="async", label_field="labels"),
+        strategy=StrategyConfig(alpha=0.4, beta=0.3, top_k=top_k),
+        scenario=ScenarioConfig(name="class_incremental", modality="tokens",
+                                strategy="der_pp", num_tasks=2,
+                                epochs_per_task=1, steps_per_epoch=6,
+                                batch_size=8, vocab_size=128, seq_len=16,
+                                auto_defaults=False))
+
+
+@pytest.mark.parametrize("top_k", [0, 8])
+def test_der_pjit_backend_matches_carry_fingerprints(top_k):
+    """The PR acceptance pin (à la the PR-4 tiered contract): a DER++ run
+    through the pjit backend (1×1 mesh) consumes bit-identical sampled
+    representatives (rep_checksum) and buffer fills as the carry backend —
+    the aux-field plumbing drives the identical buffer state on both. Losses
+    agree to float tolerance (the two backends compile differently-structured
+    programs, so XLA fusion differs in the last ulps — the same reason the
+    PR-4 contract pins fingerprints, not losses)."""
+    from repro.launch.mesh import make_mesh
+    from repro.scenario import TokenClassIncremental
+
+    run = _der_token_run(top_k)
+    sc = TokenClassIncremental(run.scenario)
+    mesh = make_mesh((1, 1), ("data", "model"))
+    pjit_res = ContinualTrainer(run, sc, mesh=mesh, exchange="local").fit()
+    carry_res = ContinualTrainer(run, sc).fit()
+    pj = [(h["rep_checksum"], h["buffer_fill"]) for h in pjit_res.history]
+    ca = [(h["rep_checksum"], h["buffer_fill"]) for h in carry_res.history]
+    assert pj == ca, (pj, ca)
+    assert any(fill > 0 for _, fill in pj)
+    assert any(ck != 0 for ck, _ in pj)  # representatives actually consumed
+    np.testing.assert_allclose(
+        [h["loss"] for h in pjit_res.history],
+        [h["loss"] for h in carry_res.history], rtol=1e-5)
+
+
+def test_der_requires_pipelined_mode():
+    run = _vision_run("der")
+    run = dataclasses.replace(
+        run, rehearsal=dataclasses.replace(run.rehearsal, mode="sync"))
+    with pytest.raises(ValueError, match="pipelined"):
+        ContinualTrainer(run)
+
+
+def test_der_rejects_rehearsal_off():
+    """mode='off' + a tap strategy must raise, not silently train incremental
+    while reporting 'der'."""
+    run = _vision_run("der")
+    run = dataclasses.replace(
+        run, rehearsal=dataclasses.replace(run.rehearsal, mode="off"))
+    with pytest.raises(ValueError, match="degrade"):
+        ContinualTrainer(run)
+
+
+def test_der_composes_with_tiered_buffer():
+    """Stored-logit aux fields tier like any record leaf: evicted hot rows
+    (logits included) are int8-encoded into the cold archive, and sampling
+    dequantizes them back — the run exceeds hot capacity and stays sane."""
+    run = _vision_run("der_pp", top_k=4, steps=10)
+    run = dataclasses.replace(run, rehearsal=dataclasses.replace(
+        run.rehearsal, tiering="host", hot_slots=4, cold_slots=12))
+    res = ContinualTrainer(run).fit()
+    fills = [h["buffer_fill"] for h in res.history]
+    assert max(fills) > 2 * 4  # cold tier really holds (compressed) records
+    assert np.isfinite([h["loss"] for h in res.history]).all()
+    assert res.accuracy_matrix[1, 1] > 0.5

@@ -60,3 +60,27 @@ def test_metric_direction():
     assert trajectory.metric_direction("fig5a/x/us_per_step") == -1
     assert trajectory.metric_direction("fig5a/x/final_accuracy") == 1
     assert trajectory.metric_direction("fig5a/x/slots") == 0
+
+
+def test_plot_renders_sparklines(tmp_path):
+    out = tmp_path / "traj.jsonl"
+    with open(out, "w") as f:
+        for i, sha in enumerate(["aaa111", "bbb222", "ccc333"]):
+            f.write(json.dumps({"ts": i, "sha": sha, "metrics": {
+                "fig5b/der/final_accuracy": 0.6 + 0.1 * i,
+                "fig6/pipelined/us_per_step": 900.0 - 100 * i,
+                "fig6/note": 1.0,  # non-directional
+            }}) + "\n")
+    md = trajectory.render_plot(str(out))
+    assert "Perf trajectory (3 entries" in md
+    assert "aaa111" in md and "ccc333" in md
+    # directional metrics carry their better-direction and a sparkline
+    assert "`fig5b/der/final_accuracy` ↑ better" in md
+    assert "`fig6/pipelined/us_per_step` ↓ better" in md
+    assert any(ch in md for ch in "▁▂▃▄▅▆▇█")
+    # markdown table shape (pipes + header separator)
+    assert "|---|" in md
+
+
+def test_plot_empty_history_returns_empty(tmp_path):
+    assert trajectory.render_plot(str(tmp_path / "missing.jsonl")) == ""
