@@ -4,7 +4,7 @@
   fig5a  — accuracy vs rehearsal buffer size       (paper Fig. 5a)
   fig5b  — three strategies: accuracy + runtime    (paper Fig. 5b)
   fig6   — rehearsal management breakdown/overlap  (paper Fig. 6)
-  fig7   — scalability: overhead + exchange volume (paper Fig. 7)
+  fig7   — scalability: overhead + autoscaling + restart cost (paper Fig. 7)
   roofline — per (arch x shape x mesh) roofline terms from the dry-run artifacts
 """
 import argparse
@@ -33,7 +33,7 @@ def main() -> None:
         "roofline": roofline_table.run,
     }
     writer = CSVWriter()
-    smoke_aware = {"fig5a", "fig5b", "fig6"}  # emit BENCH_*.json, accept --smoke
+    smoke_aware = {"fig5a", "fig5b", "fig6", "fig7"}  # emit BENCH_*.json, accept --smoke
     failures = 0
     for name, fn in benches.items():
         if only and name not in only:

@@ -9,7 +9,12 @@ lower-is-better, ``*accuracy*``/``*acc*`` higher-is-better). CI restores the
 trajectory file from the workflow cache, so history accumulates across runs.
 
     PYTHONPATH=src python -m benchmarks.trajectory            # merge + report
-    PYTHONPATH=src python -m benchmarks.trajectory --gate     # exit 1 on regression
+    PYTHONPATH=src python -m benchmarks.trajectory --gate     # exit 2 on regression
+    PYTHONPATH=src python -m benchmarks.trajectory --gate --block fig6/,fig7/
+                                  # regressions in series starting with a
+                                  # --block prefix exit 2 (blocking); all other
+                                  # regressed series exit 3 (warn-only) — CI
+                                  # downgrades ONLY exit 3
     PYTHONPATH=src python -m benchmarks.trajectory --plot     # render the series
                                   # (markdown sparklines; CI pipes it into the
                                   # job summary — no merge happens in this mode)
@@ -28,7 +33,8 @@ from typing import Dict, List, Optional, Tuple
 # CPU CI boxes are noisy; only a sustained blow-up should trip the gate.
 DEFAULT_TOLERANCE = 0.35
 
-_LOWER_IS_BETTER = ("_us", "us_per_step", "vs_sync", "vs_device", "hideable")
+_LOWER_IS_BETTER = ("_us", "us_per_step", "vs_sync", "vs_device", "hideable",
+                    "overhead_n", "reshard_", "restore_s")
 _HIGHER_IS_BETTER = ("accuracy", "acc")
 
 
@@ -110,6 +116,7 @@ def compare(prev: Dict[str, float], cur: Dict[str, float],
 def run(bench_glob: str = "BENCH_*.json",
         out_path: str = "benchmarks/results/trajectory.jsonl",
         gate: bool = False, tolerance: float = DEFAULT_TOLERANCE,
+        block: Optional[List[str]] = None,
         now: Optional[float] = None) -> dict:
     paths = glob.glob(bench_glob)
     if not paths:
@@ -138,18 +145,26 @@ def run(bench_glob: str = "BENCH_*.json",
         print(f"trajectory: first entry ({len(entry['metrics'])} metrics)")
 
     if regressions:
+        # with --block, only regressions in the listed series prefixes are
+        # blocking (exit 2); the rest are warn-only (exit 3). Without --block
+        # every regression blocks — the pre-promotion behavior.
+        blocking = regressions if not block else [
+            r for r in regressions if any(r.startswith(p) for p in block)]
+        warn_only = [r for r in regressions if r not in blocking]
         print(f"trajectory: {len(regressions)} regression(s) beyond "
-              f"{tolerance:.0%}:")
-        for r in regressions:
-            print(f"  {r}")
+              f"{tolerance:.0%} ({len(blocking)} blocking):")
+        for r in blocking:
+            print(f"  [BLOCKING] {r}")
+        for r in warn_only:
+            print(f"  [warn-only] {r}")
         entry["regressions"] = regressions
         if gate:
             # do NOT persist the regressed entry: it must not become the
-            # baseline the next run is compared against. Exit 2 distinguishes
-            # "regression found" from tool crashes (exit 1): a warn-only CI
-            # wrapper can downgrade ONLY the regression exit.
+            # baseline the next run is compared against. Exit 2/3 distinguish
+            # "regression found" (blocking/warn-only) from tool crashes
+            # (exit 1): the CI wrapper downgrades ONLY exit 3.
             print(f"trajectory: gate failed; {entry['sha']} not appended")
-            sys.exit(2)
+            sys.exit(2 if blocking else 3)
     os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
     with open(out_path, "a") as f:
         f.write(json.dumps(entry) + "\n")
@@ -219,7 +234,12 @@ def main():
                     help="relative worsening beyond which a directional metric "
                          "counts as a regression")
     ap.add_argument("--gate", action="store_true",
-                    help="exit 1 when a regression is found")
+                    help="exit 2 (blocking) / 3 (warn-only, see --block) when "
+                         "a regression is found")
+    ap.add_argument("--block", default="",
+                    help="comma list of metric-key prefixes (e.g. 'fig6/,fig7/')"
+                         " whose regressions are blocking (exit 2); regressions"
+                         " outside them exit 3. Empty: everything blocks")
     ap.add_argument("--plot", action="store_true",
                     help="render the cached series as markdown sparklines "
                          "(no merge) — pipe into $GITHUB_STEP_SUMMARY in CI")
@@ -229,7 +249,8 @@ def main():
         print(md if md else f"trajectory: no history at {args.out}")
         return
     run(bench_glob=args.bench_glob, out_path=args.out, gate=args.gate,
-        tolerance=args.tolerance)
+        tolerance=args.tolerance,
+        block=[p for p in args.block.split(",") if p] or None)
 
 
 if __name__ == "__main__":

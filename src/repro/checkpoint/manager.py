@@ -15,6 +15,7 @@ import os
 import shutil
 import threading
 import time
+import zipfile
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -104,10 +105,15 @@ class CheckpointManager:
 
     # ------------------------------------------------------------------
     def list_steps(self):
+        # a publishable checkpoint has BOTH files: meta.json alone can appear
+        # if a rank died between unlink and rename on a non-atomic filesystem,
+        # and restore would then crash on the missing/truncated state.npz
         out = []
         for name in os.listdir(self.dir):
             if name.startswith("step_") and not name.endswith(".tmp"):
-                if os.path.exists(os.path.join(self.dir, name, "meta.json")):
+                d = os.path.join(self.dir, name)
+                if (os.path.exists(os.path.join(d, "meta.json"))
+                        and os.path.exists(os.path.join(d, "state.npz"))):
                     out.append(int(name.split("_")[1]))
         return sorted(out)
 
@@ -122,11 +128,33 @@ class CheckpointManager:
         The FULL pytree round-trips — including policy aux (FIFO cursors, GRASP
         prototypes/distances) and tiered staging state (``stage``/``stage_valid``);
         ``strict=False`` tolerates checkpoints written before such a leaf existed
-        (the template's init value is kept for the missing leaves only)."""
+        (the template's init value is kept for the missing leaves only).
+
+        With ``step=None`` a checkpoint that fails to load (truncated ``state.npz``
+        from a rank killed mid-write) is skipped and the next older step is tried —
+        the restart path must survive exactly the failures that trigger it. An
+        explicitly requested ``step`` still raises on corruption."""
         self.wait()
-        step = step if step is not None else self.latest_step()
-        if step is None:
+        if step is not None:
+            return self._load(template, step, strict)
+        candidates = self.list_steps()
+        if not candidates:
             raise FileNotFoundError(f"no checkpoints under {self.dir}")
+        last_err: Optional[Exception] = None
+        for s in reversed(candidates):
+            try:
+                return self._load(template, s, strict)
+            except (OSError, ValueError, json.JSONDecodeError,
+                    zipfile.BadZipFile) as e:
+                from repro.utils.logging import get_logger
+
+                get_logger("repro.checkpoint").warning(
+                    "checkpoint step %d unreadable (%s); trying older", s, e)
+                last_err = e
+        raise FileNotFoundError(
+            f"no readable checkpoint under {self.dir}") from last_err
+
+    def _load(self, template, step: int, strict: bool) -> Tuple[Any, Dict]:
         path = os.path.join(self.dir, f"step_{step:010d}")
         arrays = dict(np.load(os.path.join(path, "state.npz"), allow_pickle=False))
         with open(os.path.join(path, "meta.json")) as f:

@@ -3,6 +3,7 @@ from repro.configs.base import (
     MeshConfig,
     ModelConfig,
     RehearsalConfig,
+    ResilienceConfig,
     RunConfig,
     ScenarioConfig,
     ShapeConfig,

@@ -279,6 +279,47 @@ class StrategyConfig:
 
 
 # ---------------------------------------------------------------------------
+# Resilience (checkpointed restart + bounded-staleness stragglers; repro.runtime)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ResilienceConfig:
+    """Knobs of the fault-tolerant training loop (``runtime.ResilientLoop``).
+
+    ``ContinualTrainer(resilience=...)`` wraps each task's step loop in a
+    ``ResilientLoop``: periodic full-carry checkpoints + cursor rewind give a
+    bit-exact restart after a failure (the stream and all RNG are pure
+    functions of (seed, step)), transient exceptions get bounded retry with
+    exponential backoff, and a wall-clock step timeout feeds the
+    ``StragglerPolicy`` bounded-staleness reuse path instead of blocking.
+    """
+
+    checkpoint_every: int = 25  # steps between periodic full-carry snapshots
+    max_restarts: int = 3  # bounded retry: restarts beyond this re-raise
+    backoff_base: float = 0.0  # s; restart r sleeps min(max, base * 2**(r-1))
+    backoff_max: float = 30.0
+    # Wall-clock step budget (seconds); a step exceeding it marks the NEXT
+    # step's exchange as straggling — the trainer reuses the previous in-flight
+    # representatives instead of waiting. 0 disables the timeout.
+    step_timeout: float = 0.0
+    straggler_delay_prob: float = 0.0  # simulated late-exchange probability
+    max_staleness: int = 4  # bound on consecutive representative reuses
+    # True: retry the documented transient set (InjectedFailure, OSError,
+    # ConnectionError, TimeoutError, XLA runtime errors). False: only
+    # InjectedFailure (chaos hooks) is retried; real errors propagate.
+    retry_transient: bool = True
+
+    def __post_init__(self):
+        if self.checkpoint_every < 1:
+            raise ValueError(
+                f"checkpoint_every must be >= 1, got {self.checkpoint_every}")
+        if self.max_restarts < 0:
+            raise ValueError(
+                f"max_restarts must be >= 0, got {self.max_restarts}")
+
+
+# ---------------------------------------------------------------------------
 # Continual-learning scenario (task stream + schedule; see repro.scenario)
 # ---------------------------------------------------------------------------
 
@@ -383,6 +424,9 @@ class RunConfig:
     # Strategy hyper-parameters; the strategy NAME is ScenarioConfig.strategy.
     strategy: StrategyConfig = StrategyConfig()
     scenario: ScenarioConfig = ScenarioConfig()
+    # None = no fault-tolerant loop; a ResilienceConfig turns on checkpointed
+    # restart + bounded-staleness straggler handling in ContinualTrainer.
+    resilience: Optional[ResilienceConfig] = None
 
     def replace(self, **kw) -> "RunConfig":
         return dataclasses.replace(self, **kw)

@@ -29,6 +29,9 @@ class CLRunResult:
     task_runtimes: List[float]
     final_accuracy: float  # Eq. 1 at the end of training
     history: List[Dict[str, float]] = field(default_factory=list)
+    # fault-tolerance accounting (zeros unless the trainer ran with resilience=)
+    restarts: int = 0
+    resilience_stats: Optional[Dict[str, float]] = None
 
 
 def run_continual(

@@ -87,6 +87,27 @@ class BuiltStep:
     meta: Dict[str, Any]
 
 
+def shard_host_batch(batch, shardings):
+    """Assemble per-process host batches into global sharded arrays.
+
+    Single-process (the CPU/test path): a no-op — jit moves host arrays onto
+    the mesh itself. Multi-process (``jax.distributed``): each process holds
+    only its LOCAL slice of the global batch, and jit cannot be handed host
+    arrays for a sharding that spans non-addressable devices, so every leaf
+    goes through ``make_array_from_process_local_data`` (each process
+    contributes its slice; the global shape is inferred from the sharding's
+    process count along the batch axis). Feed the result straight to
+    ``BuiltStep.fn``.
+    """
+    import jax.experimental.multihost_utils  # noqa: F401  (registers helpers)
+
+    if jax.process_count() == 1:
+        return batch
+    return jax.tree_util.tree_map(
+        lambda sh, x: jax.make_array_from_process_local_data(sh, np.asarray(x)),
+        shardings, batch)
+
+
 # ---------------------------------------------------------------------------
 # Train step
 # ---------------------------------------------------------------------------

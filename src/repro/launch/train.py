@@ -19,6 +19,7 @@ import time
 from repro.configs import get_config, get_reduced
 from repro.configs.base import (
     RehearsalConfig,
+    ResilienceConfig,
     RunConfig,
     ScenarioConfig,
     ShapeConfig,
@@ -71,6 +72,17 @@ def main(argv=None):
     ap.add_argument("--ckpt-every", type=int, default=100)
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--resilience", action="store_true",
+                    help="wrap the step loop in runtime.ResilientLoop "
+                         "(checkpointed restart; needs --ckpt-dir)")
+    ap.add_argument("--resilience-checkpoint-every", type=int, default=25)
+    ap.add_argument("--max-restarts", type=int, default=3)
+    ap.add_argument("--backoff-base", type=float, default=0.0,
+                    help="restart r sleeps min(backoff-max, base * 2^(r-1)) s")
+    ap.add_argument("--backoff-max", type=float, default=30.0)
+    ap.add_argument("--step-timeout", type=float, default=0.0,
+                    help="wall-clock step budget (s); overruns flag the next "
+                         "exchange as straggling (bounded-staleness reuse)")
     args = ap.parse_args(argv)
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
@@ -100,6 +112,11 @@ def main(argv=None):
             steps_per_epoch=args.steps_per_task, batch_size=args.global_batch,
             seed=args.seed, vocab_size=vocab_active, seq_len=args.seq_len,
             auto_defaults=False),  # the CLI's rehearsal flags are authoritative
+        resilience=ResilienceConfig(
+            checkpoint_every=args.resilience_checkpoint_every,
+            max_restarts=args.max_restarts, backoff_base=args.backoff_base,
+            backoff_max=args.backoff_max,
+            step_timeout=args.step_timeout) if args.resilience else None,
     )
     scenario = TokenClassIncremental(run.scenario)
 
@@ -125,6 +142,10 @@ def main(argv=None):
             log.info("eval after task %d on task %d: loss=%.4f", task, j,
                      res.accuracy_matrix[task, j])
     steps = args.tasks * args.steps_per_task
+    if res.resilience_stats is not None:
+        log.info("resilience: restarts=%d stale_steps=%d restore=%.3fs",
+                 res.restarts, int(res.resilience_stats.get("stale_steps", 0)),
+                 res.resilience_stats.get("restore_seconds", 0.0))
     log.info("done: %d steps in %.1fs", steps, time.time() - t_start)
     return res
 

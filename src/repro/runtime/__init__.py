@@ -1,5 +1,10 @@
-from repro.runtime.fault_tolerance import InjectedFailure, ResilientLoop, StragglerPolicy
+from repro.runtime import multiproc
+from repro.runtime.autoscale import Autoscaler, TrafficSignal
 from repro.runtime.elastic import reshard_carry, reshard_tiered
+from repro.runtime.fault_tolerance import (TRANSIENT_EXCEPTIONS,
+                                           InjectedFailure, ResilientLoop,
+                                           StragglerPolicy)
 
-__all__ = ["InjectedFailure", "ResilientLoop", "StragglerPolicy", "reshard_carry",
-           "reshard_tiered"]
+__all__ = ["Autoscaler", "InjectedFailure", "ResilientLoop", "StragglerPolicy",
+           "TRANSIENT_EXCEPTIONS", "TrafficSignal", "multiproc",
+           "reshard_carry", "reshard_tiered"]

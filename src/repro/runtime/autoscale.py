@@ -1,0 +1,135 @@
+"""Autoscaling: a load signal drives elastic reshard of the training fleet.
+
+The paper's elastic story (§VII: buffers survive worker-count changes) meets
+an operational driver here: a ``TrafficSignal`` models offered load on the
+train-while-serve fleet, and the ``Autoscaler`` turns utilization into scale
+decisions — grow when sustained load exceeds capacity, shrink when it falls,
+with hysteresis (distinct up/down thresholds) and a cooldown so transient
+blips don't thrash the fleet. The decision layer is pure (no jax); applying a
+decision is ``runtime.reshard_carry`` / ``reshard_tiered``, which pool and
+re-deal the rehearsal buffers without losing contents (``scale_carry`` wraps
+that with wall-clock timing for the fig7 benchmark).
+
+Scale-down is the half that makes rehearsal interesting: evicting a worker
+must not evict its shard of the replay memory. Pool + re-deal keeps every
+stored representative (up to aggregate capacity), so accuracy@N after a
+2→4→2 excursion matches the flat-fleet run — the invariant
+``benchmarks/fig7_scalability.py`` measures and ``tests/test_multiproc.py``
+pins across a process death.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import List, Optional, Tuple
+
+
+class TrafficSignal:
+    """Synthetic offered-load trace, pure in (pattern, step) — replayable.
+
+    Patterns (all oscillate between ``low`` and ``high`` with ``period``):
+      ``square`` — load steps between low and high each half-period (the
+          grow-then-shrink excursion fig7 drives);
+      ``ramp``   — sawtooth: linear climb, instant drop;
+      ``sine``   — smooth oscillation.
+    """
+
+    def __init__(self, pattern: str = "square", period: int = 40,
+                 low: float = 1.0, high: float = 4.0):
+        if pattern not in ("square", "ramp", "sine"):
+            raise ValueError(f"unknown traffic pattern {pattern!r}")
+        if period < 2:
+            raise ValueError(f"period must be >= 2, got {period}")
+        self.pattern = pattern
+        self.period = period
+        self.low = float(low)
+        self.high = float(high)
+
+    def load(self, step: int) -> float:
+        phase = (step % self.period) / self.period
+        if self.pattern == "square":
+            x = 1.0 if phase >= 0.5 else 0.0
+        elif self.pattern == "ramp":
+            x = phase
+        else:  # sine
+            x = 0.5 * (1.0 - math.cos(2.0 * math.pi * phase))
+        return self.low + (self.high - self.low) * x
+
+
+@dataclasses.dataclass
+class Autoscaler:
+    """Utilization → worker-count decisions with hysteresis and cooldown.
+
+    utilization = load / (workers * capacity_per_worker). Above
+    ``upscale_threshold`` the fleet grows to the smallest count that brings
+    utilization under it; below ``downscale_threshold`` it shrinks likewise
+    (the gap between the two thresholds is the hysteresis band — a fleet
+    sitting between them never moves). ``cooldown_steps`` must elapse between
+    consecutive decisions. ``observe`` returns the new count or None.
+    """
+
+    min_workers: int = 1
+    max_workers: int = 4
+    capacity_per_worker: float = 1.0
+    upscale_threshold: float = 0.9
+    downscale_threshold: float = 0.45
+    cooldown_steps: int = 5
+
+    def __post_init__(self):
+        if not (0.0 < self.downscale_threshold < self.upscale_threshold <= 1.0):
+            raise ValueError(
+                "need 0 < downscale_threshold < upscale_threshold <= 1, got "
+                f"{self.downscale_threshold} / {self.upscale_threshold}")
+        if self.min_workers < 1 or self.max_workers < self.min_workers:
+            raise ValueError(
+                f"bad worker bounds [{self.min_workers}, {self.max_workers}]")
+        self._last_change: Optional[int] = None
+        self.events: List[Tuple[int, int, int]] = []  # (step, old, new)
+
+    def _clamp(self, n: int) -> int:
+        return max(self.min_workers, min(self.max_workers, n))
+
+    def desired(self, load: float) -> int:
+        """The smallest fleet keeping utilization under upscale_threshold."""
+        need = load / (self.capacity_per_worker * self.upscale_threshold)
+        return self._clamp(max(1, math.ceil(need - 1e-9)))
+
+    def observe(self, step: int, load: float, current: int) -> Optional[int]:
+        if (self._last_change is not None
+                and step - self._last_change < self.cooldown_steps):
+            return None
+        util = load / (current * self.capacity_per_worker)
+        target = None
+        if util > self.upscale_threshold:
+            target = self.desired(load)
+        elif util < self.downscale_threshold:
+            cand = self.desired(load)
+            # only shrink if the smaller fleet stays under the UP threshold —
+            # else the next observation would immediately grow back (thrash)
+            if cand < current:
+                target = cand
+        if target is None or target == current:
+            return None
+        self._last_change = step
+        self.events.append((step, current, target))
+        return target
+
+
+def scale_carry(carry, n_new: int, policy=None):
+    """Apply a scale decision to a live TrainCarry: pool + re-deal the buffers
+    (flat or tiered — ``reshard_carry`` dispatches) across ``n_new`` workers.
+    Returns (new_carry, seconds) — the reshard latency fig7 reports."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.runtime.elastic import reshard_carry
+
+    t0 = time.perf_counter()
+    new_carry = reshard_carry(carry, n_new, policy=policy)
+    # decommit: params/opt pass through reshard still committed to the old
+    # mesh's devices; a jit compiled for the new mesh refuses mixed-committed
+    # inputs. The host round-trip is part of the real reshard cost.
+    new_carry = jax.tree_util.tree_map(jnp.asarray, jax.device_get(new_carry))
+    jax.block_until_ready(jax.tree_util.tree_leaves(new_carry))
+    return new_carry, time.perf_counter() - t0

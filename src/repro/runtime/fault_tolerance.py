@@ -6,22 +6,31 @@ At thousands of nodes, three failure classes dominate; the corresponding mechani
    step function: on exception it restores the last checkpoint, rewinds the data
    cursor, and resumes. Restart is bit-exact because the data stream and all RNG are
    pure functions of (seed, cursor/step).
-2. **Transient failures** (preemption, flaky link) → bounded retry with state rollback
-   (the step either completes and is committed, or the carry is discarded — pure
-   functional steps make rollback free).
+2. **Transient failures** (preemption, flaky link, pjit/IO hiccup) → bounded retry
+   with state rollback and exponential backoff. ``retry_on`` is an exception
+   allowlist (default: :data:`TRANSIENT_EXCEPTIONS`); anything outside it propagates
+   immediately — a deterministic error (shape mismatch, NaN guard) would fail
+   identically on every replay, so retrying it only burns the restart budget.
 3. **Stragglers** in the rehearsal service → *bounded staleness*: the paper's async
    design already means training never blocks on sampling; if the exchange for step
-   t+1 is late (simulated here — on real hardware this is a late collective), the
-   step reuses the previous in-flight representatives instead of waiting. Accuracy
-   impact is negligible (representatives are i.i.d. samples either way); the paper's
-   "training only waits if the service can't keep up" becomes "training *never*
-   waits, staleness is bounded by 1 extra step".
+   t+1 is late (simulated via ``delay_prob``, or detected by the wall-clock
+   ``step_timeout``), the step reuses the previous in-flight representatives instead
+   of waiting (``stale_step_fn``, built by ``repro.strategy.make_stale_step``).
+   Accuracy impact is negligible (representatives are i.i.d. samples either way);
+   ``max_staleness`` bounds consecutive reuses, so the paper's "training only waits
+   if the service can't keep up" becomes "training *never* waits, staleness is
+   bounded".
+
+Rollback is free because steps are pure: a step either completes and its carry is
+committed, or the exception discards the partially-donated carry and the next
+attempt starts from the restored checkpoint arrays (the checkpoint holds host-side
+copies, never aliases of donated device buffers).
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Optional
+from typing import Any, Callable, Optional, Sequence, Tuple, Type
 
 import jax
 import numpy as np
@@ -36,43 +45,127 @@ class InjectedFailure(RuntimeError):
     """Raised by tests / chaos hooks to simulate node failure."""
 
 
+def _transient_exceptions() -> Tuple[Type[BaseException], ...]:
+    """The default ``retry_on`` allowlist: chaos injections plus the exception
+    classes a preemption / flaky interconnect / remote filesystem actually
+    surfaces as (OSError covers IOError; XlaRuntimeError is what a pjit step
+    raises when a participant drops mid-collective)."""
+    excs: list = [InjectedFailure, OSError, ConnectionError, TimeoutError]
+    try:  # jaxlib layout moved across versions; absence just narrows the list
+        from jax.errors import JaxRuntimeError  # type: ignore[attr-defined]
+
+        excs.append(JaxRuntimeError)
+    except ImportError:
+        try:
+            from jaxlib.xla_extension import XlaRuntimeError  # type: ignore
+
+            excs.append(XlaRuntimeError)
+        except ImportError:
+            pass
+    return tuple(excs)
+
+
+TRANSIENT_EXCEPTIONS: Tuple[Type[BaseException], ...] = _transient_exceptions()
+
+
 @dataclasses.dataclass
 class ResilientLoop:
-    """Checkpointed training loop with automatic restart on failure."""
+    """Checkpointed training loop with bounded-retry restart on failure.
+
+    ``run`` drives ``step_fn(carry, batch, key) -> (carry, metrics)`` for
+    ``num_steps`` steps with periodic full-carry checkpoints. On an allowlisted
+    exception it restores the last checkpoint, truncates the metrics history to
+    the restored cursor (entries recorded for rolled-back steps would otherwise
+    duplicate on replay), sleeps an exponential backoff, and replays — bit-exact,
+    because batches and RNG derive from the absolute step id.
+
+    ``step_timeout`` (seconds, wall-clock) + ``straggler`` + ``stale_step_fn``
+    form the bounded-staleness path: a step that overruns the budget marks the
+    rehearsal exchange as straggling, and the next step runs ``stale_step_fn``
+    (same optimizer step, but consuming the carried in-flight representatives
+    again and skipping the exchange) instead of blocking on a fresh sample.
+    """
 
     step_fn: Callable  # (carry, batch, key) -> (carry, metrics)
     ckpt: CheckpointManager
     checkpoint_every: int = 50
     max_restarts: int = 3
+    retry_on: Optional[Sequence[Type[BaseException]]] = None  # None -> TRANSIENT_EXCEPTIONS
+    backoff_base: float = 0.0  # restart r sleeps min(backoff_max, base * 2**(r-1))
+    backoff_max: float = 30.0
+    step_timeout: float = 0.0  # wall-clock budget per step; 0 disables
+    straggler: Optional["StragglerPolicy"] = None
+    stale_step_fn: Optional[Callable] = None  # (carry, batch, key) -> (carry, metrics)
+    sleep_fn: Callable[[float], None] = time.sleep  # injectable for tests
+
+    def _backoff(self, restarts: int) -> float:
+        if self.backoff_base <= 0.0:
+            return 0.0
+        return min(self.backoff_max, self.backoff_base * (2.0 ** (restarts - 1)))
 
     def run(self, carry, batch_fn, key, num_steps: int, start_step: int = 0,
             failure_hook: Optional[Callable[[int], None]] = None):
-        """``batch_fn(step) -> batch``. Returns (carry, metrics_history, restarts)."""
+        """``batch_fn(step) -> batch``. Returns (carry, metrics_history, restarts).
+
+        Per-run counters land on ``self.stats``: restarts, stale_steps,
+        restore_seconds (wall-clock spent in restore, the "restart cost").
+        """
+        retry_on = tuple(self.retry_on) if self.retry_on is not None \
+            else TRANSIENT_EXCEPTIONS
         restarts = 0
+        stale_steps = 0
+        restore_seconds = 0.0
         step = start_step
-        history = []
-        self.ckpt.save(step, carry, {"cursor": step})
-        last_good = step
+        history: list = []
+        self.ckpt.save(step, carry, {"cursor": step, "history_len": 0})
         while step < start_step + num_steps:
             try:
                 if failure_hook is not None:
                     failure_hook(step)  # chaos injection point
                 batch = batch_fn(step)
-                carry, metrics = self.step_fn(carry, batch, jax.random.fold_in(key, step))
+                use_stale = (
+                    self.straggler is not None
+                    and self.stale_step_fn is not None
+                    and not self.straggler.use_fresh()
+                )
+                fn = self.stale_step_fn if use_stale else self.step_fn
+                t0 = time.monotonic()
+                carry, metrics = fn(carry, batch, jax.random.fold_in(key, step))
+                if self.step_timeout > 0.0:
+                    jax.block_until_ready(jax.tree_util.tree_leaves(carry)[0])
+                    if (time.monotonic() - t0 > self.step_timeout
+                            and self.straggler is not None):
+                        # over budget: the exchange for t+1 is presumed late —
+                        # flag it so the next step reuses instead of waiting
+                        self.straggler.record_slow()
+                stale_steps += int(use_stale)
                 step += 1
+                # history BEFORE the checkpoint: the snapshot's history_len then
+                # counts exactly the committed steps, so restore can truncate
+                # replayed entries instead of duplicating them
+                history.append({k: float(v) for k, v in metrics.items()})
                 if step % self.checkpoint_every == 0:
                     jax.block_until_ready(jax.tree_util.tree_leaves(carry)[0])
-                    self.ckpt.save(step, carry, {"cursor": step})
-                    last_good = step
-                history.append({k: float(v) for k, v in metrics.items()})
-            except InjectedFailure as e:
+                    self.ckpt.save(step, carry,
+                                   {"cursor": step, "history_len": len(history)})
+            except retry_on as e:
                 restarts += 1
                 if restarts > self.max_restarts:
-                    raise RuntimeError(f"exceeded max_restarts={self.max_restarts}") from e
-                log.warning("failure at step %d (%s); restoring step %d", step, e, last_good)
+                    raise RuntimeError(
+                        f"exceeded max_restarts={self.max_restarts}") from e
+                pause = self._backoff(restarts)
+                t0 = time.monotonic()
                 carry, meta = self.ckpt.restore(carry)
+                restore_seconds += time.monotonic() - t0
                 step = int(meta["cursor"])  # rewind the data cursor with the state
+                del history[int(meta.get("history_len", len(history))):]
+                log.warning("failure at restart %d (%s); restored step %d, "
+                            "backoff %.2fs", restarts, e, step, pause)
+                if pause > 0.0:
+                    self.sleep_fn(pause)
         self.ckpt.wait()
+        self.stats = {"restarts": restarts, "stale_steps": stale_steps,
+                      "restore_seconds": restore_seconds}
         return carry, history, restarts
 
 
@@ -80,10 +173,12 @@ class StragglerPolicy:
     """Bounded-staleness rehearsal: decide whether to consume fresh representatives.
 
     ``delay_prob`` simulates a straggling rehearsal exchange (late collective / slow
-    peer). When straggling, the trainer reuses the previous in-flight representatives —
-    it NEVER blocks. ``max_staleness`` bounds consecutive reuses; beyond it we fall
-    back to fresh (i.e., accept the wait — in practice never reached at delay
-    probabilities below ~90%)."""
+    peer); ``record_slow()`` marks a real one (a step that blew its wall-clock
+    budget — see ``ResilientLoop.step_timeout``). When straggling, the trainer
+    reuses the previous in-flight representatives — it NEVER blocks.
+    ``max_staleness`` bounds consecutive reuses; beyond it we fall back to fresh
+    (i.e., accept the wait — in practice never reached at delay probabilities
+    below ~90%)."""
 
     def __init__(self, delay_prob: float = 0.0, max_staleness: int = 4, seed: int = 0):
         self.delay_prob = delay_prob
@@ -91,9 +186,18 @@ class StragglerPolicy:
         self._rng = np.random.default_rng(seed)
         self.staleness = 0
         self.reuses = 0
+        self._pending_slow = False
+
+    def record_slow(self) -> None:
+        """Flag the in-flight exchange as late (wall-clock overrun): the next
+        ``use_fresh`` answers False (reuse) unless the staleness bound forces a
+        fresh consume."""
+        self._pending_slow = True
 
     def use_fresh(self) -> bool:
-        if self.delay_prob and self._rng.random() < self.delay_prob:
+        slow = self._pending_slow
+        self._pending_slow = False
+        if slow or (self.delay_prob and self._rng.random() < self.delay_prob):
             if self.staleness < self.max_staleness:
                 self.staleness += 1
                 self.reuses += 1

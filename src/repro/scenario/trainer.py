@@ -23,6 +23,7 @@ over this class. The pjit backend absorbs ``launch.train``'s
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 from typing import Any, Callable, Dict, Optional
 
@@ -41,7 +42,7 @@ from repro.scenario.base import Scenario, get_scenario
 OVERRIDE_KEYS = frozenset({
     "batch_fn", "cumulative_batch_fn", "eval_fn", "init_params_fn",
     "init_opt_fn", "step_fn", "loss_fn", "item_spec", "rcfg", "label_field",
-    "checkpoint_cb", "forward_outputs",
+    "checkpoint_cb", "forward_outputs", "failure_hook",
 })
 
 
@@ -67,6 +68,13 @@ class ContinualTrainer:
         the pjit backend every ``ckpt_every`` steps (0 = per task only).
       prefetch: stage batches on a background thread (identical values — the
         streams are pure functions of the cursor).
+      resilience: a ``ResilienceConfig`` (or None; ``run.resilience`` is the
+        config-file spelling) wraps each task's step loop in a
+        ``runtime.ResilientLoop``: periodic full-carry checkpoints under
+        ``ckpt_dir/resilient`` + cursor rewind give bit-exact restart after a
+        transient failure, and the wall-clock ``step_timeout`` feeds the
+        bounded-staleness straggler path. Requires ``ckpt_dir``. Works on both
+        backends; the ``failure_hook`` override is the chaos injection point.
       overrides: escape hatches (see OVERRIDE_KEYS) replacing individual
         composed pieces; used by the deprecated ``run_continual`` shim.
     """
@@ -75,7 +83,7 @@ class ContinualTrainer:
                  exchange: str = "full", strategy: Optional[str] = None,
                  ckpt_dir: str = "", ckpt_every: int = 0, prefetch: bool = True,
                  log_every: int = 0, donate: bool = True,
-                 step_form: str = "fused",
+                 step_form: str = "fused", resilience=None,
                  overrides: Optional[Dict[str, Any]] = None):
         from repro.strategy import STRATEGIES, get_strategy
 
@@ -92,6 +100,11 @@ class ContinualTrainer:
         self.log_every = log_every
         self.donate = donate
         self._checkpoint_cb = ov.get("checkpoint_cb")
+        self._failure_hook = ov.get("failure_hook")
+        self.resilience = resilience if resilience is not None else run.resilience
+        if self.resilience is not None and not ckpt_dir:
+            raise ValueError("resilience= needs ckpt_dir: the ResilientLoop's "
+                             "restart path restores from ckpt_dir/resilient")
 
         sc = run.scenario
         self.scenario: Optional[Scenario] = None
@@ -211,6 +224,25 @@ class ContinualTrainer:
                 strategy_cfg=self.scfg, forward_outputs=self.forward_outputs,
                 aux_spec=self.aux_spec)
 
+        if self.resilience is not None and self._halves is not None:
+            raise ValueError("resilience= needs step_form='fused': the split "
+                             "form's two half-programs have no single step the "
+                             "ResilientLoop can retry atomically")
+        # The bounded-staleness reuse path: only the plain pipelined rehearsal
+        # step has a carried pending sample to re-consume (tap strategies need
+        # the fresh forward's aux values; the pjit path samples in-program) —
+        # elsewhere a straggling exchange falls back to blocking, never to a
+        # wrong program.
+        self._stale_step_fn = None
+        if (self.resilience is not None and self.mesh is None
+                and "step_fn" not in ov and self._opt_update is not None
+                and self.strat.uses_buffer and not self.strat.needs_outputs
+                and rcfg is not None and rcfg.enabled and rcfg.is_pipelined):
+            from repro.strategy import make_stale_step
+            self._stale_step_fn = make_stale_step(
+                self.loss_fn, self._opt_update, rcfg,
+                label_field=self.label_field, donate=donate)
+
     # ------------------------------------------------------------------ util
     def _strategy_aux_spec(self) -> Dict[str, Any]:
         """The strategy's per-record aux field specs (``{}`` for the built-in
@@ -273,6 +305,38 @@ class ContinualTrainer:
                 entry[k] = float(metrics[k])
         return entry
 
+    def _resilient_loop(self, step_fn, stale_step_fn=None):
+        """Build the per-fit ``ResilientLoop`` from ``self.resilience``: its
+        checkpoints live under ``ckpt_dir/resilient`` (global-step ids — the
+        trainer's own per-task saves use task ids, so the two streams must not
+        share a directory), and the straggler policy is freshly seeded so
+        repeated fits draw the same simulated-delay sequence."""
+        from repro.checkpoint import CheckpointManager
+        from repro.runtime.fault_tolerance import (InjectedFailure,
+                                                   ResilientLoop,
+                                                   StragglerPolicy)
+        res = self.resilience
+        rmgr = CheckpointManager(os.path.join(self.ckpt_dir, "resilient"))
+        straggler = None
+        if res.straggler_delay_prob > 0.0 or res.step_timeout > 0.0:
+            straggler = StragglerPolicy(res.straggler_delay_prob,
+                                        res.max_staleness, seed=self.seed)
+        return ResilientLoop(
+            step_fn=step_fn, ckpt=rmgr,
+            checkpoint_every=res.checkpoint_every,
+            max_restarts=res.max_restarts,
+            retry_on=None if res.retry_transient else (InjectedFailure,),
+            backoff_base=res.backoff_base, backoff_max=res.backoff_max,
+            step_timeout=res.step_timeout, straggler=straggler,
+            stale_step_fn=stale_step_fn)
+
+    def _loop_history(self, task: int, n_steps: int, loop_hist, history):
+        """Fold a ResilientLoop metrics history into the trainer's history at
+        the trainer's cadence (every n//4 steps, same as the inline loop)."""
+        for s, m in enumerate(loop_hist):
+            if s % max(1, n_steps // 4) == 0:
+                history.append(self._history_entry(task, s, m))
+
     def _checkpoint_task(self, task: int, carry, global_step: int, manager):
         if self._checkpoint_cb is not None:
             self._checkpoint_cb(task, carry)
@@ -311,9 +375,16 @@ class ContinualTrainer:
                            self.rcfg, label_field=self.label_field,
                            seed=self.seed)
 
+        rloop = None
+        if self.resilience is not None:
+            if self._step_fn is None:
+                raise TypeError("resilience= needs a fused step_fn")
+            rloop = self._resilient_loop(self._step_fn, self._stale_step_fn)
+
         T = self.num_tasks
         acc = np.zeros((T, T))
         runtimes, history = [], []
+        res_stats: Dict[str, float] = {}
         global_step = 0
         for task in range(T):
             if self.strat.fresh_params_per_task:
@@ -329,6 +400,27 @@ class ContinualTrainer:
                 n_steps = self.epochs_per_task * self.steps_per_epoch
 
             source = self._source(task)
+            if rloop is not None:
+                # resilient: batches come straight off the cursor-pure stream
+                # (the Prefetcher's read-ahead can't be rewound on restore) and
+                # the ResilientLoop owns stepping, checkpoints and chaos
+                def batch_fn(cur, _src=source):
+                    return {k_: jnp.asarray(v) for k_, v in _src(cur).items()}
+
+                t0 = time.perf_counter()
+                carry, loop_hist, _ = rloop.run(
+                    carry, batch_fn, key, n_steps, start_step=global_step,
+                    failure_hook=self._failure_hook)
+                self._loop_history(task, n_steps, loop_hist, history)
+                global_step += n_steps
+                for k_, v in rloop.stats.items():
+                    res_stats[k_] = res_stats.get(k_, 0.0) + v
+                jax.block_until_ready(carry.params)
+                runtimes.append(time.perf_counter() - t0)
+                for j in range(task + 1):
+                    acc[task, j] = self.eval_fn(carry.params, j)
+                self._checkpoint_task(task, carry, global_step, manager)
+                continue
             pf = None
             if self.prefetch:
                 pf = Prefetcher(lambda cur, _src=source: _src(cur.step),
@@ -389,7 +481,9 @@ class ContinualTrainer:
         final = float(np.mean(acc[T - 1, :T]))
         return CLRunResult(strategy=self.strategy, accuracy_matrix=acc,
                            task_runtimes=runtimes, final_accuracy=final,
-                           history=history)
+                           history=history,
+                           restarts=int(res_stats.get("restarts", 0)),
+                           resilience_stats=res_stats or None)
 
     # ------------------------------------------------------------------ pjit
     def _fit_pjit(self):
@@ -433,6 +527,7 @@ class ContinualTrainer:
                 f"declared scenario schedule is the one that actually runs")
         acc = np.zeros((T, T))
         runtimes, history = [], []
+        res_stats: Dict[str, float] = {}
         with set_mesh(mesh):
             # buffer_budget_bytes=None: rcfg.slots_per_bucket is authoritative,
             # so both backends allocate the same buffer for the same RunConfig.
@@ -452,6 +547,23 @@ class ContinualTrainer:
             issue_key = key
             global_step = 0
 
+            rloop = None
+            if self.resilience is not None:
+                # adapt the positional pjit step to the ResilientLoop's
+                # (carry, batch, key) contract: the carry is the full state
+                # tuple INCLUDING issue_key, so a restore rewinds the sampling
+                # lineage with the arrays (bit-exact restart, same as the
+                # carry backend's PipelinedRehearsalCarry.key)
+                if built.meta["mode"] == "off":
+                    def rstep(state, batch, kstep):
+                        p, o, m = built.fn(state[0], state[1], batch, kstep)
+                        return (p, o), m
+                else:
+                    def rstep(state, batch, kstep):
+                        p, o, b, r, v, m = built.fn(*state[:5], batch, state[5])
+                        return (p, o, b, r, v, kstep), m
+                rloop = self._resilient_loop(rstep)
+
             def snapshot(step_id, task):
                 state = {"params": params, "opt": opt}
                 if built.meta["mode"] != "off":
@@ -465,6 +577,34 @@ class ContinualTrainer:
                     return self.scenario.batch(_t, bs, cur.step)
 
                 n_steps = self.epochs_per_task * self.steps_per_epoch
+                if rloop is not None:
+                    def batch_fn(cur, _t=task):
+                        return {k_: jnp.asarray(v) for k_, v in
+                                self.scenario.batch(_t, bs, cur).items()}
+
+                    t0 = time.perf_counter()
+                    if built.meta["mode"] == "off":
+                        state = (params, opt)
+                    else:
+                        state = (params, opt, buffer, reps, valid, issue_key)
+                    state, loop_hist, _ = rloop.run(
+                        state, batch_fn, key, n_steps, start_step=global_step,
+                        failure_hook=self._failure_hook)
+                    if built.meta["mode"] == "off":
+                        params, opt = state
+                    else:
+                        params, opt, buffer, reps, valid, issue_key = state
+                    self._loop_history(task, n_steps, loop_hist, history)
+                    global_step += n_steps
+                    for k_, v in rloop.stats.items():
+                        res_stats[k_] = res_stats.get(k_, 0.0) + v
+                    jax.block_until_ready(params)
+                    runtimes.append(time.perf_counter() - t0)
+                    for j in range(task + 1):
+                        acc[task, j] = self.eval_fn(params, j)
+                    if manager is not None:
+                        snapshot(global_step, task)
+                    continue
                 pf = Prefetcher(fetch, cursor=Cursor(task, global_step),
                                 convert=jnp.asarray, limit=n_steps)
                 if self.prefetch:
@@ -506,7 +646,9 @@ class ContinualTrainer:
         final = float(np.mean(acc[T - 1, :T]))
         return CLRunResult(strategy=self.strategy, accuracy_matrix=acc,
                            task_runtimes=runtimes, final_accuracy=final,
-                           history=history)
+                           history=history,
+                           restarts=int(res_stats.get("restarts", 0)),
+                           resilience_stats=res_stats or None)
 
 
 # ---------------------------------------------------------------------------

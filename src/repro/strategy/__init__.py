@@ -45,6 +45,7 @@ from repro.strategy.step import (
     init_carry,
     make_cl_step,
     make_pipelined_halves,
+    make_stale_step,
     rep_checksum,
 )
 
@@ -70,6 +71,7 @@ __all__ = [
     "make_cl_step",
     "make_der_loss",
     "make_pipelined_halves",
+    "make_stale_step",
     "make_tap_ce_loss",
     "mask_rows",
     "outputs_row_spec",

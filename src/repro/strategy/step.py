@@ -334,6 +334,57 @@ def make_cl_step(
     return step
 
 
+def make_stale_step(
+    loss_fn: Callable,
+    opt_update: Callable,
+    rcfg,
+    *,
+    label_field: Optional[str] = None,
+    donate: bool = False,
+):
+    """The bounded-staleness step (single device): same optimizer step as the
+    pipelined ``make_cl_step``, but the rehearsal exchange is presumed late —
+    consume the carried in-flight representatives *again*, and leave buffer and
+    pipe untouched (no push, no sample, no collective). This is the
+    ``StragglerPolicy`` reuse path the runtime dispatches when a step blows its
+    wall-clock budget: training never waits on the rehearsal service; the same
+    pending slot just serves one extra step (staleness +1).
+
+    Skipping the push is deliberate, not merely cheap: Alg-1's reservoir
+    accounting and the sampling RNG lineage both advance per *exchange*, so an
+    exchange-free step keeps (buffer, pipe) bit-identical and the next fresh
+    step re-joins the normal lineage as if the slow step had merely taken long.
+
+    Signature-compatible with ``make_cl_step``'s output —
+    ``step(carry, batch, key) -> (carry, metrics)`` with ``stale_step=1.0`` in
+    the metrics. Plain rehearsal only (tap strategies fall back to blocking).
+    """
+    from repro.core import distributed as dist
+
+    label_field = buffer_api.resolve_field(label_field, rcfg, "label_field", "label")
+
+    @functools.partial(jax.jit, donate_argnums=(0,) if donate else ())
+    def step(carry: TrainCarry, batch, key):
+        pipe = carry.pipe
+        train_reps, train_valid = dist.consume_reps(
+            dist.PendingSample(pipe.reps, pipe.valid), label_field
+        )
+        train_batch = rb.augment_batch(batch, train_reps, train_valid, label_field)
+        (loss, aux_metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            carry.params, train_batch
+        )
+        params, opt, opt_metrics = opt_update(grads, carry.opt, carry.params)
+        metrics = dict(
+            aux_metrics, **opt_metrics, loss=loss, stale_step=jnp.float32(1.0),
+            buffer_fill=buffer_api.buffer_fill(carry.buffer).astype(jnp.float32),
+            rep_checksum=rep_checksum(train_reps, train_valid, label_field),
+        )
+        # buffer/pipe pass through untouched — the pending sample stays pending
+        return TrainCarry(params, opt, carry.buffer, pipe, carry.ef), metrics
+
+    return step
+
+
 def make_pipelined_halves(
     loss_fn: Callable,
     opt_update: Callable,

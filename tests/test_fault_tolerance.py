@@ -1,0 +1,396 @@
+"""Chaos-path coverage for the resilience subsystem (DESIGN.md §10).
+
+The acceptance pin: a run with an injected failure at an arbitrary mid-task
+step produces carry fingerprints (rep_checksum / buffer_fill) and final eval
+accuracy bit-identical to the uninterrupted run — for flat, tiered, and DER++
+configs, on both trainer backends. Plus the loop-level contracts: history is
+never duplicated across a rollback, transient errors retry under the
+``retry_on`` allowlist while deterministic ones propagate, the restart budget
+is bounded, backoff is exponential, and staleness never exceeds the
+``StragglerPolicy`` bound.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import CheckpointManager
+from repro.configs.base import (RehearsalConfig, ResilienceConfig, RunConfig,
+                                ScenarioConfig, StrategyConfig, TrainConfig)
+from repro.runtime import InjectedFailure, ResilientLoop, StragglerPolicy
+from repro.scenario import ContinualTrainer
+
+
+# ---------------------------------------------------------------------------
+# ResilientLoop unit contracts (satellite fixes)
+# ---------------------------------------------------------------------------
+
+
+def _toy_loop(tmp_path, name, **kw):
+    def step_fn(carry, batch, key):
+        return {"w": carry["w"] + batch}, {"s": float(batch[0])}
+
+    mgr = CheckpointManager(str(tmp_path / name), async_save=False)
+    return ResilientLoop(step_fn=step_fn, ckpt=mgr, **kw)
+
+
+def _toy_batch(step):
+    return jnp.full((2,), float(step))
+
+
+def test_history_not_duplicated_across_rollback(tmp_path):
+    """Regression: metrics recorded for steps later rolled back must be
+    truncated on restore, not re-appended on replay. Fail at step 8 with
+    checkpoints every 5: steps 5-7 replay, and each must appear ONCE."""
+    loop = _toy_loop(tmp_path, "h", checkpoint_every=5)
+    fired = {"done": False}
+
+    def chaos(step):
+        if step == 8 and not fired["done"]:
+            fired["done"] = True
+            raise InjectedFailure("late-in-window failure")
+
+    carry, hist, restarts = loop.run({"w": jnp.zeros(2)}, _toy_batch,
+                                     jax.random.PRNGKey(0), 12,
+                                     failure_hook=chaos)
+    assert restarts == 1
+    assert [h["s"] for h in hist] == [float(s) for s in range(12)]
+
+
+def test_history_truncation_with_restart_before_first_periodic_ckpt(tmp_path):
+    """Failure BEFORE the first periodic checkpoint rolls all the way back to
+    the start-of-run save; history must come back empty, then refill once."""
+    loop = _toy_loop(tmp_path, "h0", checkpoint_every=50)
+    fired = {"done": False}
+
+    def chaos(step):
+        if step == 3 and not fired["done"]:
+            fired["done"] = True
+            raise InjectedFailure("pre-checkpoint failure")
+
+    carry, hist, restarts = loop.run({"w": jnp.zeros(2)}, _toy_batch,
+                                     jax.random.PRNGKey(0), 6,
+                                     failure_hook=chaos)
+    assert restarts == 1
+    assert [h["s"] for h in hist] == [0.0, 1.0, 2.0, 3.0, 4.0, 5.0]
+    np.testing.assert_array_equal(np.asarray(carry["w"]),
+                                  np.full((2,), sum(range(6))))
+
+
+def test_transient_exceptions_retried_by_default(tmp_path):
+    """OSError (flaky IO) is on the default allowlist: bounded retry, not a
+    crash — including when it fires before any periodic checkpoint exists."""
+    loop = _toy_loop(tmp_path, "io", checkpoint_every=50)
+    fired = {"done": False}
+
+    def chaos(step):
+        if step == 2 and not fired["done"]:
+            fired["done"] = True
+            raise OSError("simulated flaky filesystem")
+
+    carry, hist, restarts = loop.run({"w": jnp.zeros(2)}, _toy_batch,
+                                     jax.random.PRNGKey(0), 5,
+                                     failure_hook=chaos)
+    assert restarts == 1
+    np.testing.assert_array_equal(np.asarray(carry["w"]),
+                                  np.full((2,), sum(range(5))))
+
+
+def test_non_allowlisted_exception_propagates(tmp_path):
+    """A deterministic error (ValueError) would fail identically on every
+    replay — it must propagate immediately, not burn the restart budget."""
+    loop = _toy_loop(tmp_path, "det", checkpoint_every=5)
+
+    def chaos(step):
+        if step == 2:
+            raise ValueError("deterministic bug")
+
+    with pytest.raises(ValueError, match="deterministic bug"):
+        loop.run({"w": jnp.zeros(2)}, _toy_batch, jax.random.PRNGKey(0), 5,
+                 failure_hook=chaos)
+
+
+def test_custom_retry_on_narrows_the_allowlist(tmp_path):
+    loop = _toy_loop(tmp_path, "narrow", checkpoint_every=5,
+                     retry_on=(InjectedFailure,))
+
+    def chaos(step):
+        if step == 2:
+            raise OSError("not retried under the narrowed allowlist")
+
+    with pytest.raises(OSError):
+        loop.run({"w": jnp.zeros(2)}, _toy_batch, jax.random.PRNGKey(0), 5,
+                 failure_hook=chaos)
+
+
+def test_max_restarts_exceeded_raises(tmp_path):
+    loop = _toy_loop(tmp_path, "max", checkpoint_every=5, max_restarts=2)
+
+    def chaos(step):
+        raise InjectedFailure("permanent failure")
+
+    with pytest.raises(RuntimeError, match="exceeded max_restarts=2"):
+        loop.run({"w": jnp.zeros(2)}, _toy_batch, jax.random.PRNGKey(0), 5,
+                 failure_hook=chaos)
+
+
+def test_exponential_backoff_schedule(tmp_path):
+    """Restart r sleeps min(backoff_max, base * 2^(r-1)); sleeps are injected
+    so the test is instant."""
+    sleeps = []
+    loop = _toy_loop(tmp_path, "bo", checkpoint_every=5, max_restarts=4,
+                     backoff_base=1.0, backoff_max=3.0,
+                     sleep_fn=sleeps.append)
+    fails = {"n": 0}
+
+    def chaos(step):
+        if step == 1 and fails["n"] < 3:
+            fails["n"] += 1
+            raise InjectedFailure(f"failure {fails['n']}")
+
+    loop.run({"w": jnp.zeros(2)}, _toy_batch, jax.random.PRNGKey(0), 3,
+             failure_hook=chaos)
+    assert sleeps == [1.0, 2.0, 3.0]  # 1, 2, then 4 capped at backoff_max
+
+
+def test_loop_stats_account_restores(tmp_path):
+    loop = _toy_loop(tmp_path, "st", checkpoint_every=2)
+    fired = {"done": False}
+
+    def chaos(step):
+        if step == 3 and not fired["done"]:
+            fired["done"] = True
+            raise InjectedFailure("x")
+
+    loop.run({"w": jnp.zeros(2)}, _toy_batch, jax.random.PRNGKey(0), 6,
+             failure_hook=chaos)
+    assert loop.stats["restarts"] == 1
+    assert loop.stats["restore_seconds"] > 0.0
+    assert loop.stats["stale_steps"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Straggler policy: bounded staleness
+# ---------------------------------------------------------------------------
+
+
+@settings(deadline=None, max_examples=20)
+@given(delay_prob=st.floats(0.0, 1.0), max_staleness=st.integers(1, 6),
+       seed=st.integers(0, 2**31 - 1), slow_every=st.integers(2, 9))
+def test_staleness_never_exceeds_bound(delay_prob, max_staleness, seed,
+                                       slow_every):
+    """Property: under ANY mix of simulated delays and real wall-clock
+    overruns (record_slow), consecutive reuses never exceed max_staleness."""
+    pol = StragglerPolicy(delay_prob=delay_prob, max_staleness=max_staleness,
+                          seed=seed)
+    run = 0
+    for i in range(300):
+        if i % slow_every == 0:
+            pol.record_slow()
+        fresh = pol.use_fresh()
+        run = 0 if fresh else run + 1
+        assert run <= max_staleness
+    assert pol.reuses <= 300
+
+
+def test_record_slow_forces_reuse_next_step():
+    pol = StragglerPolicy(delay_prob=0.0, max_staleness=2, seed=0)
+    assert pol.use_fresh()  # no delay, no flag: fresh
+    pol.record_slow()
+    assert not pol.use_fresh()  # flagged: reuse once
+    assert pol.use_fresh()  # flag consumed: fresh again
+
+
+def test_loop_dispatches_stale_step_under_straggle(tmp_path):
+    """delay_prob=1 with max_staleness=2: the loop runs the stale step in
+    bounded bursts (2 stale, then 1 forced-fresh), never blocking."""
+    calls = {"fresh": 0, "stale": 0}
+
+    def step_fn(carry, batch, key):
+        calls["fresh"] += 1
+        return carry, {"stale_step": 0.0}
+
+    def stale_fn(carry, batch, key):
+        calls["stale"] += 1
+        return carry, {"stale_step": 1.0}
+
+    mgr = CheckpointManager(str(tmp_path / "straggle"), async_save=False)
+    loop = ResilientLoop(step_fn=step_fn, ckpt=mgr, checkpoint_every=50,
+                         straggler=StragglerPolicy(delay_prob=1.0,
+                                                   max_staleness=2, seed=0),
+                         stale_step_fn=stale_fn)
+    _, hist, _ = loop.run({"w": jnp.zeros(2)}, _toy_batch,
+                          jax.random.PRNGKey(0), 9)
+    assert calls == {"fresh": 3, "stale": 6}  # 2-stale/1-fresh bursts
+    assert loop.stats["stale_steps"] == 6
+    pattern = [h["stale_step"] for h in hist]
+    assert pattern == [1.0, 1.0, 0.0] * 3
+
+
+def test_make_stale_step_leaves_buffer_and_pipe_untouched():
+    """The reuse path must not advance Alg-1 accounting or the sampling
+    lineage: buffer and pipe come back bit-identical, params move."""
+    from repro.strategy import init_carry, make_stale_step
+
+    rcfg = RehearsalConfig(num_buckets=2, slots_per_bucket=4,
+                           num_representatives=2, num_candidates=4,
+                           mode="async", label_field="label")
+
+    def loss_fn(params, batch):
+        x = batch["x"]
+        pred = x @ params["w"]
+        return jnp.mean((pred - batch["label"].astype(jnp.float32)) ** 2), {}
+
+    def opt_update(grads, opt, params):
+        new_p = jax.tree_util.tree_map(lambda p, g: p - 0.1 * g, params, grads)
+        return new_p, opt, {}
+
+    item_spec = {"x": jax.ShapeDtypeStruct((3,), jnp.float32),
+                 "label": jax.ShapeDtypeStruct((), jnp.int32),
+                 "task": jax.ShapeDtypeStruct((), jnp.int32)}
+    params = {"w": jnp.ones((3,), jnp.float32)}
+    carry = init_carry(params, {}, item_spec, rcfg, label_field="label")
+    step = make_stale_step(loss_fn, opt_update, rcfg, label_field="label")
+    batch = {"x": jnp.ones((4, 3)), "label": jnp.arange(4, dtype=jnp.int32),
+             "task": jnp.zeros((4,), jnp.int32)}
+    out, metrics = step(carry, batch, jax.random.PRNGKey(1))
+    assert float(metrics["stale_step"]) == 1.0
+    assert not np.allclose(np.asarray(out.params["w"]),
+                           np.asarray(carry.params["w"]))
+    for a, b in zip(jax.tree_util.tree_leaves(carry.buffer),
+                    jax.tree_util.tree_leaves(out.buffer)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree_util.tree_leaves(carry.pipe),
+                    jax.tree_util.tree_leaves(out.pipe)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# Trainer-level chaos parity: flat / tiered / DER++ (the acceptance pin)
+# ---------------------------------------------------------------------------
+
+
+def _vision_run(kind: str) -> RunConfig:
+    rcfg = dict(num_buckets=4, slots_per_bucket=6, num_representatives=3,
+                num_candidates=6, mode="async", label_field="label")
+    strategy = "rehearsal"
+    if kind == "flat":
+        rcfg.update(policy="fifo")
+    elif kind == "tiered":
+        rcfg.update(policy="fifo", tiering="host", hot_slots=3, cold_slots=9)
+    elif kind == "der_pp":
+        strategy = "der_pp"
+    else:  # pragma: no cover
+        raise ValueError(kind)
+    return RunConfig(
+        train=TrainConfig(optimizer="sgd", peak_lr=0.05, warmup_steps=5,
+                          linear_scaling=False),
+        rehearsal=RehearsalConfig(**rcfg),
+        strategy=StrategyConfig(alpha=0.3, beta=0.3),
+        scenario=ScenarioConfig(strategy=strategy, num_tasks=2,
+                                epochs_per_task=1, steps_per_epoch=8,
+                                batch_size=8, image_size=8, classes_per_task=4,
+                                auto_defaults=False))
+
+
+@pytest.mark.parametrize("kind", ["flat", "tiered", "der_pp"])
+def test_chaos_parity_bitexact(kind, tmp_path):
+    """Injected failure at a mid-task step: fingerprints (rep_checksum /
+    buffer_fill per history entry) and the full accuracy matrix are
+    bit-identical to the uninterrupted run."""
+    res = ResilienceConfig(checkpoint_every=3, max_restarts=2)
+    clean = ContinualTrainer(_vision_run(kind), ckpt_dir=str(tmp_path / "c"),
+                             resilience=res).fit()
+    fired = {"done": False}
+
+    def chaos(step):
+        # mid-task-1 (absolute step 11 of 16), NOT on a checkpoint boundary
+        if step == 11 and not fired["done"]:
+            fired["done"] = True
+            raise InjectedFailure("simulated preemption")
+
+    chaotic = ContinualTrainer(_vision_run(kind), ckpt_dir=str(tmp_path / "x"),
+                               resilience=res,
+                               overrides={"failure_hook": chaos}).fit()
+    assert clean.restarts == 0 and chaotic.restarts == 1
+    np.testing.assert_array_equal(clean.accuracy_matrix,
+                                  chaotic.accuracy_matrix)
+    assert clean.history == chaotic.history  # incl. rep_checksum/buffer_fill
+    fp = [(h.get("rep_checksum"), h.get("buffer_fill"))
+          for h in chaotic.history]
+    assert any(f and f[1] for f in fp)  # the buffer genuinely filled
+    assert chaotic.resilience_stats["restore_seconds"] > 0.0
+
+
+def test_chaos_parity_pjit_backend(tmp_path):
+    """The pjit backend through the same ResilientLoop contract: issue_key is
+    part of the restored state, so the sampling lineage survives the restart
+    bit-exactly (1×1 mesh, reduced LM)."""
+    from repro.configs import get_reduced
+    from repro.configs.base import ShapeConfig
+    from repro.launch.mesh import make_mesh
+    from repro.scenario import TokenClassIncremental
+
+    base = get_reduced("smollm-135m")
+    cfg = type(base)(**{**base.__dict__, "vocab_size": 128, "num_layers": 2,
+                        "name": "smollm-chaos"})
+    run = RunConfig(
+        model=cfg, shape=ShapeConfig("chaos", 16, 8, "train"),
+        train=TrainConfig(optimizer="adamw", peak_lr=1e-3, warmup_steps=5,
+                          linear_scaling=False, compute_dtype="float32"),
+        rehearsal=RehearsalConfig(num_buckets=2, slots_per_bucket=4,
+                                  num_representatives=3, num_candidates=6,
+                                  mode="async", label_field="labels"),
+        scenario=ScenarioConfig(name="class_incremental", modality="tokens",
+                                strategy="rehearsal", num_tasks=2,
+                                epochs_per_task=1, steps_per_epoch=6,
+                                batch_size=8, vocab_size=128, seq_len=16,
+                                auto_defaults=False))
+    res = ResilienceConfig(checkpoint_every=4, max_restarts=2)
+    mesh = make_mesh((1, 1), ("data", "model"))
+    clean = ContinualTrainer(run, TokenClassIncremental(run.scenario),
+                             mesh=mesh, exchange="local",
+                             ckpt_dir=str(tmp_path / "c"),
+                             resilience=res).fit()
+    fired = {"done": False}
+
+    def chaos(step):
+        if step == 9 and not fired["done"]:
+            fired["done"] = True
+            raise InjectedFailure("simulated preemption")
+
+    chaotic = ContinualTrainer(run, TokenClassIncremental(run.scenario),
+                               mesh=mesh, exchange="local",
+                               ckpt_dir=str(tmp_path / "x"), resilience=res,
+                               overrides={"failure_hook": chaos}).fit()
+    assert clean.restarts == 0 and chaotic.restarts == 1
+    np.testing.assert_array_equal(clean.accuracy_matrix,
+                                  chaotic.accuracy_matrix)
+    assert clean.history == chaotic.history
+
+
+def test_trainer_straggler_path_keeps_training(tmp_path):
+    """delay_prob=1, max_staleness=2: two thirds of the steps reuse the
+    carried representatives; training completes and the stale-step count is
+    surfaced in resilience_stats."""
+    res = ResilienceConfig(checkpoint_every=5, straggler_delay_prob=1.0,
+                           max_staleness=2)
+    out = ContinualTrainer(_vision_run("flat"), ckpt_dir=str(tmp_path),
+                           resilience=res).fit()
+    assert out.resilience_stats["stale_steps"] == pytest.approx(2 * 16 / 3,
+                                                                abs=1)
+    assert np.isfinite(out.final_accuracy)
+
+
+def test_resilience_requires_ckpt_dir():
+    with pytest.raises(ValueError, match="ckpt_dir"):
+        ContinualTrainer(_vision_run("flat"),
+                         resilience=ResilienceConfig())
+
+
+def test_resilience_config_validation():
+    with pytest.raises(ValueError):
+        ResilienceConfig(checkpoint_every=0)
+    with pytest.raises(ValueError):
+        ResilienceConfig(max_restarts=-1)

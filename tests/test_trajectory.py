@@ -55,11 +55,38 @@ def test_gate_exits_nonzero_on_regression(tmp_path):
     assert len(out.read_text().strip().splitlines()) == 1
 
 
+def test_gate_block_prefixes_split_exit_codes(tmp_path):
+    """--block promotes only the listed series to blocking (exit 2); a
+    regression confined to unlisted series exits 3 (the CI wrapper downgrades
+    only that code). Neither outcome persists the regressed entry."""
+    bench = tmp_path / "BENCH_fig6.json"
+    out = tmp_path / "trajectory.jsonl"
+    _write_bench(bench, load_us=100.0, acc=0.9, vs_sync=0.8)
+    trajectory.run(bench_glob=str(bench), out_path=str(out), now=1000.0)
+    _write_bench(bench, load_us=300.0, acc=0.9, vs_sync=0.8)
+    with pytest.raises(SystemExit) as exc:
+        trajectory.run(bench_glob=str(bench), out_path=str(out), gate=True,
+                       block=["fig7/"], now=2000.0)
+    assert exc.value.code == 3  # the fig6 regression is outside the block set
+    with pytest.raises(SystemExit) as exc:
+        trajectory.run(bench_glob=str(bench), out_path=str(out), gate=True,
+                       block=["fig6/", "fig7/"], now=2000.0)
+    assert exc.value.code == 2  # prefix match -> blocking
+    assert len(out.read_text().strip().splitlines()) == 1
+
+
 def test_metric_direction():
     assert trajectory.metric_direction("fig6/rows/load_us") == -1
     assert trajectory.metric_direction("fig5a/x/us_per_step") == -1
     assert trajectory.metric_direction("fig5a/x/final_accuracy") == 1
     assert trajectory.metric_direction("fig5a/x/slots") == 0
+    # fig7 elastic-runtime series: costs are lower-is-better, accuracy higher
+    assert trajectory.metric_direction("fig7/rows/overhead_n4") == -1
+    assert trajectory.metric_direction("fig7/rows/reshard_grow_s") == -1
+    assert trajectory.metric_direction("fig7/rows/reshard_shrink_s") == -1
+    assert trajectory.metric_direction("fig7/rows/restore_s") == -1
+    assert trajectory.metric_direction("fig7/rows/acc_elastic") == 1
+    assert trajectory.metric_direction("fig7/rows/exchange_bytes_single") == 0
 
 
 def test_plot_renders_sparklines(tmp_path):
