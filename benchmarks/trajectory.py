@@ -34,7 +34,7 @@ from typing import Dict, List, Optional, Tuple
 DEFAULT_TOLERANCE = 0.35
 
 _LOWER_IS_BETTER = ("_us", "us_per_step", "vs_sync", "vs_device", "hideable",
-                    "overhead_n", "reshard_", "restore_s")
+                    "overhead_n", "reshard_", "restore_s", "obs_overhead")
 _HIGHER_IS_BETTER = ("accuracy", "acc")
 
 

@@ -17,6 +17,7 @@ evaluation (DESIGN.md §7). Here: a tiny LM on a 2-task token stream (CPU,
 import argparse
 
 from repro.configs.base import (
+    ObsConfig,
     RehearsalConfig,
     RunConfig,
     ScenarioConfig,
@@ -26,9 +27,12 @@ from repro.configs.base import (
 from repro.scenario import ContinualTrainer
 
 
-def main(smoke: bool = False, strategy: str = "rehearsal"):
+def main(smoke: bool = False, strategy: str = "rehearsal", obs: str = ""):
     steps = 8 if smoke else 30
     run = RunConfig(
+        # --obs DIR: jit-safe obs/* gauges in every history entry, plus
+        # trace.json (Perfetto/chrome://tracing) and events.jsonl under DIR
+        obs=ObsConfig(enabled=bool(obs), dir=obs),
         # model=None: the token scenario builds its default tiny LM
         train=TrainConfig(optimizer="adamw", peak_lr=3e-3, warmup_steps=10,
                           linear_scaling=False, compute_dtype="float32",
@@ -54,6 +58,13 @@ def main(smoke: bool = False, strategy: str = "rehearsal"):
 
     for h in result.history:
         print(f"task={h['task']} step={h['step']} loss={h['loss']:.4f}")
+    if result.obs:
+        print("obs gauges (last value):")
+        for k, s in sorted(result.obs.items()):
+            print(f"  {k} = {s['last']:.4f}")
+        if obs:
+            print(f"trace + event log under {obs}/ "
+                  f"(open trace.json in https://ui.perfetto.dev)")
     # forgetting check: the metric matrix holds per-task eval LOSS for token
     # scenarios — row i is the model after training task i
     print("eval-loss matrix (row = after task i):")
@@ -73,4 +84,7 @@ if __name__ == "__main__":
     ap.add_argument("--strategy", default="rehearsal",
                     help="training strategy (rehearsal | der | der_pp | "
                          "grasp_embed | incremental | from_scratch)")
+    ap.add_argument("--obs", default="", metavar="DIR",
+                    help="enable telemetry: obs/* gauges in the history plus "
+                         "trace.json + events.jsonl under DIR")
     main(**vars(ap.parse_args()))

@@ -20,6 +20,7 @@ from repro.buffer.tiered import (
     TieredState,
     init_tiered,
     tiered_fill,
+    tiered_obs,
     tiered_sample,
     tiered_update,
 )
@@ -61,6 +62,32 @@ def buffer_fill(state: AnyBufferState) -> jnp.ndarray:
     if isinstance(state, TieredState):
         return tiered_fill(state)
     return jnp.sum(state.counts)
+
+
+def buffer_obs(state: AnyBufferState, rcfg=None):
+    """Jit-safe ``obs/*`` gauges of either store (f32 scalars, DESIGN.md §11):
+    fill totals, per-bucket min/max, offered-minus-resident eviction/demotion
+    counters, plus whatever the active policy's ``obs_aux`` adds (GRASP's mean
+    prototype distance). Pure reads — no RNG, no state change — and
+    shape-polymorphic over local ``[K]`` and distributed ``[N_dp, K]`` states."""
+    pol = _policy_of(rcfg)
+    if isinstance(state, TieredState):
+        out = tiered_obs(state)
+        aux_host = state.hot  # the policy governs the hot tier
+    else:
+        k = state.counts.shape[-1]
+        counts = state.counts.reshape(-1, k).sum(0).astype(jnp.float32)
+        fill = jnp.sum(counts)
+        offered = jnp.sum(state.seen).astype(jnp.float32)
+        out = {
+            "obs/fill": fill,
+            "obs/bucket_fill_min": jnp.min(counts),
+            "obs/bucket_fill_max": jnp.max(counts),
+            "obs/evictions": jnp.maximum(offered - fill, 0.0),
+        }
+        aux_host = state
+    out.update(pol.obs_aux(aux_host))
+    return out
 
 
 def resolve_placement(rcfg, devices=None) -> str:

@@ -83,6 +83,12 @@ class Policy:
         misaligned with the re-dealt slots. Stateless policies return ()."""
         return ()
 
+    def obs_aux(self, state: BufferState):
+        """Jit-safe ``obs/*`` gauges of the policy's private state (f32
+        scalars), merged into ``buffer_api.buffer_obs``. Pure reads only —
+        no RNG, no state change. Stateless policies report nothing."""
+        return {}
+
     # -- decision hooks ----------------------------------------------------
     def select_candidates(self, state: BufferState, labels, key, num_candidates: int):
         b = labels.shape[0]
@@ -233,6 +239,17 @@ class GraspPolicy(Policy):
         dist = jnp.linalg.norm(feats - proto[:, None, :], axis=-1)
         return {"proto": proto, "proto_n": proto_n,
                 "dist": jnp.where(filled, dist, _BIG)}
+
+    def obs_aux(self, state: BufferState):
+        # mean prototype distance over FILLED slots: the "selection pressure"
+        # gauge GRASP makes monitorable (shape-polymorphic: [K, cap] local,
+        # [N, K, cap] distributed)
+        dist = state.aux["dist"]
+        cap = dist.shape[-1]
+        filled = jnp.arange(cap) < state.counts[..., None]
+        n = jnp.maximum(jnp.sum(filled.astype(jnp.float32)), 1.0)
+        mean_d = jnp.sum(jnp.where(filled, dist, 0.0)) / n
+        return {"obs/grasp_mean_dist": mean_d}
 
     def sample(self, state: BufferState, key, n: int):
         k_buckets, cap = buffer_dims(state)

@@ -105,32 +105,47 @@ def _pack_stage(evicted, labels, valid, stage_rows: int):
     return stage, labels[take], valid[take] & in_range
 
 
+def tiered_flush(state: TieredState, key) -> TieredState:
+    """Flush the pending demotions (staged at step t−1) into the cold archive:
+    one batched int8 encode + reservoir insert. Clears ``stage_valid`` so a
+    standalone flush (the phase-decomposed form, repro.obs.pipeline) cannot
+    re-demote the same rows; ``tiered_update`` overwrites the stage anyway."""
+    comp = _compression()
+    encoded = comp.encode_batch(state.stage, record_spec_of(state))
+    cold = local_update(state.cold, encoded, state.stage_labels, key,
+                        num_candidates=state.stage_labels.shape[0],
+                        accept_mask=state.stage_valid)
+    return state._replace(cold=cold,
+                          stage_valid=jnp.zeros_like(state.stage_valid))
+
+
+def tiered_push(state: TieredState, items, labels, key, num_candidates: int,
+                policy=None) -> TieredState:
+    """Policy-driven hot-tier update, staging whatever it displaced for the
+    next flush (the stage is fully replaced — call ``tiered_flush`` first)."""
+    pol = resolve_policy(policy)
+    hot, evicted, evicted_valid = local_update_with_evicted(
+        state.hot, items, labels, key, num_candidates, pol
+    )
+    stage, stage_labels, stage_valid = _pack_stage(
+        evicted, labels, evicted_valid, state.stage_labels.shape[0]
+    )
+    return TieredState(hot, state.cold, stage, stage_labels, stage_valid)
+
+
 def tiered_update(state: TieredState, items, labels, key, num_candidates: int,
                   policy=None) -> TieredState:
     """One tiered Alg-1 step: flush last step's staged demotions into the cold tier
     (batched int8 encode — off the critical path), update the hot tier under the
-    policy, and stage whatever the hot tier evicted for the next flush."""
-    comp = _compression()
-    pol = resolve_policy(policy)
+    policy, and stage whatever the hot tier evicted for the next flush.
+
+    Composed as ``tiered_push(tiered_flush(state, k_flush), ..., k_hot)`` with
+    the same key split as always — bit-identical to the pre-decomposition fused
+    form (the flush touches only ``cold``/``stage_valid``; the push reads
+    ``hot`` and replaces the stage wholesale)."""
     k_hot, k_flush = jax.random.split(key)
-
-    # 1. flush the pending demotions (issued at step t-1) into the cold archive
-    spec = record_spec_of(state)
-    encoded = comp.encode_batch(state.stage, spec)
-    cold = local_update(state.cold, encoded, state.stage_labels, k_flush,
-                        num_candidates=state.stage_labels.shape[0],
-                        accept_mask=state.stage_valid)
-
-    # 2. policy-driven hot update, capturing displaced records
-    hot, evicted, evicted_valid = local_update_with_evicted(
-        state.hot, items, labels, k_hot, num_candidates, pol
-    )
-
-    # 3. stage this step's evictions for the next flush
-    stage, stage_labels, stage_valid = _pack_stage(
-        evicted, labels, evicted_valid, state.stage_labels.shape[0]
-    )
-    return TieredState(hot, cold, stage, stage_labels, stage_valid)
+    return tiered_push(tiered_flush(state, k_flush), items, labels, k_hot,
+                       num_candidates, policy)
 
 
 def tiered_sample(state: TieredState, key, n: int, policy=None):
@@ -162,6 +177,33 @@ def tiered_sample(state: TieredState, key, n: int, policy=None):
 def tiered_fill(state: TieredState) -> jnp.ndarray:
     """Total records resident across both tiers (the buffer_fill metric)."""
     return jnp.sum(state.hot.counts) + jnp.sum(state.cold.counts)
+
+
+def tiered_obs(state: TieredState):
+    """Jit-safe ``obs/*`` gauges of a tiered store (f32 scalars; DESIGN.md §11).
+
+    Shape-polymorphic over local ``[K, ...]`` and distributed ``[N_dp, K, ...]``
+    states: counts reduce over every leading axis. ``evictions``/``demotions``
+    are *offered-minus-resident* upper bounds (``seen`` counts every offered
+    candidate, accepted or not — the honest derivation that needs no new
+    state leaves)."""
+    k = state.hot.counts.shape[-1]
+    hot_counts = state.hot.counts.reshape(-1, k).sum(0).astype(jnp.float32)
+    cold_counts = state.cold.counts.reshape(-1, k).sum(0).astype(jnp.float32)
+    hot_fill = jnp.sum(hot_counts)
+    cold_fill = jnp.sum(cold_counts)
+    hot_offered = jnp.sum(state.hot.seen).astype(jnp.float32)
+    per_bucket = hot_counts + cold_counts
+    return {
+        "obs/fill": hot_fill + cold_fill,
+        "obs/hot_fill": hot_fill,
+        "obs/cold_fill": cold_fill,
+        "obs/bucket_fill_min": jnp.min(per_bucket),
+        "obs/bucket_fill_max": jnp.max(per_bucket),
+        "obs/evictions": jnp.maximum(hot_offered - hot_fill, 0.0),
+        "obs/demotions": jnp.sum(state.cold.seen).astype(jnp.float32),
+        "obs/stage_pending": jnp.sum(state.stage_valid).astype(jnp.float32),
+    }
 
 
 COLD_MEMORY_KIND = "pinned_host"  # the HBM-relief memory the cold tier requests

@@ -87,16 +87,26 @@ class CheckpointManager:
             self._thread = None
 
     def _write(self, step: int, flat: Dict[str, np.ndarray], meta: Dict):
-        final = os.path.join(self.dir, f"step_{step:010d}")
-        tmp = final + ".tmp"
-        if os.path.exists(tmp):
-            shutil.rmtree(tmp)
-        os.makedirs(tmp)
-        np.savez(os.path.join(tmp, "state.npz"), **{k: v for k, v in flat.items()})
-        with open(os.path.join(tmp, "meta.json"), "w") as f:
-            json.dump(meta, f)
-        os.replace(tmp, final) if not os.path.exists(final) else shutil.rmtree(tmp)
-        self._gc()
+        # tid=1: async saves run on the writer thread — in the trace they show
+        # as a second track overlapping the main thread's training spans
+        from repro.obs import get_event_bus, get_tracer
+        nbytes = int(sum(v.nbytes for v in flat.values()))
+        with get_tracer().span("checkpoint_save", cat="checkpoint",
+                               tid=1 if self.async_save else 0,
+                               step=int(step), bytes=nbytes):
+            final = os.path.join(self.dir, f"step_{step:010d}")
+            tmp = final + ".tmp"
+            if os.path.exists(tmp):
+                shutil.rmtree(tmp)
+            os.makedirs(tmp)
+            np.savez(os.path.join(tmp, "state.npz"),
+                     **{k: v for k, v in flat.items()})
+            with open(os.path.join(tmp, "meta.json"), "w") as f:
+                json.dump(meta, f)
+            os.replace(tmp, final) if not os.path.exists(final) else shutil.rmtree(tmp)
+            self._gc()
+        get_event_bus().publish("checkpoint_save", source="checkpoint",
+                                step=int(step), bytes=nbytes, dir=self.dir)
 
     def _gc(self):
         steps = sorted(self.list_steps())
@@ -155,11 +165,18 @@ class CheckpointManager:
             f"no readable checkpoint under {self.dir}") from last_err
 
     def _load(self, template, step: int, strict: bool) -> Tuple[Any, Dict]:
+        from repro.obs import get_event_bus, get_tracer
         path = os.path.join(self.dir, f"step_{step:010d}")
-        arrays = dict(np.load(os.path.join(path, "state.npz"), allow_pickle=False))
-        with open(os.path.join(path, "meta.json")) as f:
-            meta = json.load(f)
-        return _unflatten(template, arrays, strict=strict), meta
+        with get_tracer().span("checkpoint_restore", cat="checkpoint",
+                               step=int(step)):
+            arrays = dict(np.load(os.path.join(path, "state.npz"),
+                                  allow_pickle=False))
+            with open(os.path.join(path, "meta.json")) as f:
+                meta = json.load(f)
+            state = _unflatten(template, arrays, strict=strict)
+        get_event_bus().publish("checkpoint_restore", source="checkpoint",
+                                step=int(step), dir=self.dir)
+        return state, meta
 
 
 # ---------------------------------------------------------------------------

@@ -2,6 +2,7 @@
 from repro.configs.base import (
     MeshConfig,
     ModelConfig,
+    ObsConfig,
     RehearsalConfig,
     ResilienceConfig,
     RunConfig,

@@ -320,6 +320,32 @@ class ResilienceConfig:
 
 
 # ---------------------------------------------------------------------------
+# Observability (jit-safe step metrics, trace spans, event log; repro.obs)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ObsConfig:
+    """Switches of the telemetry layer (``repro.obs``, DESIGN.md §11).
+
+    ``enabled=False`` (the default) compiles the exact pre-obs step program —
+    no extra output leaves, no tracer, no event sink. Turning it on never
+    changes the ``rep_checksum``/``buffer_fill``/loss fingerprints or the RNG
+    lineage: every obs value is a pure read of state the step already has
+    (the bit-exactness contract pinned in tests/test_obs.py).
+    """
+
+    enabled: bool = False
+    # Artifact directory: trace.json + events.jsonl land here (''/None = keep
+    # everything in memory — metrics still flow into fit() history).
+    dir: str = ""
+    step_metrics: bool = True  # merge obs/* leaves into the step metrics
+    grad_norms: bool = True  # include obs/grad_norm + obs/param_norm
+    trace: bool = True  # host-side Tracer spans (checkpoint/reshard/eval)
+    events: bool = True  # EventBus publications from the runtime
+
+
+# ---------------------------------------------------------------------------
 # Continual-learning scenario (task stream + schedule; see repro.scenario)
 # ---------------------------------------------------------------------------
 
@@ -427,6 +453,10 @@ class RunConfig:
     # None = no fault-tolerant loop; a ResilienceConfig turns on checkpointed
     # restart + bounded-staleness straggler handling in ContinualTrainer.
     resilience: Optional[ResilienceConfig] = None
+    # Telemetry (repro.obs): disabled by default — obs-off compiles the exact
+    # pre-obs program; obs-on adds output-leaf metrics + traces + events with
+    # bit-identical fingerprints (DESIGN.md §11).
+    obs: ObsConfig = ObsConfig()
 
     def replace(self, **kw) -> "RunConfig":
         return dataclasses.replace(self, **kw)

@@ -32,6 +32,9 @@ class CLRunResult:
     # fault-tolerance accounting (zeros unless the trainer ran with resilience=)
     restarts: int = 0
     resilience_stats: Optional[Dict[str, float]] = None
+    # per-key {last, mean, max, n} over the ``obs/*`` gauges folded into
+    # ``history`` (None unless the run had ``run.obs.enabled``)
+    obs: Optional[Dict[str, Dict[str, float]]] = None
 
 
 def run_continual(

@@ -235,6 +235,14 @@ def _compile_cell(
             hot_slots=built.meta.get("slots_per_bucket", 0),
             cold_slots=cold_slots)
         record["rehearsal_buffer"] = rehearsal_buffer_cost(built, cost_rcfg)
+        from repro.obs.metrics import estimate_obs_cost
+
+        # what turning run.obs on WOULD add to this cell's step outputs —
+        # bytes per step, so obs is a latency question (fig6's 1.03x gate),
+        # never a bandwidth one
+        record["obs_cost"] = estimate_obs_cost(
+            cost_rcfg, has_aux=bool(built.meta.get("aux_fields")),
+            policy=getattr(cost_rcfg, "policy", None))
     if mem is not None:
         try:
             record["memory_analysis"] = {

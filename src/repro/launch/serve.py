@@ -31,7 +31,23 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen-len", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--obs", default="", metavar="DIR",
+                    help="write trace.json + events.jsonl under DIR")
+    ap.add_argument("--metrics-port", type=int, default=-1, metavar="PORT",
+                    help="serve Prometheus text gauges at /metrics on PORT "
+                         "(0 = OS-assigned; default: no endpoint)")
     args = ap.parse_args(argv)
+
+    from repro import obs as obs_mod
+    registry = server = None
+    if args.obs:
+        obs_mod.configure(args.obs)
+    if args.metrics_port >= 0:
+        registry = obs_mod.MetricsRegistry()
+        server, port = obs_mod.start_metrics_server(registry,
+                                                    port=args.metrics_port)
+        log.info("prometheus /metrics on http://127.0.0.1:%d/metrics", port)
+    tracer = obs_mod.get_tracer()  # no-op unless --obs configured it
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
     d, m = (int(x) for x in args.mesh.split("x"))
@@ -53,26 +69,42 @@ def main(argv=None):
         decode = jax.jit(lambda p, b, c, i: model.decode(p, b, c, i, ctx))
         t0 = time.time()
         logits = None
-        for t in range(args.prompt_len):
-            logits, caches = decode(params, {"token": prompts[:, t:t + 1]}, caches,
-                                    jnp.int32(t))
+        with tracer.span("prefill", cat="serve", tokens=args.prompt_len,
+                         batch=args.batch):
+            for t in range(args.prompt_len):
+                logits, caches = decode(params, {"token": prompts[:, t:t + 1]},
+                                        caches, jnp.int32(t))
         t_prefill = time.time() - t0
 
         # --- greedy generation
         tok = jnp.argmax(logits[:, -1, :], axis=-1)[:, None]
         out = [tok]
         t0 = time.time()
-        for t in range(args.prompt_len, max_len - 1):
-            logits, caches = decode(params, {"token": tok}, caches, jnp.int32(t))
-            tok = jnp.argmax(logits[:, -1, :], axis=-1)[:, None]
-            out.append(tok)
-        jax.block_until_ready(tok)
+        with tracer.span("decode", cat="serve", tokens=args.gen_len,
+                         batch=args.batch):
+            for t in range(args.prompt_len, max_len - 1):
+                logits, caches = decode(params, {"token": tok}, caches,
+                                        jnp.int32(t))
+                tok = jnp.argmax(logits[:, -1, :], axis=-1)[:, None]
+                out.append(tok)
+            jax.block_until_ready(tok)
         t_gen = time.time() - t0
         gen = jnp.concatenate(out, axis=1)
 
+    tok_per_s = gen.shape[1] / max(t_gen, 1e-9)
     log.info("arch=%s batch=%d prefill(%d tok)=%.2fs decode(%d tok)=%.2fs "
              "(%.1f tok/s/seq)", cfg.name, args.batch, args.prompt_len, t_prefill,
-             gen.shape[1], t_gen, gen.shape[1] / max(t_gen, 1e-9))
+             gen.shape[1], t_gen, tok_per_s)
+    if registry is not None:
+        registry.set("repro_serve_prefill_seconds", t_prefill,
+                     help="wall-clock seconds to prefill the prompt batch")
+        registry.set("repro_serve_decode_tokens_per_second", tok_per_s,
+                     help="greedy-decode throughput per sequence")
+        registry.set("repro_serve_batch_size", args.batch)
+    if args.obs:
+        obs_mod.flush()
+    if server is not None:
+        server.shutdown()
     print("generated token ids (first sequence):", np.asarray(gen[0]))
 
 

@@ -127,6 +127,13 @@ def build_train_step(
     strat = resolve_strategy(strategy if strategy is not None
                              else run.scenario.strategy)
     scfg = run.strategy
+    ocfg = getattr(run, "obs", None)
+    # obs/* gauges ride the existing replicated metrics dict; fingerprints
+    # (rep_checksum / buffer_fill / loss) are computed exactly as before, so
+    # toggling obs cannot change them (the bit-exactness contract, DESIGN §11)
+    obs_on = ocfg is not None and ocfg.enabled and ocfg.step_metrics
+    if obs_on:
+        from repro.obs.metrics import step_metrics as obs_step_metrics
     mode = rehearsal_mode if rehearsal_mode is not None else rcfg.mode
     # one-step-stale double buffering (DESIGN.md §3): async mode, or forced via
     # the ``rehearsal.pipelined`` flag (sync mode stays available for parity runs)
@@ -248,7 +255,11 @@ def build_train_step(
         def step(params, opt_state, batch, key):
             (loss, metrics), grads = grad_fn(params, batch)
             params, opt_state, om = opt_update(grads, opt_state, params)
-            return params, opt_state, dict(metrics, **om, loss=loss)
+            metrics = dict(metrics, **om, loss=loss)
+            if obs_on:
+                metrics.update(obs_step_metrics(grads=grads, params=params,
+                                                cfg=ocfg))
+            return params, opt_state, metrics
 
         args = (params_s, opt_s, batch_s, key_s)
         shardings = (
@@ -272,9 +283,13 @@ def build_train_step(
                 "buffer_fill": buffer_api.buffer_fill(buffer).astype(jnp.float32),
                 "rep_checksum": rep_checksum(new_reps, new_valid, rcfg.label_field),
             }
-            return params, opt_state, buffer, new_reps, new_valid, dict(
-                metrics, **om, **fingerprints, loss=loss
-            )
+            metrics = dict(metrics, **om, **fingerprints, loss=loss)
+            if obs_on:
+                metrics.update(obs_step_metrics(
+                    buffer=buffer, rcfg=rcfg, valid=new_valid,
+                    new_rows=shape.global_batch, grads=grads, params=params,
+                    staleness=0.0, cfg=ocfg))
+            return params, opt_state, buffer, new_reps, new_valid, metrics
 
     elif tap:  # pipelined tap strategy: DER(++) / grasp_embed (DESIGN.md §9)
         tap_loss = strat.build_loss(None, outputs_of, scfg,
@@ -307,9 +322,15 @@ def build_train_step(
                 "buffer_fill": buffer_api.buffer_fill(buffer).astype(jnp.float32),
                 "rep_checksum": rep_checksum(reps, valid, rcfg.label_field),
             }
-            return params, opt_state, buffer, next_reps, next_valid, dict(
-                metrics, **om, **fingerprints, loss=loss
-            )
+            metrics = dict(metrics, **om, **fingerprints, loss=loss)
+            if obs_on:
+                from repro.obs.metrics import aux_row_bytes
+                metrics.update(obs_step_metrics(
+                    buffer=buffer, rcfg=rcfg, valid=valid,
+                    new_rows=bg, grads=grads, params=params,
+                    staleness=1.0, aux_bytes=aux_row_bytes(aux_spec),
+                    cfg=ocfg))
+            return params, opt_state, buffer, next_reps, next_valid, metrics
 
     else:  # pipelined — the paper's contribution (one-step-stale double buffer)
 
@@ -328,9 +349,13 @@ def build_train_step(
                 "buffer_fill": buffer_api.buffer_fill(buffer).astype(jnp.float32),
                 "rep_checksum": rep_checksum(reps, valid, rcfg.label_field),
             }
-            return params, opt_state, buffer, next_reps, next_valid, dict(
-                metrics, **om, **fingerprints, loss=loss
-            )
+            metrics = dict(metrics, **om, **fingerprints, loss=loss)
+            if obs_on:
+                metrics.update(obs_step_metrics(
+                    buffer=buffer, rcfg=rcfg, valid=valid,
+                    new_rows=shape.global_batch, grads=grads, params=params,
+                    staleness=1.0, cfg=ocfg))
+            return params, opt_state, buffer, next_reps, next_valid, metrics
 
 
     if use_rehearsal:  # all three rehearsal forms share the same signature
@@ -364,7 +389,14 @@ def build_train_step(
         "augmented_global_batch": shape.global_batch + (n_dp * r if use_rehearsal else 0),
         "tokens_per_step": (shape.global_batch + (n_dp * r if use_rehearsal else 0))
         * shape.seq_len,
+        "obs": obs_on,
     }
+    if obs_on:
+        from repro.obs.metrics import obs_keys
+        meta["obs_metrics"] = obs_keys(
+            rcfg if use_rehearsal else None,
+            grad_norms=ocfg.grad_norms, has_aux=bool(aux_spec),
+            policy=rcfg.policy if use_rehearsal else None)
     return BuiltStep(fn=fn, args=args, shardings=shardings, meta=meta)
 
 

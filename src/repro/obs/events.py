@@ -1,0 +1,93 @@
+"""Structured runtime event log: one ``EventBus``, a JSONL sink (DESIGN.md §11).
+
+The runtime's decision points — ``ResilientLoop`` restarts, ``StragglerPolicy``
+stale dispatches, ``Autoscaler`` scale decisions, ``CheckpointManager``
+save/restore, ``scale_carry`` reshards — publish typed events here instead of
+(or in addition to) stderr lines. Every event is one JSON object per line::
+
+    {"kind": "restart", "source": "resilient_loop", "ts": 1722945600.1,
+     "rank": 0, "step": 12, "restarts": 1, "error": "InjectedFailure", ...}
+
+``kind`` + ``source`` + ``ts`` + ``rank`` are always present; the rest is the
+publisher's payload (values must be JSON-serialisable). The module-global bus
+starts *disabled* so the instrumented runtime modules cost nothing until
+``repro.obs.configure`` turns it on.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from typing import Any, Dict, List, Optional
+
+
+class EventBus:
+    """Collects events in memory and (optionally) appends them to a JSONL file."""
+
+    def __init__(self, enabled: bool = True, path: Optional[str] = None,
+                 rank: Optional[int] = None):
+        self.enabled = enabled
+        if rank is None:
+            rank = int(os.environ.get("REPRO_MP_PID", "0") or 0)
+        self.rank = rank
+        self.path = path
+        self.events: List[Dict[str, Any]] = []
+        self._lock = threading.Lock()
+        self._fh = None
+        if enabled and path:
+            os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+            self._fh = open(path, "a")
+
+    def publish(self, kind: str, source: str = "", **payload):
+        """Record one event; returns it (or None when the bus is disabled)."""
+        if not self.enabled:
+            return None
+        ev = {"kind": kind, "source": source, "ts": round(time.time(), 6),
+              "rank": self.rank}
+        ev.update(payload)
+        with self._lock:
+            self.events.append(ev)
+            if self._fh is not None:
+                self._fh.write(json.dumps(ev) + "\n")
+                self._fh.flush()  # events must survive the crash they describe
+        return ev
+
+    def kinds(self) -> set:
+        with self._lock:
+            return {e["kind"] for e in self.events}
+
+    def of_kind(self, kind: str) -> List[Dict[str, Any]]:
+        with self._lock:
+            return [e for e in self.events if e["kind"] == kind]
+
+    def close(self):
+        with self._lock:
+            if self._fh is not None:
+                self._fh.close()
+                self._fh = None
+
+
+def read_events(path: str) -> List[Dict[str, Any]]:
+    """Load an ``events.jsonl`` file back into a list of event dicts."""
+    out = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                out.append(json.loads(line))
+    return out
+
+
+# Module-global bus: disabled by default, swapped by repro.obs.configure.
+_BUS = EventBus(enabled=False)
+
+
+def get_event_bus() -> EventBus:
+    return _BUS
+
+
+def set_event_bus(bus: EventBus) -> EventBus:
+    global _BUS
+    _BUS = bus
+    return bus

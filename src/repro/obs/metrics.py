@@ -1,0 +1,157 @@
+"""Jit-safe step metrics: the ``StepMetrics`` pytree (DESIGN.md §11).
+
+``step_metrics`` returns a flat ``{"obs/...": f32 scalar}`` dict — an ordinary
+pytree of output leaves the step factories (``strategy/step.py``,
+``launch/steps.py``) merge into their metrics dict when ``ObsConfig.enabled``.
+Every value is a *pure read* of state the step already computes:
+
+* no PRNG key is consumed (the RNG lineage — and therefore ``rep_checksum`` /
+  ``buffer_fill`` / loss fingerprints — is bit-identical with obs on or off);
+* no new carry leaves (checkpoint layout, reshard and donation unchanged);
+* every value is a float32 scalar, so it survives the carry backend's
+  ``pmean`` over the data axis, ``ResilientLoop``'s ``float(v)`` history
+  folding, and ``json.dump``.
+
+Buffer gauges are shape-polymorphic over local ``[K]`` and distributed
+``[N_dp, K]`` states (``repro.buffer.api.buffer_obs`` reduces over the worker
+axis), so the same keys appear under the carry and pjit backends. Under the
+carry backend's shard_map the final ``pmean`` makes them per-worker *means*;
+under pjit they are global sums — documented, not reconciled, since they are
+gauges rather than fingerprints.
+
+``estimate_obs_cost`` is the static half: it enumerates the keys a config
+would emit so ``launch/dryrun.py`` can report the per-step metrics-leaf bytes
+before anything runs.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+PREFIX = "obs/"
+
+# One-step-stale double buffering (DESIGN.md §3) fixes rep staleness at 1 for
+# the pipelined path and 0 for sync. This is the *structural* staleness; extra
+# staleness from straggler reuse is reported per-event by StragglerPolicy
+# through the EventBus (the carry holds no staleness counter — no new leaves).
+STALENESS_PIPELINED = 1.0
+STALENESS_SYNC = 0.0
+
+
+def tree_l2(tree) -> jnp.ndarray:
+    """Global L2 norm over the float leaves of a pytree (f32 scalar)."""
+    total = jnp.float32(0.0)
+    for leaf in jax.tree_util.tree_leaves(tree):
+        if hasattr(leaf, "dtype") and jnp.issubdtype(jnp.dtype(leaf.dtype),
+                                                     jnp.inexact):
+            total = total + jnp.sum(jnp.square(jnp.asarray(leaf, jnp.float32)))
+    return jnp.sqrt(total)
+
+
+def replay_metrics(valid, new_rows: int) -> Dict[str, jnp.ndarray]:
+    """Replay composition of one augmented batch: ``valid`` is the consumed
+    representatives' validity mask, ``new_rows`` the incoming mini-batch size.
+    Invalid reps are label-masked out of the loss, so the trained rows are
+    ``new_rows + sum(valid)``."""
+    nv = jnp.sum(jnp.asarray(valid, jnp.float32))
+    return {
+        PREFIX + "reps_valid": nv,
+        PREFIX + "replay_fraction": nv / (nv + jnp.float32(new_rows)),
+    }
+
+
+def step_metrics(
+    *,
+    buffer=None,
+    rcfg=None,
+    valid=None,
+    new_rows: Optional[int] = None,
+    grads=None,
+    params=None,
+    staleness: Optional[float] = None,
+    aux_bytes: Optional[int] = None,
+    cfg=None,
+) -> Dict[str, jnp.ndarray]:
+    """Assemble the StepMetrics pytree from what the step already has in hand.
+
+    Every argument is optional — pass what the step variant computes and the
+    corresponding keys appear; ``cfg`` (an ``ObsConfig``) gates the norm
+    gauges. Call only under ``cfg.enabled`` — the factories guard, so the
+    obs-off program is byte-identical to the pre-obs one.
+    """
+    from repro.buffer import api as buffer_api
+
+    out: Dict[str, jnp.ndarray] = {}
+    if buffer is not None:
+        out.update(buffer_api.buffer_obs(buffer, rcfg))
+    if valid is not None and new_rows is not None:
+        out.update(replay_metrics(valid, new_rows))
+    if staleness is not None:
+        out[PREFIX + "rep_staleness"] = jnp.float32(staleness)
+    if aux_bytes is not None:
+        out[PREFIX + "aux_row_bytes"] = jnp.float32(aux_bytes)
+    if cfg is None or cfg.grad_norms:
+        if grads is not None:
+            out[PREFIX + "grad_norm"] = tree_l2(grads)
+        if params is not None:
+            out[PREFIX + "param_norm"] = tree_l2(params)
+    return out
+
+
+def aux_row_bytes(aux_spec) -> int:
+    """Bytes ONE record's strategy aux fields occupy (0 for no/empty spec)."""
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(aux_spec or {}):
+        n = 1
+        for s in leaf.shape:
+            n *= int(s)
+        total += n * jnp.dtype(leaf.dtype).itemsize
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Static enumeration: which keys a config emits, and what they cost.
+# ---------------------------------------------------------------------------
+
+def obs_keys(rcfg=None, *, grad_norms: bool = True, has_aux: bool = False,
+             policy: Optional[str] = None) -> List[str]:
+    """The ``obs/*`` keys a fused step with this config emits (sorted)."""
+    keys = []
+    if grad_norms:
+        keys += ["grad_norm", "param_norm"]
+    rehearse = rcfg is not None and getattr(rcfg, "enabled", False)
+    if rehearse:
+        keys += ["fill", "bucket_fill_min", "bucket_fill_max", "evictions",
+                 "reps_valid", "replay_fraction", "rep_staleness"]
+        if getattr(rcfg, "tiered", False):
+            keys += ["hot_fill", "cold_fill", "demotions", "stage_pending"]
+        if (policy or getattr(rcfg, "policy", None)) == "grasp":
+            keys += ["grasp_mean_dist"]
+        if has_aux:
+            keys += ["aux_row_bytes"]
+    return sorted(PREFIX + k for k in keys)
+
+
+def estimate_obs_cost(rcfg=None, *, grad_norms: bool = True,
+                      has_aux: bool = False,
+                      policy: Optional[str] = None) -> Dict[str, Any]:
+    """Static obs cost model for ``launch/dryrun.py``'s ``obs_cost`` record.
+
+    Each key is one f32 scalar output leaf per step (4 bytes on device) plus
+    one Python float when folded into a history entry (~56 bytes of host
+    memory + ~24 bytes of JSON). The point of the record: the metrics traffic
+    is measured in bytes per step — invisible next to the gradient traffic —
+    so enabling obs is a latency question (the fig6 ≤1.03x gate), not a
+    bandwidth one.
+    """
+    keys = obs_keys(rcfg, grad_norms=grad_norms, has_aux=has_aux, policy=policy)
+    n = len(keys)
+    return {
+        "keys": keys,
+        "n_keys": n,
+        "device_bytes_per_step": 4 * n,  # f32 scalar output leaves
+        "host_bytes_per_history_entry": 56 * n,  # CPython float objects
+        "json_bytes_per_history_entry": 24 * n,  # '"obs/key": 1.0, ' ballpark
+    }

@@ -1,0 +1,114 @@
+"""Phase-decomposed pipelined step: one trace span per pipeline phase.
+
+Host-side spans cannot see inside one fused XLA program, so this module runs
+the pipelined rehearsal step as FOUR separately dispatched programs — one per
+phase of DESIGN.md §3 — blocking after each so the Tracer's host clocks bound
+real device work:
+
+  ``consume_reps``  — augment with the t−1 pending reps + grad + optimizer
+                      (the critical path; identical to ``train_half``);
+  ``demote_stage``  — tiered only: flush staged demotions into the cold tier
+                      (``tiered_flush``, the batched int8 encode);
+  ``issue_sample``  — Alg-1 push of this batch into the (hot) buffer
+                      (``tiered_push`` / ``local_update``);
+  ``all_to_all``    — the global sample producing step t+1's representatives
+                      (on a single device the exchange degenerates to the
+                      local draw; the span's ``exchange`` arg says which).
+
+RNG lineage is replayed *exactly* as the fused step consumes it —
+``k_issue = fold_in(pipe.key, 0)``, ``k_up, k_samp = split(k_issue)``, tiered
+``k_hot, k_flush = split(k_up)`` — so a PhasePipeline run is bit-identical to
+``make_cl_step`` (pinned in tests/test_obs.py). Single-device, plain
+rehearsal: this is the instrumentation form fig6's chaos run traces, not a
+fifth backend.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.buffer import api as buffer_api
+from repro.buffer import tiered as tiered_mod
+from repro.buffer.policies import resolve_policy
+from repro.buffer.state import local_update
+from repro.obs.trace import get_tracer
+from repro.strategy.step import (
+    PipelinedRehearsalCarry,
+    TrainCarry,
+    make_pipelined_halves,
+)
+
+PHASES = ("consume_reps", "demote_stage", "issue_sample", "all_to_all")
+
+
+class PhasePipeline:
+    """``step(carry, batch, key) -> (carry, metrics)`` with per-phase spans."""
+
+    def __init__(self, loss_fn, opt_update, rcfg, *, exchange: str = "local",
+                 label_field: Optional[str] = None,
+                 task_field: Optional[str] = None, tracer=None, obs=None):
+        if rcfg is None or not rcfg.enabled:
+            raise ValueError("PhasePipeline needs an enabled RehearsalConfig")
+        self.rcfg = rcfg
+        self.exchange = exchange
+        self.tracer = tracer
+        self.task_field = buffer_api.resolve_field(task_field, rcfg,
+                                                   "task_field", "task")
+        self.train_half, _ = make_pipelined_halves(
+            loss_fn, opt_update, rcfg, exchange=exchange,
+            label_field=label_field, task_field=task_field, obs=obs)
+        pol = resolve_policy(getattr(rcfg, "policy", None))
+        c = rcfg.num_candidates
+
+        if rcfg.tiered:
+            self._flush = jax.jit(
+                lambda buf, k: tiered_mod.tiered_flush(buf, k))
+            self._push = jax.jit(
+                lambda buf, items, labels, k: tiered_mod.tiered_push(
+                    buf, items, labels, k, c, pol))
+        else:
+            self._flush = None
+            self._push = jax.jit(
+                lambda buf, items, labels, k: local_update(
+                    buf, items, labels, k, c, pol))
+        self._sample = jax.jit(
+            lambda buf, k: buffer_api.buffer_sample(
+                buf, k, rcfg.num_representatives, rcfg))
+
+    def _tracer(self):
+        return self.tracer if self.tracer is not None else get_tracer()
+
+    def step(self, carry: TrainCarry, batch, key):
+        tracer = self._tracer()
+        pipe = carry.pipe
+        with tracer.span("consume_reps", cat="pipeline"):
+            params, opt, metrics = self.train_half(
+                carry.params, carry.opt, pipe, batch)
+            jax.block_until_ready(metrics["loss"])
+
+        # the fused issue half's exact key lineage, replayed on the host
+        # (split/fold_in are deterministic functions of the key data)
+        k_issue = jax.random.fold_in(pipe.key, 0)
+        k_up, k_samp = jax.random.split(k_issue)
+        labels = batch[self.task_field]
+        buf = carry.buffer
+        if self._flush is not None:  # tiered: k_up splits exactly as tiered_update
+            k_hot, k_flush = jax.random.split(k_up)
+            with tracer.span("demote_stage", cat="pipeline"):
+                buf = self._flush(buf, k_flush)
+                jax.block_until_ready(buf.cold.counts)
+            with tracer.span("issue_sample", cat="pipeline"):
+                buf = self._push(buf, batch, labels, k_hot)
+                jax.block_until_ready(buf.hot.counts)
+        else:
+            with tracer.span("issue_sample", cat="pipeline"):
+                buf = self._push(buf, batch, labels, k_up)
+                jax.block_until_ready(buf.counts)
+        with tracer.span("all_to_all", cat="pipeline",
+                         exchange=self.exchange):
+            reps, valid = self._sample(buf, k_samp)
+            jax.block_until_ready(valid)
+
+        pipe = PipelinedRehearsalCarry(reps, valid, key)
+        return TrainCarry(params, opt, buf, pipe, carry.ef), metrics

@@ -113,6 +113,13 @@ class Autoscaler:
             return None
         self._last_change = step
         self.events.append((step, current, target))
+        from repro.obs import get_event_bus
+        get_event_bus().publish(
+            "autoscale", source="autoscaler", step=step, old=current,
+            new=target, load=float(load), utilization=float(util),
+            upscale_threshold=self.upscale_threshold,
+            downscale_threshold=self.downscale_threshold,
+            cooldown_steps=self.cooldown_steps)
         return target
 
 
@@ -123,13 +130,18 @@ def scale_carry(carry, n_new: int, policy=None):
     import jax
     import jax.numpy as jnp
 
+    from repro.obs import get_event_bus, get_tracer
     from repro.runtime.elastic import reshard_carry
 
     t0 = time.perf_counter()
-    new_carry = reshard_carry(carry, n_new, policy=policy)
-    # decommit: params/opt pass through reshard still committed to the old
-    # mesh's devices; a jit compiled for the new mesh refuses mixed-committed
-    # inputs. The host round-trip is part of the real reshard cost.
-    new_carry = jax.tree_util.tree_map(jnp.asarray, jax.device_get(new_carry))
-    jax.block_until_ready(jax.tree_util.tree_leaves(new_carry))
-    return new_carry, time.perf_counter() - t0
+    with get_tracer().span("reshard", cat="elastic", n_new=n_new):
+        new_carry = reshard_carry(carry, n_new, policy=policy)
+        # decommit: params/opt pass through reshard still committed to the old
+        # mesh's devices; a jit compiled for the new mesh refuses mixed-committed
+        # inputs. The host round-trip is part of the real reshard cost.
+        new_carry = jax.tree_util.tree_map(jnp.asarray, jax.device_get(new_carry))
+        jax.block_until_ready(jax.tree_util.tree_leaves(new_carry))
+    seconds = time.perf_counter() - t0
+    get_event_bus().publish("reshard", source="scale_carry", n_new=n_new,
+                            seconds=seconds)
+    return new_carry, seconds

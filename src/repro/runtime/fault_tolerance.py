@@ -154,11 +154,17 @@ class ResilientLoop:
                     raise RuntimeError(
                         f"exceeded max_restarts={self.max_restarts}") from e
                 pause = self._backoff(restarts)
+                from repro.obs import get_event_bus, get_tracer
                 t0 = time.monotonic()
-                carry, meta = self.ckpt.restore(carry)
+                with get_tracer().span("restore", cat="resilience",
+                                       restart=restarts):
+                    carry, meta = self.ckpt.restore(carry)
                 restore_seconds += time.monotonic() - t0
                 step = int(meta["cursor"])  # rewind the data cursor with the state
                 del history[int(meta.get("history_len", len(history))):]
+                get_event_bus().publish(
+                    "restart", source="resilient_loop", step=step,
+                    restarts=restarts, error=type(e).__name__, backoff_s=pause)
                 log.warning("failure at restart %d (%s); restored step %d, "
                             "backoff %.2fs", restarts, e, step, pause)
                 if pause > 0.0:
@@ -201,6 +207,10 @@ class StragglerPolicy:
             if self.staleness < self.max_staleness:
                 self.staleness += 1
                 self.reuses += 1
+                from repro.obs import get_event_bus
+                get_event_bus().publish(
+                    "stale_dispatch", source="straggler",
+                    staleness=self.staleness, detected=bool(slow))
                 return False
         self.staleness = 0
         return True

@@ -212,7 +212,8 @@ class ContinualTrainer:
                                 "cannot be combined with an init_opt_fn override")
             self._halves = make_pipelined_halves(
                 self.loss_fn, self._opt_update, rcfg, exchange=exchange,
-                label_field=self.label_field, task_field=task_field)
+                label_field=self.label_field, task_field=task_field,
+                obs=run.obs)
         elif self._step_fn is None and self.mesh is None:
             from repro.strategy import make_cl_step
             if self._opt_update is None:
@@ -222,7 +223,7 @@ class ContinualTrainer:
                 exchange=exchange, label_field=self.label_field,
                 task_field=task_field, donate=donate,
                 strategy_cfg=self.scfg, forward_outputs=self.forward_outputs,
-                aux_spec=self.aux_spec)
+                aux_spec=self.aux_spec, obs=run.obs)
 
         if self.resilience is not None and self._halves is not None:
             raise ValueError("resilience= needs step_form='fused': the split "
@@ -241,7 +242,7 @@ class ContinualTrainer:
             from repro.strategy import make_stale_step
             self._stale_step_fn = make_stale_step(
                 self.loss_fn, self._opt_update, rcfg,
-                label_field=self.label_field, donate=donate)
+                label_field=self.label_field, donate=donate, obs=run.obs)
 
     # ------------------------------------------------------------------ util
     def _strategy_aux_spec(self) -> Dict[str, Any]:
@@ -303,6 +304,9 @@ class ContinualTrainer:
         for k in ("rep_checksum", "buffer_fill"):
             if k in metrics:
                 entry[k] = float(metrics[k])
+        for k, v in metrics.items():  # obs/* gauges ride along when enabled
+            if k.startswith("obs/"):
+                entry[k] = float(v)
         return entry
 
     def _resilient_loop(self, step_fn, stale_step_fn=None):
@@ -352,10 +356,34 @@ class ContinualTrainer:
     # ------------------------------------------------------------------- fit
     def fit(self):
         """Train through every task; returns ``CLRunResult`` (Eq.-1 metric
-        matrix, per-task runtimes, loss history)."""
-        if self.mesh is not None:
-            return self._fit_pjit()
-        return self._fit_carry()
+        matrix, per-task runtimes, loss history).
+
+        With ``run.obs.enabled`` the fit also (a) configures the process-global
+        tracer/event bus when ``run.obs.dir`` names an output directory —
+        ``trace.json`` + ``events.jsonl`` land there at the end of the fit —
+        and (b) folds the ``obs/*`` gauges carried by the history into
+        ``result.obs`` ({last, mean, max, n} per key)."""
+        ocfg = getattr(self.run, "obs", None)
+        obs_active = ocfg is not None and ocfg.enabled
+        if obs_active and ocfg.dir:
+            from repro import obs as obs_mod
+            obs_mod.configure(ocfg.dir)
+        try:
+            if self.mesh is not None:
+                result = self._fit_pjit()
+            else:
+                result = self._fit_carry()
+        finally:
+            if obs_active and ocfg.dir:
+                obs_mod.flush()
+        if obs_active:
+            from repro.obs import MetricsWriter
+            w = MetricsWriter()
+            for i, entry in enumerate(result.history):
+                w.add(entry, step=i)
+            if w.series:
+                result.obs = w.summary()
+        return result
 
     def _fit_carry(self):
         from repro.core.cl_loop import CLRunResult
@@ -368,6 +396,9 @@ class ContinualTrainer:
         if self.ckpt_dir and self._checkpoint_cb is None:
             from repro.checkpoint import CheckpointManager
             manager = CheckpointManager(self.ckpt_dir)
+
+        from repro.obs import get_tracer
+        tracer = get_tracer()  # disabled-by-default no-op unless obs configured
 
         key = jax.random.PRNGKey(self.seed)
         params = self.init_params_fn(key)
@@ -417,8 +448,9 @@ class ContinualTrainer:
                     res_stats[k_] = res_stats.get(k_, 0.0) + v
                 jax.block_until_ready(carry.params)
                 runtimes.append(time.perf_counter() - t0)
-                for j in range(task + 1):
-                    acc[task, j] = self.eval_fn(carry.params, j)
+                with tracer.span("eval", cat="trainer", task=task):
+                    for j in range(task + 1):
+                        acc[task, j] = self.eval_fn(carry.params, j)
                 self._checkpoint_task(task, carry, global_step, manager)
                 continue
             pf = None
@@ -472,8 +504,9 @@ class ContinualTrainer:
             jax.block_until_ready(carry.params)
             runtimes.append(time.perf_counter() - t0)
 
-            for j in range(task + 1):
-                acc[task, j] = self.eval_fn(carry.params, j)
+            with tracer.span("eval", cat="trainer", task=task):
+                for j in range(task + 1):
+                    acc[task, j] = self.eval_fn(carry.params, j)
             self._checkpoint_task(task, carry, global_step, manager)
 
         if manager is not None:
@@ -513,6 +546,8 @@ class ContinualTrainer:
             raise ValueError("pjit backend: non-buffer strategies run with "
                              "rehearsal.mode='off'")
         log = get_logger("repro.trainer")
+        from repro.obs import get_tracer
+        tracer = get_tracer()  # disabled-by-default no-op unless obs configured
         manager = None
         if self.ckpt_dir:
             from repro.checkpoint import CheckpointManager
@@ -600,8 +635,9 @@ class ContinualTrainer:
                         res_stats[k_] = res_stats.get(k_, 0.0) + v
                     jax.block_until_ready(params)
                     runtimes.append(time.perf_counter() - t0)
-                    for j in range(task + 1):
-                        acc[task, j] = self.eval_fn(params, j)
+                    with tracer.span("eval", cat="trainer", task=task):
+                        for j in range(task + 1):
+                            acc[task, j] = self.eval_fn(params, j)
                     if manager is not None:
                         snapshot(global_step, task)
                     continue
@@ -635,8 +671,9 @@ class ContinualTrainer:
                     pf.stop()
                 jax.block_until_ready(params)
                 runtimes.append(time.perf_counter() - t0)
-                for j in range(task + 1):
-                    acc[task, j] = self.eval_fn(params, j)
+                with tracer.span("eval", cat="trainer", task=task):
+                    for j in range(task + 1):
+                        acc[task, j] = self.eval_fn(params, j)
                 if manager is not None and not (
                         self.ckpt_every and global_step % self.ckpt_every == 0):
                     # end-of-task snapshot (skip if the in-loop save just did)

@@ -154,6 +154,7 @@ def make_cl_step(
     strategy_cfg=None,
     forward_outputs: Optional[Callable] = None,
     aux_spec=None,
+    obs=None,
 ):
     """Build ``step(carry, batch, key) -> (carry, metrics)`` (jitted).
 
@@ -168,6 +169,11 @@ def make_cl_step(
     -> {'logits', 'embed', ...}`` (the model-outputs tap), ``aux_spec`` (their
     per-record aux field specs, from ``Strategy.record_fields``) and a
     ``StrategyConfig`` in ``strategy_cfg``.
+
+    ``obs`` (an ``ObsConfig``, DESIGN.md §11) merges the jit-safe ``obs/*``
+    step metrics into the output dict — pure reads of state the step already
+    computes, consuming no RNG: fingerprints and carry layout are bit-identical
+    with obs on or off. ``None``/disabled compiles the exact pre-obs program.
     """
     try:
         strat = resolve_strategy(strategy)
@@ -203,10 +209,17 @@ def make_cl_step(
         aux_spec = aux_spec or {}
         tap_loss = strat.build_loss(loss_fn, forward_outputs, strategy_cfg,
                                     label_field=label_field)
+    obs_on = obs is not None and obs.enabled and obs.step_metrics
+    obs_aux_bytes = None
+    if obs_on and tap and aux_spec:
+        from repro.obs.metrics import aux_row_bytes
+
+        obs_aux_bytes = aux_row_bytes(aux_spec)
 
     def worker(carry: TrainCarry, batch, key, axis, n_workers):
         buf, pipe = carry.buffer, carry.pipe
         metrics = {}
+        obs_valid = obs_rows = None
         if tap:
             idx = jax.lax.axis_index(axis) if axis is not None else 0
             k_issue = jax.random.fold_in(pipe.key, idx)
@@ -237,6 +250,7 @@ def make_cl_step(
             metrics["buffer_fill"] = buffer_api.buffer_fill(buf).astype(jnp.float32)
             metrics["rep_checksum"] = rep_checksum(train_reps, train_valid,
                                                    label_field)
+            obs_valid, obs_rows = train_valid, b
         else:
             if rehearse:
                 idx = jax.lax.axis_index(axis) if axis is not None else 0
@@ -261,6 +275,8 @@ def make_cl_step(
                 metrics["buffer_fill"] = buffer_api.buffer_fill(buf).astype(jnp.float32)
                 metrics["rep_checksum"] = rep_checksum(train_reps, train_valid,
                                                        label_field)
+                obs_valid = train_valid
+                obs_rows = jax.tree_util.tree_leaves(batch)[0].shape[0]
             else:
                 train_batch = batch
 
@@ -276,6 +292,18 @@ def make_cl_step(
             loss = jax.lax.pmean(loss, axis)
         params, opt, opt_metrics = opt_update(grads, carry.opt, carry.params)
         metrics.update(loss=loss, **aux_metrics, **opt_metrics)
+        if obs_on:
+            from repro.obs.metrics import step_metrics as obs_step_metrics
+
+            # pure reads of state already in hand: no RNG, no new carry
+            # leaves — the obs-off/obs-on fingerprint parity contract
+            metrics.update(obs_step_metrics(
+                buffer=buf if rehearse else None,
+                rcfg=rcfg if rehearse else None,
+                valid=obs_valid, new_rows=obs_rows,
+                grads=grads, params=params,
+                staleness=(1.0 if pipelined else 0.0) if rehearse else None,
+                aux_bytes=obs_aux_bytes, cfg=obs))
         if axis is not None:
             metrics = jax.tree_util.tree_map(
                 lambda m: jax.lax.pmean(jnp.asarray(m, jnp.float32), axis), metrics
@@ -341,6 +369,7 @@ def make_stale_step(
     *,
     label_field: Optional[str] = None,
     donate: bool = False,
+    obs=None,
 ):
     """The bounded-staleness step (single device): same optimizer step as the
     pipelined ``make_cl_step``, but the rehearsal exchange is presumed late —
@@ -362,6 +391,7 @@ def make_stale_step(
     from repro.core import distributed as dist
 
     label_field = buffer_api.resolve_field(label_field, rcfg, "label_field", "label")
+    obs_on = obs is not None and obs.enabled and obs.step_metrics
 
     @functools.partial(jax.jit, donate_argnums=(0,) if donate else ())
     def step(carry: TrainCarry, batch, key):
@@ -379,6 +409,15 @@ def make_stale_step(
             buffer_fill=buffer_api.buffer_fill(carry.buffer).astype(jnp.float32),
             rep_checksum=rep_checksum(train_reps, train_valid, label_field),
         )
+        if obs_on:
+            from repro.obs.metrics import step_metrics as obs_step_metrics
+
+            # structural staleness is still 1 (one-step-stale slot); the
+            # EXTRA reuse staleness is per-event (StragglerPolicy -> EventBus)
+            metrics.update(obs_step_metrics(
+                buffer=carry.buffer, rcfg=rcfg, valid=train_valid,
+                new_rows=jax.tree_util.tree_leaves(batch)[0].shape[0],
+                grads=grads, params=params, staleness=1.0, cfg=obs))
         # buffer/pipe pass through untouched — the pending sample stays pending
         return TrainCarry(params, opt, carry.buffer, pipe, carry.ef), metrics
 
@@ -393,6 +432,7 @@ def make_pipelined_halves(
     exchange: str = "local",
     label_field: Optional[str] = None,
     task_field: Optional[str] = None,
+    obs=None,
 ):
     """The pipelined step as TWO separately-dispatched XLA programs (single device):
 
@@ -410,11 +450,16 @@ def make_pipelined_halves(
 
     Plain rehearsal only: tap strategies (DER/grasp_embed) need the fused form —
     their issue half consumes the train half's forward outputs.
+
+    ``obs`` merges the grad/param-norm + replay ``obs/*`` metrics into the
+    train half's output (buffer gauges need the buffer and belong to the fused
+    form / ``repro.obs.pipeline``); the issue half's signature is unchanged.
     """
     from repro.core import distributed as dist
 
     label_field = buffer_api.resolve_field(label_field, rcfg, "label_field", "label")
     task_field = buffer_api.resolve_field(task_field, rcfg, "task_field", "task")
+    obs_on = obs is not None and obs.enabled and obs.step_metrics
 
     @jax.jit
     def train_half(params, opt, pipe, batch):
@@ -424,7 +469,15 @@ def make_pipelined_halves(
         train_batch = rb.augment_batch(batch, train_reps, train_valid, label_field)
         (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, train_batch)
         params, opt, om = opt_update(grads, opt, params)
-        return params, opt, dict(aux, **om, loss=loss)
+        metrics = dict(aux, **om, loss=loss)
+        if obs_on:
+            from repro.obs.metrics import step_metrics as obs_step_metrics
+
+            metrics.update(obs_step_metrics(
+                valid=train_valid,
+                new_rows=jax.tree_util.tree_leaves(batch)[0].shape[0],
+                grads=grads, params=params, staleness=1.0, cfg=obs))
+        return params, opt, metrics
 
     @jax.jit
     def issue_half(buffer, pipe, batch, key):

@@ -2,32 +2,60 @@
 from __future__ import annotations
 
 import logging
+import os
 import sys
 import time
 from typing import Iterable
 
 
 def get_logger(name: str = "repro") -> logging.Logger:
+    """Stderr logger with rank-aware formatting.
+
+    * Multi-process runs (``runtime.multiproc``) interleave on one terminal, so
+      the format carries a ``[rank N]`` prefix taken from ``REPRO_MP_PID``.
+    * The level comes from ``REPRO_LOG_LEVEL`` (default INFO) and is re-applied
+      on every call, so an env change between calls takes effect.
+    * The handler this module installs is tagged and updated in place —
+      repeated calls (or a module re-import) never stack duplicate handlers,
+      and a caller's own handlers are left alone.
+    """
     logger = logging.getLogger(name)
-    if not logger.handlers:
+    rank = os.environ.get("REPRO_MP_PID", "")
+    prefix = f"[rank {rank}] " if rank else ""
+    fmt = logging.Formatter(
+        f"%(asctime)s {prefix}%(name)s %(levelname)s %(message)s", "%H:%M:%S")
+    ours = [h for h in logger.handlers if getattr(h, "_repro_handler", False)]
+    if ours:
+        for h in ours:
+            h.setFormatter(fmt)
+    elif not logger.handlers:
         handler = logging.StreamHandler(sys.stderr)
-        handler.setFormatter(
-            logging.Formatter("%(asctime)s %(name)s %(levelname)s %(message)s", "%H:%M:%S")
-        )
+        handler._repro_handler = True
+        handler.setFormatter(fmt)
         logger.addHandler(handler)
-        logger.setLevel(logging.INFO)
-        logger.propagate = False
+    level_name = os.environ.get("REPRO_LOG_LEVEL", "").strip().upper()
+    level = getattr(logging, level_name, None) if level_name else None
+    logger.setLevel(level if isinstance(level, int) else logging.INFO)
+    logger.propagate = False
     return logger
 
 
 class CSVWriter:
-    """Print ``name,us_per_call,derived`` style CSV rows to stdout (benchmarks contract)."""
+    """Print ``name,us_per_call,derived`` style CSV rows to stdout (benchmarks contract).
+
+    The header is written lazily on the first ``row()``: a writer constructed
+    for a run that ends up emitting nothing (a skipped benchmark, an exception
+    before the first measurement) leaves stdout clean, and log lines printed
+    between construction and the first row no longer split header from rows."""
 
     def __init__(self, header: Iterable[str] = ("name", "us_per_call", "derived")):
         self._header = tuple(header)
-        print(",".join(self._header))
+        self._header_written = False
 
     def row(self, *values) -> None:
+        if not self._header_written:
+            print(",".join(self._header), flush=True)
+            self._header_written = True
         print(",".join(str(v) for v in values), flush=True)
 
 
