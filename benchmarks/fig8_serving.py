@@ -1,0 +1,114 @@
+"""Fig. 8 (repo-native): continual serving — what does learning from live
+traffic cost the serve path, and what does it buy?
+
+Two arms over the identical task-free ``drift_stream`` traffic (DESIGN.md §12):
+
+  serve-only — ``OnlineConfig(enabled=False)``: frozen init weights, the pure
+               decode loop (bit-identical to the historical ``launch/serve.py``
+               path for the same prompts).
+  online     — the full interleave: traffic admitted to the rehearsal buffer,
+               ``train_every`` one-step-stale rehearsal steps per round, weight
+               handoff at each round boundary.
+
+Reported:
+
+  decode throughput  — median per-round decode tok/s/seq of each arm. The train
+                       step is dispatched *between* rounds and the handoff
+                       blocks before the next round's decode timer starts, so
+                       this measures the serve path itself (handoff + gauge
+                       overhead), not whether one CPU can hide train compute.
+  drifted-slice freshness — next-token accuracy on the final anchor phase (the
+                       distribution the traffic drifted TO) of the continually
+                       trained weights vs the frozen ones.
+
+Gates (raise RuntimeError):
+  decode_tok_s(online) >= 0.85 * decode_tok_s(serve-only)
+  drift_accuracy(online) > drift_accuracy(frozen), strictly
+"""
+import json
+import os
+
+import numpy as np
+
+from repro.configs.base import (OnlineConfig, RunConfig, ScenarioConfig,
+                                TrainConfig)
+from repro.serving import OnlineLearner
+
+
+def _arm(enabled: bool, rounds: int, train_every: int, seed: int = 0):
+    phases = 3
+    run = RunConfig(
+        train=TrainConfig(optimizer="adamw", peak_lr=3e-3, warmup_steps=4,
+                          linear_scaling=False, compute_dtype="float32"),
+        scenario=ScenarioConfig(
+            name="drift_stream", modality="tokens", num_tasks=phases,
+            epochs_per_task=1,
+            # phase_len = steps_per_task: the traffic finishes its drift into
+            # the last anchor with a few rounds to spare
+            steps_per_epoch=max(2, rounds // phases), batch_size=8, seed=seed,
+            vocab_size=64, seq_len=24),
+        online=OnlineConfig(enabled=enabled, rounds=rounds,
+                            requests_per_round=8, prompt_len=16,
+                            train_every=train_every))
+    return OnlineLearner(run).run()
+
+
+def run(writer, smoke: bool = False, json_path: str = "BENCH_fig8.json"):
+    rounds = 12 if smoke else 24
+    train_every = 2
+
+    res_off = _arm(False, rounds, train_every)
+    res_on = _arm(True, rounds, train_every)
+
+    tok_s_off = float(np.median([h["tokens_per_second"]
+                                 for h in res_off.history]))
+    tok_s_on = float(np.median([h["tokens_per_second"]
+                                for h in res_on.history]))
+    ratio = tok_s_on / max(tok_s_off, 1e-9)
+    acc_frozen = res_off.accuracy[-1]  # the drifted-TO slice, init weights
+    acc_online = res_on.accuracy[-1]
+
+    writer.row("fig8/serve_only", f"{1e6 / max(tok_s_off, 1e-9):.0f}",
+               f"decode_tok_s={tok_s_off:.1f}")
+    writer.row("fig8/online", f"{1e6 / max(tok_s_on, 1e-9):.0f}",
+               f"decode_tok_s={tok_s_on:.1f},ratio={ratio:.3f}(gate>=0.85)")
+    writer.row("fig8/drift_slice", f"{acc_online:.4f}",
+               f"frozen={acc_frozen:.4f}(gate:online>frozen),"
+               f"admission={res_on.admission_rate:.2f},"
+               f"freshness={res_on.freshness_rounds:.0f}")
+
+    if ratio < 0.85:
+        raise RuntimeError(
+            f"online learning slowed the serve path: decode ratio "
+            f"{ratio:.3f} < 0.85 ({tok_s_on:.1f} vs {tok_s_off:.1f} tok/s)")
+    if not acc_online > acc_frozen:
+        raise RuntimeError(
+            f"continual updates did not beat frozen weights on the drifted "
+            f"slice: online={acc_online:.4f} vs frozen={acc_frozen:.4f}")
+
+    payload = {"bench": "fig8", "smoke": smoke, "rows": {
+        "decode_tok_s_serve_only": round(tok_s_off, 2),
+        "decode_tok_s_online": round(tok_s_on, 2),
+        "online_decode_ratio": round(ratio, 4),
+        "drift_accuracy_frozen": round(acc_frozen, 4),
+        "drift_accuracy_online": round(acc_online, 4),
+        "early_accuracy_online": round(res_on.accuracy[0], 4),
+        "admission_rate": round(res_on.admission_rate, 4),
+        "freshness_rounds": res_on.freshness_rounds,
+        "restarts": res_on.restarts,
+    }}
+    with open(json_path, "w") as f:
+        json.dump(payload, f, indent=2)
+    writer.row("fig8/json", "0", os.path.abspath(json_path))
+
+
+if __name__ == "__main__":
+    import argparse
+
+    from repro.utils.logging import CSVWriter
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--json", default="")
+    args = ap.parse_args()
+    run(CSVWriter(), smoke=args.smoke, json_path=args.json or "BENCH_fig8.json")

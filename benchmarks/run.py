@@ -5,6 +5,7 @@
   fig5b  — three strategies: accuracy + runtime    (paper Fig. 5b)
   fig6   — rehearsal management breakdown/overlap  (paper Fig. 6)
   fig7   — scalability: overhead + autoscaling + restart cost (paper Fig. 7)
+  fig8   — continual serving: decode throughput + drifted-slice freshness
   roofline — per (arch x shape x mesh) roofline terms from the dry-run artifacts
 """
 import argparse
@@ -16,24 +17,27 @@ from repro.utils.logging import CSVWriter
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default="", help="comma list: fig5a,fig5b,fig6,fig7,roofline")
+    ap.add_argument("--only", default="",
+                    help="comma list: fig5a,fig5b,fig6,fig7,fig8,roofline")
     ap.add_argument("--smoke", action="store_true",
                     help="shrunk fig5a/fig6 runs for CI (still emit BENCH_*.json)")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
     from benchmarks import (fig5a_buffer_size, fig5b_strategies, fig6_breakdown,
-                            fig7_scalability, roofline_table)
+                            fig7_scalability, fig8_serving, roofline_table)
 
     benches = {
         "fig5a": fig5a_buffer_size.run,
         "fig5b": fig5b_strategies.run,
         "fig6": fig6_breakdown.run,
         "fig7": fig7_scalability.run,
+        "fig8": fig8_serving.run,
         "roofline": roofline_table.run,
     }
     writer = CSVWriter()
-    smoke_aware = {"fig5a", "fig5b", "fig6", "fig7"}  # emit BENCH_*.json, accept --smoke
+    # emit BENCH_*.json, accept --smoke
+    smoke_aware = {"fig5a", "fig5b", "fig6", "fig7", "fig8"}
     failures = 0
     for name, fn in benches.items():
         if only and name not in only:

@@ -3,6 +3,7 @@ from repro.configs.base import (
     MeshConfig,
     ModelConfig,
     ObsConfig,
+    OnlineConfig,
     RehearsalConfig,
     ResilienceConfig,
     RunConfig,
@@ -62,6 +63,7 @@ __all__ = [
     "SHAPES",
     "MeshConfig",
     "ModelConfig",
+    "OnlineConfig",
     "RehearsalConfig",
     "RunConfig",
     "ScenarioConfig",

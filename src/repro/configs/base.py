@@ -346,6 +346,59 @@ class ObsConfig:
 
 
 # ---------------------------------------------------------------------------
+# Online continual serving (live-traffic learner; see repro.serving)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class OnlineConfig:
+    """Knobs of the online serve/train interleave (``repro.serving``, §12).
+
+    ``enabled=False`` runs the pure serving loop — bit-identical to the
+    historical ``launch/serve.py`` decode path for the same prompts. Enabled,
+    each serve round's request batch (prompt + the decode continuation) is
+    admitted into the rehearsal buffer and ``train_every`` pipelined train
+    steps run between decode dispatches, consuming one-step-stale
+    representatives; the updated params are published back to the serving
+    step at the round boundary (the weight handoff).
+    """
+
+    enabled: bool = False
+    rounds: int = 8  # serve rounds (one request batch each)
+    requests_per_round: int = 4  # decode batch size per round
+    prompt_len: int = 16  # request prefix fed through prefill
+    # Greedy continuation length; 0 derives seq_len + 1 - prompt_len so the
+    # admitted record (prompt ++ continuation, shifted) exactly fills the
+    # scenario's [seq_len] token/label layout.
+    gen_len: int = 0
+    train_every: int = 1  # train steps interleaved per round (0 = serve-only)
+    # Admit the decode continuation with the prompt (the model-outputs side of
+    # the record); False stores the raw request stream rows instead.
+    store_decode: bool = True
+    freshness_every: int = 0  # rounds between drifted-slice evals (0 = end only)
+
+    def __post_init__(self):
+        if self.rounds < 1:
+            raise ValueError(f"rounds must be >= 1, got {self.rounds}")
+        if self.prompt_len < 1:
+            raise ValueError(f"prompt_len must be >= 1, got {self.prompt_len}")
+        if self.gen_len < 0 or self.train_every < 0:
+            raise ValueError("gen_len and train_every must be >= 0")
+
+    def resolved_gen_len(self, seq_len: int) -> int:
+        """Continuation length: explicit, else sized so that
+        ``prompt_len + gen_len == seq_len + 1`` (record = shifted pair)."""
+        if self.gen_len:
+            return self.gen_len
+        g = seq_len + 1 - self.prompt_len
+        if g < 1:
+            raise ValueError(
+                f"prompt_len={self.prompt_len} leaves no room for a "
+                f"continuation at seq_len={seq_len}")
+        return g
+
+
+# ---------------------------------------------------------------------------
 # Continual-learning scenario (task stream + schedule; see repro.scenario)
 # ---------------------------------------------------------------------------
 
@@ -457,6 +510,9 @@ class RunConfig:
     # pre-obs program; obs-on adds output-leaf metrics + traces + events with
     # bit-identical fingerprints (DESIGN.md §11).
     obs: ObsConfig = ObsConfig()
+    # Online continual serving (repro.serving, DESIGN.md §12): disabled by
+    # default — the serve path then never touches the buffer or the optimizer.
+    online: OnlineConfig = OnlineConfig()
 
     def replace(self, **kw) -> "RunConfig":
         return dataclasses.replace(self, **kw)

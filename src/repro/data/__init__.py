@@ -5,6 +5,8 @@ from repro.data.synthetic import (
     ClassIncrementalImages,
     DomainIncrementalImages,
     DomainStreamConfig,
+    DriftStreamConfig,
+    DriftTokenStream,
     ImageStreamConfig,
     TaskTokenStream,
     TokenStreamConfig,
@@ -17,6 +19,8 @@ __all__ = [
     "Cursor",
     "DomainIncrementalImages",
     "DomainStreamConfig",
+    "DriftStreamConfig",
+    "DriftTokenStream",
     "ImageStreamConfig",
     "Prefetcher",
     "TaskTokenStream",

@@ -292,3 +292,112 @@ class TaskTokenStream:
 
     def eval_set(self, task: int, n: int = 64):
         return self.batch(task, n, cursor=10_000_019)  # held-out cursor region
+
+
+@dataclass(frozen=True)
+class DriftStreamConfig:
+    num_phases: int = 4  # anchor distributions the stream drifts across
+    vocab_size: int = 256
+    seq_len: int = 32
+    phase_len: int = 100  # cursor span over which one anchor fades into the next
+    shared_frac: float = 0.25  # fraction of vocab below every phase's band
+    seed: int = 777
+
+
+class DriftTokenStream:
+    """Task-free Markov-1 token stream: the distribution drifts continuously.
+
+    The online-serving analogue of ``BlurryBoundaryImages`` for the LM path:
+    there is no schedule and **no task id anywhere** — the stream holds
+    ``num_phases`` anchor Markov-1 distributions (each over a disjoint vocab
+    band, as in :class:`TaskTokenStream`) and, at cursor ``c``, each *sample*
+    independently draws from anchor ``⌊c/phase_len⌋`` with probability
+    ``1 - frac(c/phase_len)`` and from the next anchor otherwise. Every batch
+    is therefore a mixture; the mixture weight slides smoothly with the
+    cursor, so no step ever sees a clean distribution switch.
+
+    Records carry a scalar ``label`` — the majority vocab *band* of the
+    sample's own tokens, i.e. a quantity derived purely from content (the
+    buffer buckets by it, mirroring the blurry-boundary label bucketing).
+    ``batch`` ignores its ``task`` argument: only the global cursor matters.
+    """
+
+    def __init__(self, cfg: DriftStreamConfig):
+        self.cfg = cfg
+        rng = np.random.default_rng(cfg.seed)
+        self.base = int(cfg.vocab_size * cfg.shared_frac)
+        self.span = (cfg.vocab_size - self.base) // cfg.num_phases
+        if self.span < 2:
+            raise ValueError(
+                f"vocab_size={cfg.vocab_size} too small for "
+                f"{cfg.num_phases} phase bands")
+        # [P, span, span] row-stochastic anchors; phase p emits tokens in
+        # [base + p*span, base + (p+1)*span).
+        self.trans = np.stack([
+            rng.dirichlet(np.full(self.span, 0.05), size=self.span)
+            for _ in range(cfg.num_phases)
+        ]).astype(np.float32)
+
+    @property
+    def num_phases(self) -> int:
+        return self.cfg.num_phases
+
+    def phase_weight(self, cursor: int) -> Tuple[int, float]:
+        """(phase, w): at this cursor a sample drifts to ``phase + 1`` with
+        probability ``w``. Clamped to the last anchor once the drift ends."""
+        x = max(0.0, cursor / float(self.cfg.phase_len))
+        p = int(x)
+        if p >= self.cfg.num_phases - 1:
+            return self.cfg.num_phases - 1, 0.0
+        return p, x - p
+
+    def bucket_of(self, tokens: np.ndarray) -> np.ndarray:
+        """Majority vocab band of each row of ``tokens`` [B, S] — the scalar
+        admission label. Content-derived: works on generated tokens too."""
+        tokens = np.asarray(tokens)
+        band = np.clip((tokens - self.base) // self.span, 0,
+                       self.cfg.num_phases - 1)
+        onehot = band[..., None] == np.arange(self.cfg.num_phases)
+        return onehot.sum(axis=1).argmax(axis=-1).astype(np.int32)
+
+    def _chains(self, phase_idx: np.ndarray, rng) -> np.ndarray:
+        """Markov chains [B, seq_len+1], row i from anchor ``phase_idx[i]``."""
+        b, s = len(phase_idx), self.cfg.seq_len
+        toks = np.zeros((b, s + 1), np.int64)
+        toks[:, 0] = rng.integers(0, self.span, size=b)
+        for i in range(s):
+            p = self.trans[phase_idx, toks[:, i]]
+            cdf = np.cumsum(p, axis=1)
+            u = rng.random((b, 1))
+            toks[:, i + 1] = (u > cdf).sum(axis=1).clip(0, self.span - 1)
+        return toks + self.base + phase_idx[:, None] * self.span
+
+    def batch(self, task: int, batch_size: int, cursor: int) -> Dict[str, np.ndarray]:
+        """Deterministic mini-batch at global ``cursor``; ``task`` is ignored
+        (task-free). Fields: tokens [S], labels [S], label () — no task id."""
+        del task
+        phase, w = self.phase_weight(cursor)
+        rng = np.random.default_rng((self.cfg.seed, 31, cursor))
+        phase_idx = np.full(batch_size, phase)
+        phase_idx[rng.random(batch_size) < w] = phase + 1
+        toks = self._chains(phase_idx, rng)
+        tokens = toks[:, :-1].astype(np.int32)
+        return {
+            "tokens": tokens,
+            "labels": toks[:, 1:].astype(np.int32),
+            "label": self.bucket_of(tokens),
+        }
+
+    def anchor_batch(self, phase: int, batch_size: int, cursor: int) -> Dict[str, np.ndarray]:
+        """Pure single-anchor batch (evaluation slices; never mixed)."""
+        rng = np.random.default_rng((self.cfg.seed, 37, phase, cursor))
+        toks = self._chains(np.full(batch_size, phase), rng)
+        tokens = toks[:, :-1].astype(np.int32)
+        return {
+            "tokens": tokens,
+            "labels": toks[:, 1:].astype(np.int32),
+            "label": self.bucket_of(tokens),
+        }
+
+    def eval_set(self, phase: int, n: int = 64):
+        return self.anchor_batch(phase, n, cursor=10_000_019)

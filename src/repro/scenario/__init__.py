@@ -24,7 +24,9 @@ from repro.scenario.scenarios import (
     BlurryBoundary,
     ClassIncremental,
     DomainIncremental,
+    DriftStream,
     TokenClassIncremental,
+    build_token_lm,
 )
 from repro.scenario.trainer import ContinualTrainer, materialize_state
 
@@ -33,10 +35,12 @@ __all__ = [
     "ClassIncremental",
     "ContinualTrainer",
     "DomainIncremental",
+    "DriftStream",
     "Problem",
     "SCENARIOS",
     "Scenario",
     "TokenClassIncremental",
+    "build_token_lm",
     "get_scenario",
     "materialize_state",
     "register_scenario",

@@ -22,6 +22,8 @@ from repro.data import (
     ClassIncrementalImages,
     DomainIncrementalImages,
     DomainStreamConfig,
+    DriftStreamConfig,
+    DriftTokenStream,
     ImageStreamConfig,
     TaskTokenStream,
     TokenStreamConfig,
@@ -183,6 +185,34 @@ class BlurryBoundary(_VisionScenario):
 # ---------------------------------------------------------------------------
 
 
+def build_token_lm(run, vocab_size: int):
+    """Build the token-scenario LM and its forward contexts from a RunConfig.
+
+    Shared by :class:`TokenClassIncremental`, :class:`DriftStream` and the
+    serving engine (``repro.serving``) so the params trained online are the
+    exact tree the decode path consumes. Returns ``(model, ctx, eval_ctx)``
+    where ``ctx`` honours the run's compute dtype / remat / scan_layers and
+    ``eval_ctx`` is the float32 no-remat evaluation context.
+    """
+    from repro.configs import get_reduced
+    from repro.models import StackCtx, build_model
+
+    cfg = run.model
+    if cfg is None:
+        base = get_reduced("smollm-135m")
+        cfg = type(base)(**{**base.__dict__,
+                            "vocab_size": vocab_size,
+                            "num_layers": 2})
+    model = build_model(cfg)
+    dtype = jnp.float32 if run.train.compute_dtype == "float32" else jnp.bfloat16
+    # scan_layers mirrors the pjit backend's StackCtx so tap strategies
+    # (DER stored logits) produce bit-identical forwards on both backends
+    ctx = StackCtx(cfg=cfg, compute_dtype=dtype, remat=run.train.remat,
+                   scan_layers=run.train.scan_layers)
+    eval_ctx = StackCtx(cfg=cfg, compute_dtype=jnp.float32, remat="none")
+    return model, ctx, eval_ctx
+
+
 class TokenClassIncremental(Scenario):
     """Class-incremental over token distributions: each task a disjoint Markov-1
     vocab range (the LM analogue of new classes). Metric: per-task eval LOSS
@@ -228,22 +258,7 @@ class TokenClassIncremental(Scenario):
                 "label_field": "labels", "task_field": "task"}
 
     def build_problem(self, run) -> Problem:
-        from repro.configs import get_reduced
-        from repro.models import StackCtx, build_model
-
-        cfg = run.model
-        if cfg is None:
-            base = get_reduced("smollm-135m")
-            cfg = type(base)(**{**base.__dict__,
-                                "vocab_size": self.stream.cfg.vocab_size,
-                                "num_layers": 2})
-        model = build_model(cfg)
-        dtype = jnp.float32 if run.train.compute_dtype == "float32" else jnp.bfloat16
-        # scan_layers mirrors the pjit backend's StackCtx so tap strategies
-        # (DER stored logits) produce bit-identical forwards on both backends
-        ctx = StackCtx(cfg=cfg, compute_dtype=dtype, remat=run.train.remat,
-                       scan_layers=run.train.scan_layers)
-        eval_ctx = StackCtx(cfg=cfg, compute_dtype=jnp.float32, remat="none")
+        model, ctx, eval_ctx = build_token_lm(run, self.stream.cfg.vocab_size)
 
         def loss_fn(params, batch):
             loss, _ = model.loss(params, batch, ctx)
@@ -261,6 +276,95 @@ class TokenClassIncremental(Scenario):
                        forward_outputs=forward_outputs)
 
 
+class DriftStream(Scenario):
+    """Task-free LM stream: the token distribution drifts continuously across
+    ``num_tasks`` anchors with **no task ids and no schedule** (the AML
+    ``task_free`` setting). Records carry a content-derived scalar ``label``
+    (majority vocab band) and the buffer buckets by it — the token analogue of
+    ``blurry_boundary``'s label bucketing. ``num_tasks`` is reinterpreted as
+    the anchor count: eval slices are the pure anchors, so the accuracy matrix
+    stays well-defined even though training never sees a clean phase.
+
+    Metric: next-token top-1 **accuracy** (higher is better) — the online
+    serving freshness benchmarks (fig8) compare drifted-slice accuracy of a
+    continually-updated model against frozen weights.
+    """
+
+    name = "drift_stream"
+    label_field = "labels"
+    task_field = None
+
+    def __init__(self, cfg: Optional[ScenarioConfig] = None, stream=None,
+                 eval_n: int = 16):
+        cfg = cfg or ScenarioConfig(name="drift_stream", modality="tokens")
+        self.cfg = cfg
+        self.eval_n = eval_n
+        self.stream = stream if stream is not None else DriftTokenStream(
+            DriftStreamConfig(
+                num_phases=cfg.num_tasks, vocab_size=cfg.vocab_size,
+                seq_len=cfg.seq_len, phase_len=cfg.steps_per_task,
+                seed=cfg.seed))
+
+    @property
+    def num_tasks(self) -> int:
+        return self.stream.cfg.num_phases
+
+    @property
+    def seq_len(self) -> int:
+        return self.stream.cfg.seq_len
+
+    @property
+    def buffer_task_field(self) -> str:
+        # label_field stays "labels" (the [S] shifted targets the loss masks
+        # on); bucketing keys on the scalar content-derived band instead.
+        return "label"
+
+    @property
+    def item_spec(self) -> Dict[str, Any]:
+        s = self.seq_len
+        return {"tokens": jax.ShapeDtypeStruct((s,), jnp.int32),
+                "labels": jax.ShapeDtypeStruct((s,), jnp.int32),
+                "label": jax.ShapeDtypeStruct((), jnp.int32)}
+
+    def batch(self, task, batch_size, cursor):
+        # task-free: the stream only reads the global cursor
+        return self.stream.batch(task, batch_size, cursor)
+
+    def eval_set(self, task):
+        return self.stream.eval_set(task, n=self.eval_n)
+
+    def recommended(self):
+        # one bucket per vocab band; task_field -> the scalar band label
+        return {"num_buckets": self.num_tasks, "policy": "reservoir",
+                "label_field": "labels", "task_field": "label"}
+
+    def cumulative_batch(self, upto_task, batch_size, cursor):
+        raise NotImplementedError(
+            "drift_stream has no per-task view to accumulate (task-free "
+            "stream) — the from_scratch strategy does not apply")
+
+    def build_problem(self, run) -> Problem:
+        model, ctx, eval_ctx = build_token_lm(run, self.stream.cfg.vocab_size)
+
+        def loss_fn(params, batch):
+            loss, _ = model.loss(params, batch, ctx)
+            return loss, {}
+
+        def forward_outputs(params, batch):
+            return model.outputs(params, batch, ctx)
+
+        eval_logits = jax.jit(lambda p, b: model.forward(p, b, eval_ctx)[0])
+
+        def eval_fn(params, task):
+            ev = {k: jnp.asarray(v) for k, v in self.eval_set(task).items()}
+            pred = jnp.argmax(eval_logits(params, {"tokens": ev["tokens"]}),
+                              axis=-1)
+            return float(jnp.mean((pred == ev["labels"]).astype(jnp.float32)))
+
+        return Problem(lambda k: model.init(k, self.seq_len), loss_fn, eval_fn,
+                       forward_outputs=forward_outputs)
+
+
 def _class_incremental_factory(cfg: ScenarioConfig) -> Scenario:
     if cfg.modality == "tokens":
         return TokenClassIncremental(cfg)
@@ -270,3 +374,4 @@ def _class_incremental_factory(cfg: ScenarioConfig) -> Scenario:
 register_scenario("class_incremental", _class_incremental_factory)
 register_scenario("domain_incremental", DomainIncremental)
 register_scenario("blurry_boundary", BlurryBoundary)
+register_scenario("drift_stream", DriftStream)

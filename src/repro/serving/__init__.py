@@ -1,0 +1,13 @@
+"""Online continual serving (DESIGN.md §12).
+
+``DecodeEngine`` is the batched prefill + greedy KV-cache decode path absorbed
+from ``launch.serve``; ``OnlineLearner`` interleaves it with asynchronous
+rehearsal train steps so the model keeps learning from live traffic — request
+batches (prompt + decode continuation) are admitted into the rehearsal buffer
+between decode dispatches, train steps consume one-step-stale representatives,
+and the updated params are published back to serving at each round boundary.
+"""
+from repro.serving.engine import DecodeEngine, GenResult
+from repro.serving.online import OnlineLearner, OnlineResult
+
+__all__ = ["DecodeEngine", "GenResult", "OnlineLearner", "OnlineResult"]

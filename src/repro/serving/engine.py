@@ -1,0 +1,76 @@
+"""Batched prefill + greedy decode engine (the serve-side half of §12).
+
+The token math is the historical ``launch/serve.py`` loop verbatim — prefill
+feeds the prompt one position at a time through the decode step (cache-building
+prefill), then greedy argmax generation continues to ``prompt_len + gen_len``.
+That loop is the bit-exactness contract: with online learning disabled, a
+``DecodeEngine`` produces the identical token ids the pre-serving-subsystem
+script printed (tests/test_serving.py::test_engine_matches_legacy_serve_loop).
+"""
+from __future__ import annotations
+
+import time
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class GenResult(NamedTuple):
+    tokens: jax.Array  # [batch, gen_len] greedy continuation ids
+    prefill_seconds: float
+    decode_seconds: float
+    tokens_per_second: float  # per-sequence decode throughput
+
+
+class DecodeEngine:
+    """Holds the model + forward context + the jitted decode step.
+
+    ``ctx`` is the serving ``StackCtx`` (its compute dtype is the ``--dtype``
+    knob; shard fn set when serving under a mesh). The engine is stateless
+    across calls — params are an argument, which is what makes the online
+    weight handoff a plain swap of the array the caller passes in.
+    """
+
+    def __init__(self, model, ctx, cache_dtype=jnp.float32):
+        self.model = model
+        self.ctx = ctx
+        self.cache_dtype = cache_dtype
+        self._decode = jax.jit(
+            lambda p, b, c, i: model.decode(p, b, c, i, ctx))
+
+    def generate(self, params, prompts, gen_len: int) -> GenResult:
+        """Prefill ``prompts`` [batch, prompt_len], then greedily decode
+        ``gen_len`` tokens. Pure function of (params, prompts)."""
+        from repro.obs import get_tracer
+        tracer = get_tracer()
+
+        batch, prompt_len = prompts.shape
+        max_len = prompt_len + gen_len
+        caches = self.model.init_cache(params, batch, max_len,
+                                       dtype=self.cache_dtype)
+        t0 = time.time()
+        logits = None
+        with tracer.span("prefill", cat="serve", tokens=prompt_len,
+                         batch=batch):
+            for t in range(prompt_len):
+                logits, caches = self._decode(
+                    params, {"token": prompts[:, t:t + 1]}, caches,
+                    jnp.int32(t))
+        t_prefill = time.time() - t0
+
+        tok = jnp.argmax(logits[:, -1, :], axis=-1)[:, None]
+        out = [tok]
+        t0 = time.time()
+        with tracer.span("decode", cat="serve", tokens=gen_len, batch=batch):
+            for t in range(prompt_len, max_len - 1):
+                logits, caches = self._decode(params, {"token": tok}, caches,
+                                              jnp.int32(t))
+                tok = jnp.argmax(logits[:, -1, :], axis=-1)[:, None]
+                out.append(tok)
+            jax.block_until_ready(tok)
+        t_gen = time.time() - t0
+        gen = jnp.concatenate(out, axis=1)
+        return GenResult(tokens=gen, prefill_seconds=t_prefill,
+                         decode_seconds=t_gen,
+                         tokens_per_second=gen.shape[1] / max(t_gen, 1e-9))

@@ -1,0 +1,271 @@
+"""OnlineLearner: the serve/train interleave (DESIGN.md §12).
+
+Each round serves one request batch through the :class:`DecodeEngine`, admits
+the traffic (prompt + the decode continuation, re-labelled by content bucket)
+into the distributed rehearsal buffer, and runs ``train_every`` rehearsal
+steps whose representatives are one-step stale — the paper's trick applied to
+the serve/train boundary: the all_to_all and the weight update issued for
+round *r* never block round *r*'s decode dispatches, and the params they
+produce are published to serving at the round boundary (the weight handoff;
+with the fused step's donated carry this is a pointer swap, not a copy).
+
+Failure containment: with ``run.resilience`` configured the train steps run
+inside a ``runtime.ResilientLoop`` (checkpointed restarts under
+``ckpt_dir/resilient``); if even its restart budget is exhausted, training is
+disabled for the rest of the session and serving continues from the last
+checkpointed weights. Without a resilience config the carry is kept undonated
+so a failed train step simply leaves the previous round's weights serving.
+A train failure therefore never kills serving, in either mode.
+
+Freshness is measured in *rounds since the last weight handoff* as seen by the
+serving step: steady-state value 1 — exactly the one-step staleness the paper
+trades for never blocking.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import RunConfig
+from repro.scenario import ContinualTrainer
+from repro.scenario.scenarios import build_token_lm
+from repro.serving.engine import DecodeEngine, GenResult
+
+
+class OnlineResult(NamedTuple):
+    history: List[Dict[str, float]]  # one entry per serve round
+    decode_tokens_per_second: float  # mean per-sequence decode throughput
+    admission_rate: float  # admitted request rows / served request rows
+    freshness_rounds: float  # freshness the final round decoded with (steady state: 1)
+    accuracy: List[float]  # per-anchor-phase next-token accuracy at the end
+    restarts: int  # ResilientLoop restarts absorbed by the train side
+    train_disabled: bool  # True if the restart budget was exhausted
+    freshness_evals: List[Dict[str, float]]  # periodic drifted-slice evals
+    params: Any  # the weights serving ended on
+    carry: Any  # full train carry (buffer + pipeline state)
+    last_tokens: Any  # [batch, gen_len] ids of the final round's decode
+
+
+class OnlineLearner:
+    """Interleaved serve/train loop over a task-free traffic stream.
+
+    Args:
+      run: ``RunConfig``; ``run.online`` holds the interleave knobs,
+        ``run.scenario`` names the traffic scenario (default ``drift_stream``),
+        ``run.rehearsal``/``run.strategy`` shape the buffer exactly as in
+        offline training, and ``run.resilience`` (requires ``ckpt_dir``)
+        arms the checkpointed-restart path.
+      scenario: optional explicit Scenario (else resolved from ``run``). Must
+        be a token scenario whose records carry ``tokens``/``labels`` rows.
+      ckpt_dir: directory for the ResilientLoop's restart checkpoints.
+      serve_dtype: compute dtype of the *serving* forward (the ``--dtype``
+        flag); training keeps ``run.train.compute_dtype``.
+      registry: optional ``obs.MetricsRegistry`` — the learner maintains the
+        ``repro_online_*`` gauges on it.
+      failure_hook: chaos injection point, called with the absolute train-step
+        id before each train step (tests inject ``InjectedFailure``).
+    """
+
+    def __init__(self, run: RunConfig, scenario=None, *, ckpt_dir: str = "",
+                 exchange: str = "full", serve_dtype=jnp.float32,
+                 registry=None, failure_hook=None):
+        self.run_config = run
+        self.ocfg = run.online
+        self.registry = registry
+        # The trainer composes the whole train side (scenario defaults ->
+        # rcfg, strategy aux fields, fused make_cl_step, ResilientLoop).
+        # Donation policy: with resilience the checkpoint is the recovery
+        # path, so the step may donate its carry (the swap-handoff); without
+        # it the undonated previous carry IS the recovery path.
+        self.trainer = ContinualTrainer(
+            run, scenario, exchange=exchange, ckpt_dir=ckpt_dir,
+            prefetch=False, donate=run.resilience is not None,
+            overrides={"failure_hook": failure_hook} if failure_hook else None)
+        tr = self.trainer
+        if tr.scenario is None or "tokens" not in tr.scenario.item_spec:
+            raise ValueError(
+                "OnlineLearner needs a token scenario (records with "
+                "'tokens'/'labels' rows); got "
+                f"{getattr(tr.scenario, 'name', None)!r}")
+        if tr._step_fn is None:
+            raise ValueError("OnlineLearner needs the fused carry-backend "
+                             "step (mesh pjit serving is not wired yet)")
+        self.scenario = tr.scenario
+        self.seq_len = self.scenario.item_spec["tokens"].shape[0]
+        self.gen_len = self.ocfg.resolved_gen_len(self.seq_len)
+        if (self.ocfg.enabled and self.ocfg.store_decode
+                and self.ocfg.prompt_len + self.gen_len != self.seq_len + 1):
+            raise ValueError(
+                f"prompt_len={self.ocfg.prompt_len} + gen_len={self.gen_len} "
+                f"must equal seq_len+1={self.seq_len + 1} so admitted records "
+                f"fill the scenario's [seq_len] token/label layout "
+                f"(store_decode=False lifts this)")
+        # The serving forward: same model tree as the train side (both come
+        # from build_token_lm on the same run), its own dtype/remat context.
+        model, _, _ = build_token_lm(
+            run, getattr(self.scenario.stream.cfg, "vocab_size", 0))
+        from repro.models import StackCtx
+        self.engine = DecodeEngine(
+            model, StackCtx(cfg=model.cfg, compute_dtype=serve_dtype,
+                            remat="none"),
+            cache_dtype=serve_dtype)
+
+    # ------------------------------------------------------------------ admit
+    def _admit_records(self, req: Dict[str, np.ndarray],
+                       gen: GenResult) -> Dict[str, jnp.ndarray]:
+        """Build buffer records from one round of traffic. With
+        ``store_decode`` the record is prompt ++ continuation (the
+        model-outputs side of the stream) shifted into (tokens, labels);
+        otherwise the raw request rows. The bucket ``label`` is recomputed
+        from the record's own content — generated tokens may wander across
+        vocab bands, and admission must bucket what is actually stored."""
+        if self.ocfg.store_decode:
+            prompts = np.asarray(req["tokens"][:, :self.ocfg.prompt_len])
+            full = np.concatenate([prompts, np.asarray(gen.tokens)], axis=1)
+            tokens = full[:, :-1].astype(np.int32)
+            labels = full[:, 1:].astype(np.int32)
+        else:
+            tokens = np.asarray(req["tokens"], np.int32)
+            labels = np.asarray(req["labels"], np.int32)
+        rec = {"tokens": tokens, "labels": labels}
+        bucket = self.scenario.buffer_task_field
+        if bucket in self.scenario.item_spec and bucket not in rec:
+            stream = self.scenario.stream
+            if hasattr(stream, "bucket_of"):
+                rec[bucket] = stream.bucket_of(tokens)
+            else:
+                rec[bucket] = np.asarray(req[bucket], np.int32)
+        return {k: jnp.asarray(v) for k, v in rec.items()}
+
+    # -------------------------------------------------------------------- run
+    def run(self) -> OnlineResult:
+        from repro.obs import get_event_bus, get_tracer
+        from repro.strategy import init_carry
+
+        tr, ocfg = self.trainer, self.ocfg
+        tracer, bus = get_tracer(), get_event_bus()
+        key = jax.random.PRNGKey(tr.seed)
+        params = tr.init_params_fn(key)
+        carry = init_carry(params, tr.init_opt_fn(params), tr.item_spec,
+                           tr.rcfg, label_field=tr.label_field, seed=tr.seed)
+        rloop = None
+        tmpl = None
+        if tr.resilience is not None:
+            rloop = tr._resilient_loop(tr._step_fn, tr._stale_step_fn)
+            # host-side template for the exhausted-budget restore: after the
+            # step donates the carry, only the checkpoint can resurrect it
+            tmpl = jax.tree_util.tree_map(np.asarray, carry)
+
+        history: List[Dict[str, float]] = []
+        freshness_evals: List[Dict[str, float]] = []
+        tok_s: List[float] = []
+        served = admitted = 0
+        restarts = 0
+        train_disabled = False
+        last_handoff = -1  # "round" whose training produced current params
+        train_step = 0
+        last_tokens = None
+
+        for r in range(ocfg.rounds):
+            req = self.scenario.batch(0, ocfg.requests_per_round, r)
+            prompts = jnp.asarray(req["tokens"][:, :ocfg.prompt_len])
+            freshness = r - last_handoff
+            self._gauge("repro_online_freshness_rounds", freshness,
+                        help="serve rounds since the last weight handoff "
+                             "(steady state: 1 = one-step staleness)")
+            with tracer.span("serve_round", cat="serving", round=r,
+                             freshness=freshness):
+                res = self.engine.generate(carry.params, prompts, self.gen_len)
+            last_tokens = res.tokens
+            served += int(prompts.shape[0])
+            tok_s.append(res.tokens_per_second)
+
+            trained = False
+            loss = float("nan")
+            if ocfg.enabled and ocfg.train_every > 0 and not train_disabled:
+                records = self._admit_records(req, res)
+                with tracer.span("online_train", cat="serving", round=r,
+                                 steps=ocfg.train_every):
+                    try:
+                        if rloop is not None:
+                            carry, hist, _ = rloop.run(
+                                carry, lambda s, _rec=records: _rec, key,
+                                ocfg.train_every, start_step=train_step,
+                                failure_hook=self.trainer._failure_hook)
+                            restarts += int(rloop.stats.get("restarts", 0))
+                            metrics = hist[-1] if hist else {}
+                        else:
+                            hook = self.trainer._failure_hook
+                            for i in range(ocfg.train_every):
+                                if hook is not None:
+                                    hook(train_step + i)
+                                carry, metrics = tr._step_fn(
+                                    carry, records,
+                                    jax.random.fold_in(key, train_step + i))
+                        trained = True
+                    except Exception as e:  # noqa: BLE001 — serve must survive
+                        train_disabled = True
+                        if rloop is not None and tmpl is not None:
+                            # the donated carry is gone; fall back to the last
+                            # checkpointed state and keep serving from it
+                            restored, _ = rloop.ckpt.restore(tmpl)
+                            carry = jax.tree_util.tree_map(jnp.asarray,
+                                                           restored)
+                        bus.publish("online_train_disabled", source="serving",
+                                    round=r, error=type(e).__name__,
+                                    detail=str(e)[:200])
+                if trained:
+                    train_step += ocfg.train_every
+                    admitted += int(prompts.shape[0])
+                    loss = float(metrics.get("loss", float("nan")))
+                    with tracer.span("weight_handoff", cat="serving", round=r):
+                        # publish: next round's decode reads the new params
+                        jax.block_until_ready(carry.params)
+                    last_handoff = r
+                    bus.publish("online_admit", source="serving", round=r,
+                                rows=int(prompts.shape[0]),
+                                buffer_fill=float(metrics.get(
+                                    "buffer_fill", float("nan"))))
+
+            rate = admitted / max(served, 1)
+            self._gauge("repro_online_admission_rate", rate,
+                        help="admitted request rows / served request rows")
+            self._gauge("repro_online_decode_tokens_per_second",
+                        res.tokens_per_second,
+                        help="per-sequence greedy decode throughput")
+            bus.publish("online_round", source="serving", round=r,
+                        trained=trained, tokens_per_second=res.tokens_per_second,
+                        freshness=freshness)
+            history.append({"round": r, "loss": loss, "trained": float(trained),
+                            "freshness": float(freshness),
+                            "tokens_per_second": res.tokens_per_second,
+                            "admission_rate": rate})
+            if (ocfg.freshness_every and (r + 1) % ocfg.freshness_every == 0
+                    and tr.eval_fn is not None):
+                phase, _ = self.scenario.stream.phase_weight(r) \
+                    if hasattr(self.scenario.stream, "phase_weight") else (0, 0)
+                freshness_evals.append({
+                    "round": r, "phase": phase,
+                    "accuracy": tr.eval_fn(carry.params, phase)})
+
+        accuracy = []
+        if tr.eval_fn is not None:
+            accuracy = [tr.eval_fn(carry.params, p)
+                        for p in range(tr.num_tasks)]
+        self._gauge("repro_online_restarts", restarts,
+                    help="train-side ResilientLoop restarts absorbed")
+        return OnlineResult(
+            history=history,
+            decode_tokens_per_second=float(np.mean(tok_s)) if tok_s else 0.0,
+            admission_rate=admitted / max(served, 1),
+            freshness_rounds=float(history[-1]["freshness"]) if history else 0.0,
+            accuracy=accuracy, restarts=restarts,
+            train_disabled=train_disabled, freshness_evals=freshness_evals,
+            params=carry.params, carry=carry, last_tokens=last_tokens)
+
+    def _gauge(self, name: str, value, help: str = ""):
+        if self.registry is not None:
+            self.registry.set(name, float(value), help=help)

@@ -1,0 +1,292 @@
+"""repro.serving: task-free drift stream, admission, and the serve/train
+interleave (DESIGN.md §12).
+
+Covers the three PR-8 contracts: (a) no-task-id bucketing bounds on the drift
+stream (mirroring the blurry_boundary mixing-bounds test), (b) reservoir
+admission unbiasedness under a drifting label distribution, (c) bit-exact
+parity of the serve path with online learning disabled vs. the historical
+``launch/serve.py`` decode loop — plus the failure-containment contract that a
+train-side failure never kills serving.
+"""
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+from repro.buffer.api import buffer_update, init_from_config  # noqa: E402
+from repro.configs.base import (OnlineConfig, RehearsalConfig,  # noqa: E402
+                                ResilienceConfig, RunConfig, ScenarioConfig,
+                                TrainConfig)
+from repro.data import DriftStreamConfig, DriftTokenStream  # noqa: E402
+from repro.runtime.fault_tolerance import InjectedFailure  # noqa: E402
+from repro.scenario import get_scenario  # noqa: E402
+from repro.scenario.scenarios import build_token_lm  # noqa: E402
+from repro.serving import DecodeEngine, OnlineLearner  # noqa: E402
+
+
+def _run(enabled=True, rounds=4, train_every=1, phases=3, seed=0,
+         resilience=None):
+    return RunConfig(
+        train=TrainConfig(optimizer="adamw", peak_lr=3e-3, warmup_steps=2,
+                          linear_scaling=False, compute_dtype="float32"),
+        scenario=ScenarioConfig(name="drift_stream", modality="tokens",
+                                num_tasks=phases, epochs_per_task=1,
+                                steps_per_epoch=4, batch_size=4, seed=seed,
+                                vocab_size=64, seq_len=16),
+        resilience=resilience,
+        online=OnlineConfig(enabled=enabled, rounds=rounds,
+                            requests_per_round=4, prompt_len=12,
+                            train_every=train_every))
+
+
+# ---------------------------------------------------------------------------
+# (a) the task-free stream: no ids, bounded mixing, content-derived buckets
+# ---------------------------------------------------------------------------
+
+
+def test_drift_stream_mixes_without_task_ids():
+    st = DriftTokenStream(DriftStreamConfig(num_phases=3, vocab_size=64,
+                                            seq_len=16, phase_len=20, seed=5))
+    b = st.batch(0, 64, cursor=10)  # halfway through the 0 -> 1 drift
+    assert "task" not in b  # no task id anywhere — the whole point
+    frac_next = (b["label"] == 1).mean()
+    assert 0.15 < frac_next < 0.85  # ~half drifted to the next anchor
+    assert not (b["label"] == 2).any()  # never the anchor after next
+    start = st.batch(0, 64, cursor=0)  # w=0: pure first anchor
+    assert (start["label"] == 0).all()
+    late = st.batch(0, 64, cursor=100)  # past the last drift: clamped
+    assert (late["label"] == 2).all()
+    # the batch signature is task-free: the task argument is ignored
+    again = st.batch(7, 64, cursor=10)
+    assert all(np.array_equal(b[k], again[k]) for k in b)
+
+
+def test_drift_stream_bucket_is_content_derived():
+    st = DriftTokenStream(DriftStreamConfig(num_phases=4, vocab_size=128,
+                                            seq_len=8, phase_len=10))
+    ev = st.eval_set(2, n=8)
+    assert (ev["label"] == 2).all()  # pure anchor slices stay pure
+    # bucket_of recomputes from arbitrary content (e.g. generated tokens)
+    assert st.bucket_of(ev["tokens"]).tolist() == ev["label"].tolist()
+    lo = st.base + 1 * st.span
+    made_up = np.full((2, 8), lo, np.int32)
+    assert (st.bucket_of(made_up) == 1).all()
+
+
+def test_drift_scenario_bucketing_defaults():
+    sc = get_scenario(ScenarioConfig(name="drift_stream", modality="tokens",
+                                     num_tasks=3, vocab_size=64, seq_len=16))
+    assert sc.task_field is None and sc.buffer_task_field == "label"
+    spec = sc.item_spec
+    assert set(spec) == {"tokens", "labels", "label"}
+    assert spec["label"].shape == ()
+    rcfg = sc.apply_defaults(RehearsalConfig())
+    assert rcfg.num_buckets == 3 and rcfg.task_field == "label"
+    assert rcfg.label_field == "labels"  # loss masking keeps the [S] targets
+    with pytest.raises(NotImplementedError):
+        sc.cumulative_batch(1, 4, 0)
+
+
+# ---------------------------------------------------------------------------
+# (b) reservoir admission stays unbiased when the label distribution drifts
+# ---------------------------------------------------------------------------
+
+
+def test_reservoir_admission_unbiased_under_drift():
+    """Admission must stay label-blind while the label mix drifts 0 -> 1.
+
+    The repo's ``reservoir`` policy is the paper's Algorithm 1: a c/b
+    acceptance lottery + uniform random eviction, whose retention profile is
+    *designedly* geometric in accepted-arrival order (NOT a seen-proportional
+    classic reservoir). Unbiasedness under drift therefore means two things:
+    (i) the acceptance lottery ignores the label — each bucket's admitted
+    share tracks its offered share at every point of the drift — and (ii) the
+    retained arrival times match Algorithm 1's analytic survival profile
+    computed from the actually-accepted sequence: the drifting mixture adds
+    no bias beyond the designed recency weighting."""
+    cap, c, per_step, n_steps = 32, 4, 8, 400
+    rcfg = RehearsalConfig(num_buckets=2, slots_per_bucket=cap,
+                           num_candidates=c, mode="async", policy="reservoir",
+                           label_field="t", task_field="label")
+    spec = {"t": jax.ShapeDtypeStruct((), jnp.float32)}
+    state = init_from_config(spec, rcfg)
+    key = jax.random.PRNGKey(0)
+    rng = np.random.default_rng(1)
+    offered = np.zeros(2)
+    admitted = np.zeros(2)
+    accepted_t0 = []  # arrival step of each accepted bucket-0 candidate
+    for s in range(n_steps):
+        p0 = 1.0 - s / n_steps  # linear drift of the bucket mix
+        labels = (rng.random(per_step) >= p0).astype(np.int32)
+        t = np.full(per_step, float(s), np.float32)
+        kstep = jax.random.fold_in(key, s)
+        # replay the exact acceptance lottery local_update draws (it splits
+        # the step key into accept/evict halves)
+        k_accept, _ = jax.random.split(kstep)
+        acc = np.asarray(jax.random.uniform(k_accept, (per_step,))
+                         < c / per_step)
+        for lab in (0, 1):
+            offered[lab] += (labels == lab).sum()
+            admitted[lab] += (acc & (labels == lab)).sum()
+        accepted_t0.extend(t[acc & (labels == 0)])
+        state = buffer_update(state, {"t": jnp.asarray(t)},
+                              jnp.asarray(labels), kstep, rcfg)
+    # (i) label-blind lottery: both buckets admitted at the c/b rate, and the
+    # seen counters track the offered counts exactly
+    assert np.array_equal(np.asarray(state.seen), offered)
+    for lab in (0, 1):
+        assert abs(admitted[lab] / offered[lab] - c / per_step) < 0.07
+    # (ii) retention matches the Alg-1 survival profile of the accepted
+    # sequence: item j of A survives (1-1/cap)^(evictions after it)
+    kept = np.asarray(state.data["t"][0, :int(state.counts[0])])
+    assert len(kept) == cap
+    a = len(accepted_t0)
+    surv = np.array([(1 - 1 / cap) ** (a - max(j + 1, cap))
+                     for j in range(a)])
+    expected_mean = float(np.dot(accepted_t0, surv) / surv.sum())
+    assert abs(kept.mean() - expected_mean) < 0.08 * n_steps
+    assert set(kept.tolist()) <= set(np.asarray(accepted_t0).tolist())
+
+
+# ---------------------------------------------------------------------------
+# (c) serve-path parity: engine == the historical serve.py loop, bit-exact
+# ---------------------------------------------------------------------------
+
+
+def test_engine_matches_legacy_serve_loop():
+    from repro.models import StackCtx
+
+    run = _run(enabled=False)
+    model, _, _ = build_token_lm(run, 64)
+    ctx = StackCtx(cfg=model.cfg, compute_dtype=jnp.float32, remat="none")
+    prompt_len, gen_len, batch = 6, 5, 2
+    max_len = prompt_len + gen_len
+    key = jax.random.PRNGKey(3)
+    params = model.init(key, max_seq=max_len)
+    prompts = jax.random.randint(key, (batch, prompt_len), 0,
+                                 model.cfg.vocab_size)
+
+    # the pre-serving-subsystem launch/serve.py loop, verbatim
+    caches = model.init_cache(params, batch, max_len, dtype=jnp.float32)
+    decode = jax.jit(lambda p, b, c, i: model.decode(p, b, c, i, ctx))
+    logits = None
+    for t in range(prompt_len):
+        logits, caches = decode(params, {"token": prompts[:, t:t + 1]},
+                                caches, jnp.int32(t))
+    tok = jnp.argmax(logits[:, -1, :], axis=-1)[:, None]
+    out = [tok]
+    for t in range(prompt_len, max_len - 1):
+        logits, caches = decode(params, {"token": tok}, caches, jnp.int32(t))
+        tok = jnp.argmax(logits[:, -1, :], axis=-1)[:, None]
+        out.append(tok)
+    legacy = np.asarray(jnp.concatenate(out, axis=1))
+
+    res = DecodeEngine(model, ctx).generate(params, prompts, gen_len)
+    assert np.array_equal(np.asarray(res.tokens), legacy)
+
+
+def test_online_disabled_is_pure_serving():
+    run = _run(enabled=False, rounds=3)
+    lrn = OnlineLearner(run)
+    res = lrn.run()
+    # params bit-identical to init: serving never touched the train side
+    p0 = lrn.trainer.init_params_fn(jax.random.PRNGKey(run.scenario.seed))
+    assert jax.tree_util.tree_all(jax.tree_util.tree_map(
+        lambda a, b: bool(jnp.array_equal(a, b)), p0, res.params))
+    assert res.admission_rate == 0.0
+    assert len(res.history) == 3
+    # and the decode is exactly what the engine produces for those weights
+    req = lrn.scenario.batch(0, 4, 2)
+    ref = lrn.engine.generate(p0, jnp.asarray(req["tokens"][:, :12]),
+                              lrn.gen_len)
+    assert np.array_equal(np.asarray(res.last_tokens),
+                          np.asarray(ref.tokens))
+
+
+# ---------------------------------------------------------------------------
+# the interleave: learning happens, staleness is one round, failures contained
+# ---------------------------------------------------------------------------
+
+
+def test_online_learner_learns_and_serves():
+    lrn = OnlineLearner(_run(enabled=True, rounds=4, train_every=2))
+    res = lrn.run()
+    assert len(res.history) == 4
+    losses = [h["loss"] for h in res.history]
+    assert np.isfinite(losses).all() and losses[-1] < losses[0]
+    assert res.admission_rate == 1.0
+    # steady-state freshness is exactly 1: the one-step-stale handoff
+    assert [h["freshness"] for h in res.history] == [1.0] * 4
+    assert float(res.carry.buffer.counts.sum()) > 0  # traffic was admitted
+    p0 = lrn.trainer.init_params_fn(jax.random.PRNGKey(0))
+    changed = jax.tree_util.tree_map(
+        lambda a, b: not np.array_equal(np.asarray(a), np.asarray(b)),
+        p0, res.params)
+    assert any(jax.tree_util.tree_leaves(changed))
+    assert res.last_tokens.shape == (4, lrn.gen_len)
+
+
+def test_online_train_failure_never_kills_serving_unresilient():
+    def hook(step):
+        raise InjectedFailure("always down")
+
+    lrn = OnlineLearner(_run(enabled=True, rounds=3), failure_hook=hook)
+    res = lrn.run()
+    assert len(res.history) == 3  # every round still served
+    assert res.train_disabled and res.admission_rate == 0.0
+    # no resilience config -> the undonated previous carry keeps serving:
+    # params are exactly the init weights
+    p0 = lrn.trainer.init_params_fn(jax.random.PRNGKey(0))
+    assert jax.tree_util.tree_all(jax.tree_util.tree_map(
+        lambda a, b: bool(jnp.array_equal(a, b)), p0, res.params))
+
+
+def test_online_resilient_restart_then_disable(tmp_path):
+    res_cfg = ResilienceConfig(checkpoint_every=1, max_restarts=3,
+                               backoff_base=0.0)
+    fired = []
+
+    def transient(step):
+        if step == 1 and not fired:
+            fired.append(step)
+            raise InjectedFailure("blip")
+
+    lrn = OnlineLearner(_run(enabled=True, rounds=3, resilience=res_cfg),
+                        ckpt_dir=str(tmp_path / "a"), failure_hook=transient)
+    res = lrn.run()
+    assert res.restarts >= 1 and not res.train_disabled
+    assert len(res.history) == 3 and res.admission_rate == 1.0
+
+    def persistent(step):
+        if step >= 1:
+            raise InjectedFailure("dead")
+
+    lrn2 = OnlineLearner(
+        _run(enabled=True, rounds=3,
+             resilience=ResilienceConfig(checkpoint_every=1, max_restarts=1,
+                                         backoff_base=0.0)),
+        ckpt_dir=str(tmp_path / "b"), failure_hook=persistent)
+    res2 = lrn2.run()
+    assert len(res2.history) == 3  # serving survived the exhausted budget
+    assert res2.train_disabled
+    assert sum(h["trained"] for h in res2.history) == 1  # round 0 only
+    # the restored last-good weights still decode finite logits
+    assert np.isfinite([h["tokens_per_second"] for h in res2.history]).all()
+    assert res2.history[-1]["freshness"] == 2.0  # staleness grows once dead
+
+
+def test_online_config_validation():
+    with pytest.raises(ValueError):
+        OnlineConfig(rounds=0)
+    with pytest.raises(ValueError):
+        OnlineConfig(prompt_len=0)
+    assert OnlineConfig(prompt_len=12).resolved_gen_len(16) == 5
+    with pytest.raises(ValueError):
+        OnlineConfig(prompt_len=20).resolved_gen_len(16)
+    # record-layout mismatch is rejected at construction, not mid-round
+    run = _run(enabled=True)
+    run = run.replace(online=run.online.__class__(
+        enabled=True, prompt_len=12, gen_len=3))
+    with pytest.raises(ValueError):
+        OnlineLearner(run)
