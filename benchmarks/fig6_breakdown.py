@@ -175,7 +175,8 @@ def _sync_vs_pipelined(h, rcfg, params, key, n=30):
     p, opt, buf, pipe = c0.params, c0.opt, c0.buffer, c0.pipe
     batch = load(0)
     p, opt, m = train_half(p, opt, pipe, batch)  # compile both programs
-    buf, pipe = issue_half(buf, pipe, batch, key)
+    # warm-up key off the timing loop's fold_in(key, 0..n-1) lineage
+    buf, pipe = issue_half(buf, pipe, batch, jax.random.fold_in(key, n))
     jax.block_until_ready((m["loss"], buf.counts))
     batch = load(0)
     t0 = time.perf_counter()
@@ -229,7 +230,9 @@ def _obs_overhead(h, rcfg, params, key, n=30, trials=3):
         for s in range(n):
             t0 = time.perf_counter()
             p, opt, m = train_half(p, opt, pipe, batch)
-            buf, pipe = issue_half(buf, pipe, batch, jax.random.fold_in(key, s))
+            # _obs_overhead *times* real train steps; the RNG here drives the
+            # measured workload, not telemetry (RPL041 name-heuristic misfire)
+            buf, pipe = issue_half(buf, pipe, batch, jax.random.fold_in(key, s))  # replint: disable=RPL041
             batch = load(s + 1)
             float(m["loss"])
             best = min(best, time.perf_counter() - t0)

@@ -94,8 +94,39 @@ def _git_sha() -> str:
         return "unknown"
 
 
+def resolve_tolerance(key: str, tolerance: float,
+                      series_tolerance: Optional[Dict[str, float]] = None
+                      ) -> float:
+    """Per-series override by longest matching key prefix, else the default.
+    Lets noisy series (elastic reshard, restore wall-clock) gate looser than
+    the steady-state throughput series without unblocking either."""
+    best = ""
+    if series_tolerance:
+        for prefix in series_tolerance:
+            if key.startswith(prefix) and len(prefix) > len(best):
+                best = prefix
+    return series_tolerance[best] if best else tolerance
+
+
+def parse_series_tolerance(spec: str) -> Dict[str, float]:
+    """'fig8/=0.6,obs/=0.5' -> {'fig8/': 0.6, 'obs/': 0.5}."""
+    out: Dict[str, float] = {}
+    for part in spec.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        if "=" not in part:
+            raise ValueError(
+                f"--series-tolerance entry {part!r} must be prefix=tol")
+        prefix, tol = part.split("=", 1)
+        out[prefix.strip()] = float(tol)
+    return out
+
+
 def compare(prev: Dict[str, float], cur: Dict[str, float],
-            tolerance: float) -> Tuple[List[str], List[str]]:
+            tolerance: float,
+            series_tolerance: Optional[Dict[str, float]] = None
+            ) -> Tuple[List[str], List[str]]:
     """(report_lines, regressions) for metrics present in both entries."""
     lines, regressions = [], []
     for key in sorted(set(prev) & set(cur)):
@@ -104,10 +135,12 @@ def compare(prev: Dict[str, float], cur: Dict[str, float],
             continue
         rel = (c - p) / abs(p)
         direction = metric_direction(key)
+        tol = resolve_tolerance(key, tolerance, series_tolerance)
         mark = ""
-        if direction and direction * rel < -tolerance:
+        if direction and direction * rel < -tol:
             mark = "  <-- REGRESSION"
-            regressions.append(f"{key}: {p:.4g} -> {c:.4g} ({rel:+.1%})")
+            regressions.append(
+                f"{key}: {p:.4g} -> {c:.4g} ({rel:+.1%}, tol {tol:.0%})")
         if abs(rel) > 0.02 or mark:
             lines.append(f"  {key}: {p:.4g} -> {c:.4g} ({rel:+.1%}){mark}")
     return lines, regressions
@@ -117,6 +150,7 @@ def run(bench_glob: str = "BENCH_*.json",
         out_path: str = "benchmarks/results/trajectory.jsonl",
         gate: bool = False, tolerance: float = DEFAULT_TOLERANCE,
         block: Optional[List[str]] = None,
+        series_tolerance: Optional[Dict[str, float]] = None,
         now: Optional[float] = None) -> dict:
     paths = glob.glob(bench_glob)
     if not paths:
@@ -134,7 +168,8 @@ def run(bench_glob: str = "BENCH_*.json",
     regressions: List[str] = []
     if history:
         prev = history[-1]
-        lines, regressions = compare(prev["metrics"], entry["metrics"], tolerance)
+        lines, regressions = compare(prev["metrics"], entry["metrics"],
+                                     tolerance, series_tolerance)
         print(f"trajectory: vs previous entry {prev['sha']} "
               f"({len(history)} prior entries)")
         for ln in lines:
@@ -240,6 +275,10 @@ def main():
                     help="comma list of metric-key prefixes (e.g. 'fig6/,fig7/')"
                          " whose regressions are blocking (exit 2); regressions"
                          " outside them exit 3. Empty: everything blocks")
+    ap.add_argument("--series-tolerance", default="", metavar="PREFIX=TOL,...",
+                    help="per-series tolerance overrides by longest matching "
+                         "key prefix, e.g. 'fig8/=0.60,obs/restore_s=0.80'; "
+                         "unmatched series use --tolerance")
     ap.add_argument("--plot", action="store_true",
                     help="render the cached series as markdown sparklines "
                          "(no merge) — pipe into $GITHUB_STEP_SUMMARY in CI")
@@ -250,7 +289,8 @@ def main():
         return
     run(bench_glob=args.bench_glob, out_path=args.out, gate=args.gate,
         tolerance=args.tolerance,
-        block=[p for p in args.block.split(",") if p] or None)
+        block=[p for p in args.block.split(",") if p] or None,
+        series_tolerance=parse_series_tolerance(args.series_tolerance) or None)
 
 
 if __name__ == "__main__":

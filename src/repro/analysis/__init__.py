@@ -1,3 +1,9 @@
+from repro.analysis.lint import (
+    Finding,
+    LintResult,
+    lint_paths,
+    lint_source,
+)
 from repro.analysis.roofline import (
     HBM_BW,
     ICI_BW,
@@ -7,5 +13,6 @@ from repro.analysis.roofline import (
     parse_collectives,
 )
 
-__all__ = ["HBM_BW", "ICI_BW", "PEAK_FLOPS", "RooflineResult", "analyze",
+__all__ = ["HBM_BW", "ICI_BW", "PEAK_FLOPS", "Finding", "LintResult",
+           "RooflineResult", "analyze", "lint_paths", "lint_source",
            "parse_collectives"]

@@ -1,0 +1,191 @@
+"""Shared AST machinery for replint rules.
+
+Everything here is module-local static analysis: import-alias resolution,
+dotted-name ("qualname") expansion, and a conservative jit-reachability pass
+(functions decorated with / passed to jax tracing entry points, closed over
+the module's direct-call graph).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Set
+
+# Callables whose function argument is *traced* by jax — Python side effects
+# in the traced function run at trace time (constant-baked), which is exactly
+# the bug class the purity rules hunt.
+TRACING_ENTRY_QUALS = {
+    "jax.jit", "jax.pjit", "jax.experimental.pjit.pjit",
+    "jax.experimental.shard_map.shard_map", "jax.grad", "jax.value_and_grad",
+    "jax.vmap", "jax.pmap", "jax.lax.scan", "jax.lax.while_loop",
+    "jax.lax.cond", "jax.lax.fori_loop", "jax.checkpoint", "jax.remat",
+    "jax.eval_shape", "jax.make_jaxpr",
+}
+# Bare names that are unambiguous tracing entry points even when imported
+# via `from ... import jit` or re-exported through a compat shim.
+TRACING_ENTRY_BARE = {"jit", "pjit", "shard_map"}
+
+
+def import_map(tree: ast.Module) -> Dict[str, str]:
+    """Map local names to fully qualified module/attribute paths.
+
+    ``import jax.numpy as jnp`` -> {"jnp": "jax.numpy"};
+    ``from jax import random`` -> {"random": "jax.random"};
+    ``from jax.random import split`` -> {"split": "jax.random.split"}.
+    Walks the whole tree so function-local imports resolve too.
+    """
+    out: Dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                local = alias.asname or alias.name.split(".")[0]
+                out[local] = alias.name if alias.asname else local
+        elif isinstance(node, ast.ImportFrom) and node.module and node.level == 0:
+            for alias in node.names:
+                if alias.name == "*":
+                    continue
+                local = alias.asname or alias.name
+                out[local] = f"{node.module}.{alias.name}"
+    return out
+
+
+def qualname(node: ast.AST, imports: Dict[str, str]) -> str:
+    """Dotted name of a Name/Attribute chain with the root alias expanded.
+
+    Returns "" for anything that is not a plain dotted chain (calls,
+    subscripts, ...).
+    """
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if not isinstance(node, ast.Name):
+        return ""
+    parts.append(imports.get(node.id, node.id))
+    return ".".join(reversed(parts))
+
+
+def call_qual(call: ast.Call, imports: Dict[str, str]) -> str:
+    return qualname(call.func, imports)
+
+
+def is_tracing_entry(qual: str) -> bool:
+    if not qual:
+        return False
+    if qual in TRACING_ENTRY_QUALS:
+        return True
+    last = qual.rsplit(".", 1)[-1]
+    # compat shims: repro.utils.compat.shard_map etc.
+    return last in TRACING_ENTRY_BARE
+
+
+def decorator_traces(dec: ast.expr, imports: Dict[str, str]) -> bool:
+    """True if a decorator jits/traces the function it decorates.
+
+    Handles ``@jax.jit``, ``@jit``, ``@functools.partial(jax.jit, ...)``,
+    ``@jax.jit(...)`` / ``@shard_map(...)`` call forms.
+    """
+    if is_tracing_entry(qualname(dec, imports)):
+        return True
+    if isinstance(dec, ast.Call):
+        fq = call_qual(dec, imports)
+        if is_tracing_entry(fq):
+            return True
+        if fq.rsplit(".", 1)[-1] == "partial":
+            for arg in dec.args[:1]:
+                if is_tracing_entry(qualname(arg, imports)):
+                    return True
+    return False
+
+
+def _function_defs(tree: ast.Module):
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node
+
+
+def jit_roots(tree: ast.Module, imports: Dict[str, str]) -> Set[ast.AST]:
+    """Function defs directly traced: jit-decorated, or passed by name to a
+    tracing entry point (``jax.jit(step)``, ``shard_map(body, ...)``)."""
+    defs_by_name: Dict[str, List[ast.AST]] = {}
+    for fn in _function_defs(tree):
+        defs_by_name.setdefault(fn.name, []).append(fn)
+
+    roots: Set[ast.AST] = set()
+    for fn in _function_defs(tree):
+        if any(decorator_traces(d, imports) for d in fn.decorator_list):
+            roots.add(fn)
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        fq = call_qual(node, imports)
+        args = list(node.args)
+        if fq.rsplit(".", 1)[-1] == "partial" and args:
+            # functools.partial(jax.jit, ...)(fn) — the traced fn arrives
+            # later; treat partial(jit, f) with f positional as tracing f.
+            if is_tracing_entry(qualname(args[0], imports)):
+                args = args[1:]
+            else:
+                continue
+        elif not is_tracing_entry(fq):
+            continue
+        for arg in args:
+            if isinstance(arg, ast.Name):
+                for fn in defs_by_name.get(arg.id, ()):
+                    roots.add(fn)
+            elif isinstance(arg, ast.Lambda):
+                roots.add(arg)
+    return roots
+
+
+def jit_reachable(tree: ast.Module, roots: Set[ast.AST]) -> Set[ast.AST]:
+    """Close the root set over the module-local direct-call graph.
+
+    A call by bare name from a reachable function marks every same-module
+    function of that name reachable (conservative, flow-insensitive).
+    """
+    defs_by_name: Dict[str, List[ast.AST]] = {}
+    for fn in _function_defs(tree):
+        defs_by_name.setdefault(fn.name, []).append(fn)
+
+    def callees(fn: ast.AST) -> Iterator[ast.AST]:
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call) and isinstance(node.func, ast.Name):
+                for target in defs_by_name.get(node.func.id, ()):
+                    if target is not fn:
+                        yield target
+
+    reachable = set(roots)
+    frontier = list(roots)
+    while frontier:
+        fn = frontier.pop()
+        for target in callees(fn):
+            if target not in reachable:
+                reachable.add(target)
+                frontier.append(target)
+    return reachable
+
+
+def enclosing_functions(tree: ast.Module) -> Dict[ast.AST, Optional[ast.AST]]:
+    """Map every node to its innermost enclosing function def (or None)."""
+    out: Dict[ast.AST, Optional[ast.AST]] = {}
+
+    def visit(node: ast.AST, fn: Optional[ast.AST]) -> None:
+        out[node] = fn
+        child_fn = node if isinstance(
+            node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)) else fn
+        for child in ast.iter_child_nodes(node):
+            visit(child, child_fn)
+
+    visit(tree, None)
+    return out
+
+
+def int_literals(node: ast.AST) -> Set[int]:
+    """All int constants anywhere under ``node`` — resolves donate_argnums
+    expressions like ``(0,) if donate else ()`` to the may-donate set {0}."""
+    out: Set[int] = set()
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Constant) and isinstance(sub.value, int) \
+                and not isinstance(sub.value, bool):
+            out.add(sub.value)
+    return out

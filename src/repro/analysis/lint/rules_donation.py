@@ -1,0 +1,172 @@
+"""RPL010 — donation safety (use-after-donate).
+
+``jax.jit(..., donate_argnums=...)`` invalidates the donated input arrays the
+moment the call runs: the buffers are reused for the outputs, and any later
+read raises (or worse, on some backends silently aliases). This repo donates
+the whole train carry on every step, so the classic bug is::
+
+    step = jax.jit(body, donate_argnums=(0,))
+    new_carry, m = step(carry, batch, key)
+    loss_history.append(carry["loss"])   # carry's buffers are gone
+
+The check is module-local and name-based: collect callables known to donate
+(``name = jax.jit(f, donate_argnums=...)`` bindings and functions decorated
+with ``@functools.partial(jax.jit, donate_argnums=...)``), then linearly scan
+each function — after a bare name is passed at a donated position, any read of
+it before reassignment is flagged. ``donate_argnums`` expressions that cannot
+be resolved statically (``(0,) if donate else ()``) resolve to the union of
+int literals they contain, i.e. the may-donate set.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Set, Tuple
+
+from repro.analysis.lint import FileContext, Finding, Rule, register_rule
+from repro.analysis.lint.common import int_literals, is_tracing_entry, qualname
+
+
+def _donated_positions(call: ast.Call, ctx: FileContext) -> Set[int]:
+    """Donated argnums of a ``jax.jit(...)``/``partial(jax.jit, ...)`` call."""
+    for kw in call.keywords:
+        if kw.arg in ("donate_argnums", "donate_argnames"):
+            return int_literals(kw.value)
+    return set()
+
+
+def _donating_callables(tree: ast.Module, ctx: FileContext) -> Dict[str, Set[int]]:
+    """name -> donated positions, for module-visible donating callables."""
+    out: Dict[str, Set[int]] = {}
+    for node in ast.walk(tree):
+        # name = jax.jit(fn, donate_argnums=...)
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+            call = node.value
+            if is_tracing_entry(qualname(call.func, ctx.imports)):
+                positions = _donated_positions(call, ctx)
+                if positions:
+                    for target in node.targets:
+                        if isinstance(target, ast.Name):
+                            out[target.id] = positions
+        # @jax.jit(donate_argnums=...) / @functools.partial(jax.jit, donate_argnums=...)
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                if not isinstance(dec, ast.Call):
+                    continue
+                fq = qualname(dec.func, ctx.imports)
+                inner_ok = is_tracing_entry(fq) or (
+                    fq.rsplit(".", 1)[-1] == "partial" and dec.args
+                    and is_tracing_entry(qualname(dec.args[0], ctx.imports)))
+                if not inner_ok:
+                    continue
+                positions = _donated_positions(dec, ctx)
+                if positions:
+                    out[node.name] = positions
+    return out
+
+
+class UseAfterDonate(Rule):
+    code = "RPL010"
+    name = "use-after-donate"
+    rationale = ("Donated buffers are dead after the call; reading them "
+                 "raises or aliases the step's outputs.")
+
+    def check(self, tree: ast.Module, ctx: FileContext) -> Iterator[Finding]:
+        donors = _donating_callables(tree, ctx)
+        if not donors:
+            return
+        for fn in ast.walk(tree):
+            if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                yield from self._scan_function(fn, donors, ctx)
+
+    def _scan_function(self, fn: ast.AST, donors: Dict[str, Set[int]],
+                       ctx: FileContext) -> Iterator[Finding]:
+        # dead: name -> line where it was donated
+        dead: Dict[str, int] = {}
+        seen: Set[Tuple[int, int, str]] = set()
+
+        def clear_targets(targets) -> None:
+            for target in targets:
+                names = [target] if isinstance(target, ast.Name) else [
+                    e for e in getattr(target, "elts", [])
+                    if isinstance(e, ast.Name)]
+                for name in names:
+                    dead.pop(name.id, None)
+
+        def visit_expr(node: ast.expr) -> Iterator[Finding]:
+            if isinstance(node, (ast.Lambda, ast.FunctionDef,
+                                 ast.AsyncFunctionDef)):
+                return
+            if isinstance(node, ast.Call):
+                for sub in node.args + [kw.value for kw in node.keywords]:
+                    yield from visit_expr(sub)
+                yield from visit_expr(node.func)
+                # donation happens after the args were read
+                if isinstance(node.func, ast.Name) and node.func.id in donors:
+                    for pos in donors[node.func.id]:
+                        if pos < len(node.args) and \
+                                isinstance(node.args[pos], ast.Name):
+                            dead[node.args[pos].id] = node.lineno
+                return
+            if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Load):
+                if node.id in dead:
+                    site = (node.lineno, node.col_offset, node.id)
+                    if site not in seen:
+                        seen.add(site)
+                        yield self.finding(
+                            ctx, node,
+                            f"`{node.id}` was donated on line "
+                            f"{dead[node.id]} (donate_argnums) and must not "
+                            "be read afterwards")
+                return
+            for child in ast.iter_child_nodes(node):
+                if isinstance(child, ast.expr):
+                    yield from visit_expr(child)
+
+        def visit_stmts(body) -> Iterator[Finding]:
+            for stmt in body:
+                if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                     ast.ClassDef)):
+                    continue
+                if isinstance(stmt, ast.Assign):
+                    yield from visit_expr(stmt.value)
+                    clear_targets(stmt.targets)
+                elif isinstance(stmt, (ast.AnnAssign, ast.AugAssign)):
+                    if stmt.value is not None:
+                        yield from visit_expr(stmt.value)
+                    clear_targets([stmt.target])
+                elif isinstance(stmt, ast.For):
+                    yield from visit_expr(stmt.iter)
+                    clear_targets([stmt.target])
+                    yield from visit_stmts(stmt.body)
+                    yield from visit_stmts(stmt.orelse)
+                elif isinstance(stmt, ast.While):
+                    yield from visit_expr(stmt.test)
+                    yield from visit_stmts(stmt.body)
+                    yield from visit_stmts(stmt.orelse)
+                elif isinstance(stmt, ast.If):
+                    yield from visit_expr(stmt.test)
+                    snapshot = dict(dead)
+                    yield from visit_stmts(stmt.body)
+                    after_then = dict(dead)
+                    dead.clear(); dead.update(snapshot)
+                    yield from visit_stmts(stmt.orelse)
+                    dead.update(after_then)  # dead if either branch donated
+                elif isinstance(stmt, (ast.With, ast.AsyncWith)):
+                    for item in stmt.items:
+                        yield from visit_expr(item.context_expr)
+                    yield from visit_stmts(stmt.body)
+                elif isinstance(stmt, ast.Try):
+                    yield from visit_stmts(stmt.body)
+                    for handler in stmt.handlers:
+                        yield from visit_stmts(handler.body)
+                    yield from visit_stmts(stmt.orelse)
+                    yield from visit_stmts(stmt.finalbody)
+                else:
+                    for child in ast.iter_child_nodes(stmt):
+                        if isinstance(child, ast.expr):
+                            yield from visit_expr(child)
+
+        yield from visit_stmts(fn.body)
+
+
+register_rule(UseAfterDonate())

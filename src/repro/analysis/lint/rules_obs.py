@@ -1,0 +1,119 @@
+"""Obs neutrality rules — telemetry observes, it never participates.
+
+The obs contract (DESIGN.md §11) is that fingerprints are bit-identical obs
+on/off: gauges ride the step outputs as *reads* of training state and nothing
+flows back. Two ways code has historically threatened that contract:
+
+RPL040 — obs feedback: a value produced by an obs read
+(``obs_step_metrics``/``step_metrics``/``buffer_obs``/``tiered_obs``/
+``obs_aux``) is passed into a state constructor or state-update call
+(``TrainCarry``/``PipelinedRehearsalCarry``/``issue_sample``/
+``buffer_update``/``tiered_update``/...). Metrics dicts may be merged into
+the *metrics* output, never into the carry.
+
+RPL041 — RNG in obs: any ``jax.random.*`` call inside an obs module
+(``obs/`` path) or an obs-named function. Telemetry drawing from the PRNG
+stream shifts every downstream key and breaks obs-on/off parity.
+"""
+from __future__ import annotations
+
+import ast
+import os
+from typing import Iterator, Set
+
+from repro.analysis.lint import FileContext, Finding, Rule, register_rule
+from repro.analysis.lint.common import qualname
+
+OBS_READ_FUNCS = {"obs_step_metrics", "step_metrics", "buffer_obs",
+                  "tiered_obs", "obs_aux", "obs_metrics"}
+STATE_SINK_FUNCS = {"TrainCarry", "PipelinedRehearsalCarry", "TieredState",
+                    "issue_sample", "buffer_update", "tiered_update",
+                    "local_update", "update_and_sample", "buffer_store",
+                    "apply_updates"}
+
+
+class ObsFeedback(Rule):
+    code = "RPL040"
+    name = "obs-feedback"
+    rationale = ("Obs gauges feeding back into fingerprinted state breaks "
+                 "the bit-identical obs-on/off contract.")
+
+    def check(self, tree: ast.Module, ctx: FileContext) -> Iterator[Finding]:
+        for fn in ast.walk(tree):
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            obs_names = self._obs_valued_names(fn, ctx)
+            if not obs_names:
+                continue
+            for node in ast.walk(fn):
+                if not isinstance(node, ast.Call):
+                    continue
+                fq = qualname(node.func, ctx.imports)
+                last = fq.rsplit(".", 1)[-1] if fq else ""
+                # direct: state_sink(..., obs_read(...), ...)
+                args = list(node.args) + [kw.value for kw in node.keywords]
+                if last in STATE_SINK_FUNCS:
+                    for arg in args:
+                        hit = self._mentions_obs(arg, obs_names, ctx)
+                        if hit:
+                            yield self.finding(
+                                ctx, arg,
+                                f"obs-derived value `{hit}` flows into state "
+                                f"constructor `{last}`; telemetry must not "
+                                "feed back into fingerprinted state")
+
+    @staticmethod
+    def _obs_valued_names(fn: ast.AST, ctx: FileContext) -> Set[str]:
+        out: Set[str] = set()
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign) and \
+                    isinstance(node.value, ast.Call):
+                fq = qualname(node.value.func, ctx.imports)
+                if fq and fq.rsplit(".", 1)[-1] in OBS_READ_FUNCS:
+                    for target in node.targets:
+                        if isinstance(target, ast.Name):
+                            out.add(target.id)
+        return out
+
+    @staticmethod
+    def _mentions_obs(arg: ast.expr, obs_names: Set[str],
+                      ctx: FileContext) -> str:
+        for sub in ast.walk(arg):
+            if isinstance(sub, ast.Name) and sub.id in obs_names:
+                return sub.id
+            if isinstance(sub, ast.Call):
+                fq = qualname(sub.func, ctx.imports)
+                if fq and fq.rsplit(".", 1)[-1] in OBS_READ_FUNCS:
+                    return fq
+        return ""
+
+
+class RngInObs(Rule):
+    code = "RPL041"
+    name = "rng-in-obs"
+    rationale = ("Telemetry consuming PRNG keys shifts every downstream "
+                 "stream and breaks obs-on/off parity.")
+
+    def check(self, tree: ast.Module, ctx: FileContext) -> Iterator[Finding]:
+        parts = ctx.path.replace(os.sep, "/").split("/")
+        obs_module = "obs" in parts[:-1]
+        for fn in ast.walk(tree):
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            obs_fn = obs_module or "obs" in fn.name.split("_") or \
+                fn.name in OBS_READ_FUNCS
+            if not obs_fn:
+                continue
+            for node in ast.walk(fn):
+                if isinstance(node, ast.Call):
+                    fq = qualname(node.func, ctx.imports)
+                    if fq.startswith("jax.random.") and \
+                            not fq.endswith(".PRNGKey"):
+                        yield self.finding(
+                            ctx, node,
+                            f"`{fq}(...)` inside obs code `{fn.name}`; "
+                            "telemetry must not consume RNG")
+
+
+register_rule(ObsFeedback())
+register_rule(RngInObs())

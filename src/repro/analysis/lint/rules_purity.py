@@ -1,0 +1,143 @@
+"""Jit purity rules — functions traced by jax must be pure.
+
+RPL020 — host side effects in jit-reachable code. Python executes at *trace*
+time: ``time.time()`` bakes the compile-time clock into the program as a
+constant, ``np.random`` draws once and freezes, prints/logging/file I/O fire
+on compilation (then never again), ``os.environ`` reads snapshot the
+tracer's environment. All are silent wrong-answer bugs in a cached-jit world.
+
+RPL021 — Python truthiness on traced values. ``if jnp.any(mask):`` forces a
+trace-time concretization error at best; under ``jax.ensure_compile_time_eval``
+or on concrete aval paths it silently branches on compile-time data. Traced
+control flow belongs in ``jnp.where``/``lax.cond``. The check is heuristic to
+stay quiet on config flags: only tests that *call into* jax/jnp/lax are
+flagged, not plain-name tests like ``if donate:``.
+
+Scope for both rules: functions decorated with / passed to jit, pjit,
+shard_map, grad, vmap, scan, ... plus the module-local call-graph closure
+(see ``common.jit_roots`` / ``common.jit_reachable``).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Optional, Set, Tuple
+
+from repro.analysis.lint import FileContext, Finding, Rule, register_rule
+from repro.analysis.lint.common import qualname
+
+# qual prefixes whose call is a host side effect (RPL020)
+HOST_CALL_PREFIXES = (
+    "time.", "numpy.random.", "random.", "os.environ", "os.getenv",
+    "os.putenv", "os.remove", "os.unlink", "os.system", "os.popen",
+    "os.makedirs", "os.mkdir", "subprocess.", "logging.", "shutil.",
+    "sys.stdout", "sys.stderr", "builtins.print", "builtins.open",
+    "builtins.input", "socket.", "requests.", "urllib.",
+)
+HOST_CALL_EXACT = {"print", "open", "input", "breakpoint"}
+# attribute-method calls on names that look like loggers
+LOGGER_METHODS = {"debug", "info", "warning", "error", "exception", "critical"}
+LOGGER_NAMES = {"log", "logger", "logging"}
+
+# roots whose calls produce traced values (RPL021 truthiness heuristic)
+TRACED_CALL_PREFIXES = ("jax.numpy.", "jax.lax.", "jax.nn.", "jax.scipy.",
+                        "jax.random.", "jax.")
+
+
+def _host_effect(call: ast.Call, ctx: FileContext) -> Optional[str]:
+    fq = qualname(call.func, ctx.imports)
+    if fq in HOST_CALL_EXACT:
+        return fq
+    if fq:
+        probe = fq + "."
+        for prefix in HOST_CALL_PREFIXES:
+            if probe.startswith(prefix) or fq.startswith(prefix):
+                return fq
+    if isinstance(call.func, ast.Attribute) and \
+            call.func.attr in LOGGER_METHODS and \
+            isinstance(call.func.value, ast.Name) and \
+            call.func.value.id in LOGGER_NAMES:
+        return f"{call.func.value.id}.{call.func.attr}"
+    return None
+
+
+def _calls_traced_api(node: ast.expr, ctx: FileContext) -> Optional[str]:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call):
+            fq = qualname(sub.func, ctx.imports)
+            if fq and fq.startswith(TRACED_CALL_PREFIXES):
+                return fq
+    return None
+
+
+def _walk_own(fn: ast.AST) -> Iterator[ast.AST]:
+    """Walk a function body without descending into nested function defs
+    (those are separate jit-reachability decisions)."""
+    stack = list(ast.iter_child_nodes(fn))
+    while stack:
+        node = stack.pop()
+        yield node
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)):
+            continue
+        stack.extend(ast.iter_child_nodes(node))
+
+
+class HostEffectsInJit(Rule):
+    code = "RPL020"
+    name = "host-effect-in-jit"
+    rationale = ("Host side effects run once at trace time and bake "
+                 "constants into the cached program.")
+
+    def check(self, tree: ast.Module, ctx: FileContext) -> Iterator[Finding]:
+        for fn in ctx.jit_reachable:
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            for node in _walk_own(fn):
+                if not isinstance(node, ast.Call):
+                    continue
+                effect = _host_effect(node, ctx)
+                if effect:
+                    yield self.finding(
+                        ctx, node,
+                        f"host side effect `{effect}(...)` inside "
+                        f"jit-reachable `{fn.name}` runs at trace time, not "
+                        "per step")
+
+
+class TracedTruthiness(Rule):
+    code = "RPL021"
+    name = "traced-truthiness"
+    rationale = ("Python `if`/`while`/`assert` on traced arrays concretizes "
+                 "at trace time; use jnp.where / lax.cond.")
+
+    def check(self, tree: ast.Module, ctx: FileContext) -> Iterator[Finding]:
+        seen: Set[Tuple[int, int]] = set()
+        for fn in ctx.jit_reachable:
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            for node in _walk_own(fn):
+                test: Optional[ast.expr] = None
+                kind = ""
+                if isinstance(node, (ast.If, ast.While)):
+                    test, kind = node.test, type(node).__name__.lower()
+                elif isinstance(node, ast.Assert):
+                    test, kind = node.test, "assert"
+                elif isinstance(node, ast.IfExp):
+                    test, kind = node.test, "conditional expression"
+                if test is None:
+                    continue
+                fq = _calls_traced_api(test, ctx)
+                if fq is None:
+                    continue
+                site = (test.lineno, test.col_offset)
+                if site in seen:
+                    continue
+                seen.add(site)
+                yield self.finding(
+                    ctx, test,
+                    f"Python {kind} on a traced value (`{fq}(...)`) inside "
+                    f"jit-reachable `{fn.name}`; use jnp.where / jax.lax.cond")
+
+
+register_rule(HostEffectsInJit())
+register_rule(TracedTruthiness())

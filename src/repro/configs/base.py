@@ -513,6 +513,11 @@ class RunConfig:
     # Online continual serving (repro.serving, DESIGN.md §12): disabled by
     # default — the serve path then never touches the buffer or the optimizer.
     online: OnlineConfig = OnlineConfig()
+    # Pipeline race sanitizer (DESIGN.md §13): asserts one-step-stale timing,
+    # logs buffer-slot write/read epochs, and catches use-after-donate at the
+    # step boundary. Host-side bookkeeping only — fingerprints are
+    # bit-identical on/off. Also armed globally by REPRO_SANITIZE=1.
+    sanitize: bool = False
 
     def replace(self, **kw) -> "RunConfig":
         return dataclasses.replace(self, **kw)

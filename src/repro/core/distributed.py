@@ -52,8 +52,11 @@ def init_distributed_from_config(item_spec, rcfg, n_dp: int):
     )
 
 
-def _exchange(items, valid, key, axis_names):
-    """One all_to_all: send item j to peer j, receive one item from every peer."""
+def _exchange(items, valid, axis_names):
+    """One all_to_all: send item j to peer j, receive one item from every peer.
+
+    Deterministic collective — takes no PRNG key. (It used to accept the
+    already-consumed ``k_draw`` and ignore it, a replint RPL001 finding.)"""
     recv = jax.tree_util.tree_map(
         lambda x: jax.lax.all_to_all(x, axis_names, split_axis=0, concat_axis=0, tiled=True),
         items,
@@ -73,7 +76,7 @@ def sample_global(state, key, r: int, axis_names, exchange: str, rcfg=None):
     n = jax.lax.psum(1, axis_names)  # number of peers in the exchange group
     k_draw, k_pick = jax.random.split(key)
     items, valid = buffer_api.buffer_sample(state, k_draw, n, rcfg)
-    recv, recv_valid = _exchange(items, valid, k_draw, axis_names)
+    recv, recv_valid = _exchange(items, valid, axis_names)
     # keep a uniformly random valid r-subset of the n received candidates
     scores = jax.random.uniform(k_pick, (n,)) + jnp.where(recv_valid, 0.0, 1e3)
     take = jnp.argsort(scores)[:r]

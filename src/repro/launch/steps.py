@@ -371,6 +371,15 @@ def build_train_step(
     out_shardings = tuple(shardings[:n_state]) + (NamedSharding(mesh, P()),)
     fn = jax.jit(step, in_shardings=shardings, out_shardings=out_shardings,
                  donate_argnums=donate_argnums)
+    # checked mode: host-side epoch bookkeeping around the compiled step —
+    # never touches array values, so fingerprints stay bit-identical
+    from repro.runtime.sanitizer import resolve_sanitizer, wrap_built_step
+    san = resolve_sanitizer(
+        True if getattr(run, "sanitize", False) else None, "pjit_step")
+    if san is not None:
+        fn = wrap_built_step(fn, san,
+                             pipelined=bool(use_rehearsal and pipelined),
+                             donated_args=len(args) - 2 if donate else 0)
     aux_bytes = {
         name: int(np.prod(s.shape)) * np.dtype(s.dtype).itemsize
         for name, s in aux_spec.items()
@@ -390,6 +399,7 @@ def build_train_step(
         "tokens_per_step": (shape.global_batch + (n_dp * r if use_rehearsal else 0))
         * shape.seq_len,
         "obs": obs_on,
+        "sanitize": san is not None,
     }
     if obs_on:
         from repro.obs.metrics import obs_keys

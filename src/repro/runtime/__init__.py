@@ -4,7 +4,10 @@ from repro.runtime.elastic import reshard_carry, reshard_tiered
 from repro.runtime.fault_tolerance import (TRANSIENT_EXCEPTIONS,
                                            InjectedFailure, ResilientLoop,
                                            StragglerPolicy)
+from repro.runtime.sanitizer import (PipelineRaceSanitizer, SanitizerError,
+                                     sanitize_enabled)
 
-__all__ = ["Autoscaler", "InjectedFailure", "ResilientLoop", "StragglerPolicy",
+__all__ = ["Autoscaler", "InjectedFailure", "PipelineRaceSanitizer",
+           "ResilientLoop", "SanitizerError", "StragglerPolicy",
            "TRANSIENT_EXCEPTIONS", "TrafficSignal", "multiproc",
-           "reshard_carry", "reshard_tiered"]
+           "reshard_carry", "reshard_tiered", "sanitize_enabled"]

@@ -149,6 +149,12 @@ class ResilientLoop:
                     self.ckpt.save(step, carry,
                                    {"cursor": step, "history_len": len(history)})
             except retry_on as e:
+                from repro.runtime.sanitizer import SanitizerError
+                if isinstance(e, SanitizerError):
+                    # a race is a driver bug, not a fault: replaying it would
+                    # fail identically, so it always propagates — even when a
+                    # caller passes a broad retry_on (e.g. RuntimeError)
+                    raise
                 restarts += 1
                 if restarts > self.max_restarts:
                     raise RuntimeError(
@@ -162,6 +168,11 @@ class ResilientLoop:
                 restore_seconds += time.monotonic() - t0
                 step = int(meta["cursor"])  # rewind the data cursor with the state
                 del history[int(meta.get("history_len", len(history))):]
+                # keep the sanitizer's slot clock in sync with the restored
+                # step (the restored pipe holds a ready-to-consume sample)
+                san = getattr(self.step_fn, "_sanitizer", None)
+                if san is not None:
+                    san.rewind(step)
                 get_event_bus().publish(
                     "restart", source="resilient_loop", step=step,
                     restarts=restarts, error=type(e).__name__, backoff_s=pause)

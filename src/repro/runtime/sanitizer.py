@@ -1,0 +1,277 @@
+"""Pipeline race sanitizer — a checked mode for the one-step-stale contract.
+
+The paper's pipeline is correct only under a strict timing discipline
+(DESIGN.md §3): the train half consumes the representatives issued at step
+t−1, the issue half writes the slot for step t+1, and a donated carry is dead
+the moment the step runs. Nothing in the type system enforces any of that —
+a driver that calls the halves in the wrong order, double-consumes a slot, or
+touches a donated buffer produces silently-wrong numbers, not errors.
+
+``PipelineRaceSanitizer`` is pure host-side bookkeeping around the compiled
+step functions (it never touches array values, so fingerprints are
+bit-identical sanitize on/off — pinned in tests/test_sanitizer.py):
+
+  * **slot epochs** — every issue (write) and consume (read) of the pipeline
+    slot appends to a monotone epoch log. The legal schedule is a strict
+    alternation ``consume, issue, consume, issue, ...`` starting with the
+    consume of the bootstrap sample; a stale step (bounded-staleness
+    re-consume, ``make_stale_step``) is an allowed repeated read.
+  * **same-step races** — an issue before the pending sample was ever
+    consumed, a double issue (the pending sample is overwritten, i.e. lost),
+    or a double non-stale consume each raise :class:`SanitizerError` with the
+    recent epoch log in the message.
+  * **donation safety** — inputs of a donating step are recorded at handoff;
+    ``check_live`` walks a pytree and raises if any leaf is a deleted
+    (donated) jax array, so use-after-donate surfaces as a precise error at
+    the boundary instead of a backend crash mid-graph.
+  * **rewind** — ``ResilientLoop`` restores a checkpoint mid-run; ``rewind``
+    resets the clock to the restored step with the slot in the
+    "freshly issued, ready to consume" state.
+
+Enable with ``REPRO_SANITIZE=1`` (any value other than ``0``/``false``/
+``no``/empty) or ``RunConfig(sanitize=True)``. The mode is wired through
+``make_cl_step``, ``make_stale_step``, ``make_pipelined_halves``,
+``launch/steps.py`` (pjit), ``ResilientLoop`` and ``OnlineLearner``.
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+
+_FALSY = ("", "0", "false", "no", "off")
+
+
+class SanitizerError(RuntimeError):
+    """A pipeline timing/donation invariant was violated.
+
+    Deliberately NOT in ``TRANSIENT_EXCEPTIONS``: a race is a bug in the
+    driver, not a fault to retry through — ``ResilientLoop`` re-raises it.
+    """
+
+
+def sanitize_enabled(run: Any = None) -> bool:
+    """True if ``REPRO_SANITIZE`` is set truthy or ``run.sanitize`` is on."""
+    env = os.environ.get("REPRO_SANITIZE", "").strip().lower()
+    if env not in _FALSY:
+        return True
+    return bool(getattr(run, "sanitize", False))
+
+
+class _Slot:
+    __slots__ = ("last_op", "written_step", "consumed_step", "epochs")
+
+    def __init__(self) -> None:
+        # bootstrap: init_carry issued the (invalid-placeholder) pending
+        # sample at step -1; the first real op must be its consume.
+        self.last_op: str = "issue"
+        self.written_step: int = -1
+        self.consumed_step: int = -1
+        self.epochs: List[Tuple[str, int]] = [("issue", -1)]
+
+    def log(self, op: str, step: int, keep: int = 64) -> None:
+        self.epochs.append((op, step))
+        if len(self.epochs) > keep:
+            del self.epochs[: len(self.epochs) - keep]
+
+
+class PipelineRaceSanitizer:
+    """Epoch bookkeeping for one pipeline (one trainer / one built step)."""
+
+    def __init__(self, label: str = "pipeline") -> None:
+        self.label = label
+        self.step: int = 0  # logical step, advanced by tick()
+        self.slots: Dict[str, _Slot] = {}
+        self.races: int = 0  # total raises (for tests/telemetry)
+        self._donated: Dict[int, Tuple[str, int]] = {}  # id(leaf) -> (tag, step)
+
+    # -- slot epochs --------------------------------------------------------
+
+    def _slot(self, name: str) -> _Slot:
+        if name not in self.slots:
+            self.slots[name] = _Slot()
+        return self.slots[name]
+
+    def consume(self, slot: str = "pipe", stale: bool = False) -> None:
+        """The train half reads the pending sample."""
+        s = self._slot(slot)
+        if s.last_op == "consume" and not stale:
+            self._race(
+                f"slot `{slot}` consumed twice without a fresh issue "
+                f"(pending sample from step {s.written_step} was already "
+                f"read at step {s.consumed_step}); only a stale step may "
+                "re-consume", s)
+        if s.written_step >= self.step and not stale:
+            self._race(
+                f"same-step race on slot `{slot}`: consuming at step "
+                f"{self.step} the sample issued at step {s.written_step} — "
+                "the pipeline must be one step stale", s)
+        s.consumed_step = self.step
+        if not stale:
+            s.last_op = "consume"
+        s.log("consume:stale" if stale else "consume", self.step)
+
+    def issue(self, slot: str = "pipe") -> None:
+        """The issue half writes the next pending sample."""
+        s = self._slot(slot)
+        if s.last_op == "issue":
+            self._race(
+                f"slot `{slot}` issued twice in a row: the pending sample "
+                f"written at step {s.written_step} was never consumed and is "
+                "now overwritten (lost sample — issue/consume ran in the "
+                "same step or the consume was skipped)", s)
+        s.written_step = self.step
+        s.last_op = "issue"
+        s.log("issue", self.step)
+
+    def tick(self) -> None:
+        """End of one driver loop iteration."""
+        self.step += 1
+
+    def rewind(self, step: int) -> None:
+        """ResilientLoop restored the checkpoint taken at ``step``: the
+        restored slot holds the sample issued at step-1, ready to consume."""
+        self.step = int(step)
+        self._donated.clear()
+        for s in self.slots.values():
+            s.last_op = "issue"
+            s.written_step = self.step - 1
+            s.consumed_step = self.step - 1
+            s.log("rewind", self.step)
+
+    # -- donation -----------------------------------------------------------
+
+    def note_donated(self, tree: Any, tag: str = "carry") -> None:
+        """Record the inputs just handed to a donating step."""
+        self._donated = {
+            id(leaf): (tag, self.step)
+            for leaf in jax.tree_util.tree_leaves(tree)
+            if isinstance(leaf, jax.Array)
+        }
+
+    def check_live(self, tree: Any, what: str = "input") -> None:
+        """Raise if any jax array leaf in ``tree`` was deleted (donated)."""
+        for leaf in jax.tree_util.tree_leaves(tree):
+            if isinstance(leaf, jax.Array) and leaf.is_deleted():
+                tag, step = self._donated.get(id(leaf), ("a donating step", -1))
+                where = f" at step {step}" if step >= 0 else ""
+                self.races += 1
+                raise SanitizerError(
+                    f"[{self.label}] use-after-donate: {what} contains a "
+                    f"buffer donated to {tag}{where}; donated arrays are "
+                    "dead after handoff")
+
+    # -- internals ----------------------------------------------------------
+
+    def _race(self, message: str, s: _Slot) -> None:
+        self.races += 1
+        tail = ", ".join(f"{op}@{t}" for op, t in s.epochs[-8:])
+        raise SanitizerError(
+            f"[{self.label}] {message} (step {self.step}; recent epochs: "
+            f"{tail})")
+
+
+# ---------------------------------------------------------------------------
+# Wrappers — the wiring points import these
+# ---------------------------------------------------------------------------
+
+
+def resolve_sanitizer(sanitize: Any, label: str) -> Optional[PipelineRaceSanitizer]:
+    """Normalize a ``sanitize`` argument: an existing sanitizer is shared,
+    True builds a fresh one, None defers to the env flag, False disables."""
+    if isinstance(sanitize, PipelineRaceSanitizer):
+        return sanitize
+    if sanitize is None:
+        sanitize = sanitize_enabled()
+    return PipelineRaceSanitizer(label) if sanitize else None
+
+
+def wrap_fused_step(step_fn, san: PipelineRaceSanitizer, *,
+                    pipelined: bool, donate: bool, label: str = "fused step"):
+    """``step(carry, batch, key)`` with slot + donation bookkeeping."""
+
+    @functools.wraps(step_fn)
+    def step(carry, batch, key):
+        san.check_live(carry, f"{label} carry")
+        if pipelined:
+            san.consume()
+        out = step_fn(carry, batch, key)
+        if pipelined:
+            san.issue()
+        if donate:
+            san.note_donated(carry)
+        san.tick()
+        return out
+
+    step._sanitizer = san
+    return step
+
+
+def wrap_stale_step(stale_fn, san: PipelineRaceSanitizer, *,
+                    label: str = "stale step"):
+    """A stale step re-consumes the pending slot and issues nothing."""
+
+    @functools.wraps(stale_fn)
+    def step(carry, batch, key):
+        san.check_live(carry, f"{label} carry")
+        san.consume(stale=True)
+        out = stale_fn(carry, batch, key)
+        san.tick()
+        return out
+
+    step._sanitizer = san
+    return step
+
+
+def wrap_halves(train_half, issue_half, san: PipelineRaceSanitizer):
+    """Split halves share one slot clock: the legal schedule per step is
+    train (consume) then issue; the issue wrapper ends the step."""
+
+    @functools.wraps(train_half)
+    def train(params, opt, pipe, batch):
+        san.check_live((params, opt, pipe), "train half inputs")
+        san.consume()
+        return train_half(params, opt, pipe, batch)
+
+    @functools.wraps(issue_half)
+    def issue(buffer, pipe, batch, key):
+        san.check_live(buffer, "issue half buffer")
+        san.issue()
+        out = issue_half(buffer, pipe, batch, key)
+        san.tick()
+        return out
+
+    train._sanitizer = san
+    issue._sanitizer = san
+    return train, issue
+
+
+def wrap_built_step(fn, san: PipelineRaceSanitizer, *, pipelined: bool,
+                    donated_args: int, label: str = "pjit step"):
+    """Positional-signature wrapper for ``launch/steps.py`` built steps:
+    the first ``donated_args`` positionals are state (donated), the last two
+    are (batch, key)."""
+
+    @functools.wraps(fn)
+    def step(*args):
+        san.check_live(args[:donated_args] if donated_args else args,
+                       f"{label} state")
+        if pipelined:
+            san.consume()
+        out = fn(*args)
+        if pipelined:
+            san.issue()
+        if donated_args:
+            san.note_donated(args[:donated_args])
+        san.tick()
+        return out
+
+    step._sanitizer = san
+    return step
+
+
+__all__ = ["PipelineRaceSanitizer", "SanitizerError", "resolve_sanitizer",
+           "sanitize_enabled", "wrap_built_step", "wrap_fused_step",
+           "wrap_halves", "wrap_stale_step"]

@@ -193,6 +193,10 @@ class ContinualTrainer:
             self.init_opt_fn, self._opt_update = make_optimizer(run.train)
 
         self._validate_bucketing()
+        from repro.runtime.sanitizer import sanitize_enabled
+        # one sanitizer per trainer: the fused, stale and split-half wrappers
+        # must share a single slot clock (DESIGN.md §13)
+        self._sanitize = sanitize_enabled(run)
         self._step_fn = ov.get("step_fn")
         self._halves = None
         task_field = self.scenario.buffer_task_field if self.scenario else None
@@ -213,7 +217,7 @@ class ContinualTrainer:
             self._halves = make_pipelined_halves(
                 self.loss_fn, self._opt_update, rcfg, exchange=exchange,
                 label_field=self.label_field, task_field=task_field,
-                obs=run.obs)
+                obs=run.obs, sanitize=self._sanitize)
         elif self._step_fn is None and self.mesh is None:
             from repro.strategy import make_cl_step
             if self._opt_update is None:
@@ -223,7 +227,7 @@ class ContinualTrainer:
                 exchange=exchange, label_field=self.label_field,
                 task_field=task_field, donate=donate,
                 strategy_cfg=self.scfg, forward_outputs=self.forward_outputs,
-                aux_spec=self.aux_spec, obs=run.obs)
+                aux_spec=self.aux_spec, obs=run.obs, sanitize=self._sanitize)
 
         if self.resilience is not None and self._halves is not None:
             raise ValueError("resilience= needs step_form='fused': the split "
@@ -240,9 +244,15 @@ class ContinualTrainer:
                 and self.strat.uses_buffer and not self.strat.needs_outputs
                 and rcfg is not None and rcfg.enabled and rcfg.is_pipelined):
             from repro.strategy import make_stale_step
+            # share the fused step's sanitizer: stale re-consumes of the
+            # pending slot are legal on the SAME clock, double fresh
+            # consumes are not
+            shared_san = getattr(self._step_fn, "_sanitizer", None)
             self._stale_step_fn = make_stale_step(
                 self.loss_fn, self._opt_update, rcfg,
-                label_field=self.label_field, donate=donate, obs=run.obs)
+                label_field=self.label_field, donate=donate, obs=run.obs,
+                sanitize=shared_san if shared_san is not None
+                else self._sanitize)
 
     # ------------------------------------------------------------------ util
     def _strategy_aux_spec(self) -> Dict[str, Any]:
@@ -597,6 +607,9 @@ class ContinualTrainer:
                     def rstep(state, batch, kstep):
                         p, o, b, r, v, m = built.fn(*state[:5], batch, state[5])
                         return (p, o, b, r, v, kstep), m
+                # surface the built step's sanitizer so ResilientLoop rewinds
+                # its slot clock on checkpoint restore
+                rstep._sanitizer = getattr(built.fn, "_sanitizer", None)
                 rloop = self._resilient_loop(rstep)
 
             def snapshot(step_id, task):

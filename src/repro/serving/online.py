@@ -176,6 +176,11 @@ class OnlineLearner:
             self._gauge("repro_online_freshness_rounds", freshness,
                         help="serve rounds since the last weight handoff "
                              "(steady state: 1 = one-step staleness)")
+            san = getattr(tr._step_fn, "_sanitizer", None)
+            if san is not None:
+                # the weight handoff must publish live arrays: serving from a
+                # donated (deleted) params tree is the exact race this guards
+                san.check_live(carry.params, "serving params")
             with tracer.span("serve_round", cat="serving", round=r,
                              freshness=freshness):
                 res = self.engine.generate(carry.params, prompts, self.gen_len)

@@ -155,6 +155,7 @@ def make_cl_step(
     forward_outputs: Optional[Callable] = None,
     aux_spec=None,
     obs=None,
+    sanitize=None,
 ):
     """Build ``step(carry, batch, key) -> (carry, metrics)`` (jitted).
 
@@ -174,6 +175,11 @@ def make_cl_step(
     step metrics into the output dict — pure reads of state the step already
     computes, consuming no RNG: fingerprints and carry layout are bit-identical
     with obs on or off. ``None``/disabled compiles the exact pre-obs program.
+
+    ``sanitize`` arms the pipeline race sanitizer (DESIGN.md §13): True, an
+    existing ``PipelineRaceSanitizer`` to share its slot clock, or None to
+    follow ``REPRO_SANITIZE``. Host-side bookkeeping only — the compiled
+    program and its outputs are bit-identical sanitize on/off.
     """
     try:
         strat = resolve_strategy(strategy)
@@ -310,11 +316,18 @@ def make_cl_step(
             )
         return TrainCarry(params, opt, buf, pipe, ef), metrics
 
+    from repro.runtime.sanitizer import resolve_sanitizer, wrap_fused_step
+
+    san = resolve_sanitizer(sanitize, "cl_step")
+
     if mesh is None:
         @functools.partial(jax.jit, donate_argnums=(0,) if donate else ())
         def step(carry, batch, key):
             return worker(carry, batch, key, None, 1)
 
+        if san is not None:
+            step = wrap_fused_step(step, san, pipelined=pipelined,
+                                   donate=donate)
         return step
 
     n_workers = mesh.shape[dp_axis]
@@ -359,6 +372,9 @@ def make_cl_step(
             compiled["fn"] = jax.jit(fn, donate_argnums=(0,) if donate else ())
         return compiled["fn"](carry, batch, key)
 
+    if san is not None:
+        step = wrap_fused_step(step, san, pipelined=pipelined, donate=donate,
+                               label="sharded step")
     return step
 
 
@@ -370,6 +386,7 @@ def make_stale_step(
     label_field: Optional[str] = None,
     donate: bool = False,
     obs=None,
+    sanitize=None,
 ):
     """The bounded-staleness step (single device): same optimizer step as the
     pipelined ``make_cl_step``, but the rehearsal exchange is presumed late —
@@ -421,6 +438,13 @@ def make_stale_step(
         # buffer/pipe pass through untouched — the pending sample stays pending
         return TrainCarry(params, opt, carry.buffer, pipe, carry.ef), metrics
 
+    from repro.runtime.sanitizer import resolve_sanitizer, wrap_stale_step
+
+    # pass the fresh step's sanitizer instance so stale re-consumes share the
+    # same slot clock (a stale consume is legal; a double fresh consume isn't)
+    san = resolve_sanitizer(sanitize, "stale_step")
+    if san is not None:
+        step = wrap_stale_step(step, san)
     return step
 
 
@@ -433,6 +457,7 @@ def make_pipelined_halves(
     label_field: Optional[str] = None,
     task_field: Optional[str] = None,
     obs=None,
+    sanitize=None,
 ):
     """The pipelined step as TWO separately-dispatched XLA programs (single device):
 
@@ -487,4 +512,9 @@ def make_pipelined_halves(
         )
         return new_buf, PipelinedRehearsalCarry(pending.reps, pending.valid, key)
 
+    from repro.runtime.sanitizer import resolve_sanitizer, wrap_halves
+
+    san = resolve_sanitizer(sanitize, "pipelined_halves")
+    if san is not None:
+        train_half, issue_half = wrap_halves(train_half, issue_half, san)
     return train_half, issue_half

@@ -1,0 +1,592 @@
+"""replint (repro.analysis.lint) — per-rule fixtures, suppressions, CLI.
+
+Each rule family gets a minimal positive fixture (the seeded violation fires)
+and a negative fixture (the disciplined idiom stays clean). Fixtures are
+source strings, linted via ``lint_source`` with ``select`` pinning the rule
+under test so neighbouring families can't mask a regression.
+"""
+import json
+import textwrap
+
+import pytest
+
+from repro.analysis.lint import (RULES, Finding, lint_paths, lint_source,
+                                 parse_suppressions)
+from repro.analysis.lint.__main__ import main as lint_main
+
+
+def codes(result):
+    return [f.code for f in result.findings]
+
+
+def run(src, select):
+    return lint_source(textwrap.dedent(src), "fixture.py", select=select)
+
+
+# ---------------------------------------------------------------------------
+# RPL001 — derived-key single use
+# ---------------------------------------------------------------------------
+
+
+def test_rpl001_flags_key_reuse():
+    res = run("""
+        import jax
+
+        def f(key):
+            a = jax.random.normal(key, (4,))
+            b = jax.random.normal(key, (4,))
+            return a + b
+    """, ["RPL001"])
+    assert codes(res) == ["RPL001"]
+    assert "key" in res.findings[0].message
+
+
+def test_rpl001_split_and_fold_in_are_clean():
+    res = run("""
+        import jax
+
+        def f(key):
+            k1, k2 = jax.random.split(key)
+            a = jax.random.normal(k1, (4,))
+            return a + jax.random.normal(k2, (4,))
+
+        def g(key):
+            out = 0.0
+            for i in range(3):
+                out = out + jax.random.normal(jax.random.fold_in(key, i), ())
+            return out
+    """, ["RPL001"])
+    assert codes(res) == []
+
+
+def test_rpl001_loop_carried_reuse():
+    # consumed at the bottom of iteration i, read again at the top of i+1:
+    # only the second scan pass of the loop body can see this
+    res = run("""
+        import jax
+
+        def f(key):
+            out = 0.0
+            for i in range(3):
+                out = out + jax.random.normal(key, ())
+            return out
+    """, ["RPL001"])
+    assert codes(res) == ["RPL001"]
+
+
+def test_rpl001_early_return_branch_does_not_leak():
+    # the consuming branch returns; the fall-through path still owns the key
+    res = run("""
+        import jax
+
+        def f(key, fast):
+            if fast:
+                return jax.random.normal(key, ())
+            return jax.random.uniform(key, ())
+    """, ["RPL001"])
+    assert codes(res) == []
+
+
+def test_rpl001_root_key_may_fan_out_until_split():
+    res = run("""
+        import jax
+
+        def setup(init_fn, derive_fn):
+            key = jax.random.PRNGKey(0)
+            params = init_fn(key)
+            step_key = derive_fn(key)
+            return params, step_key
+    """, ["RPL001"])
+    assert codes(res) == []
+
+
+def test_rpl001_derived_key_single_owner_across_calls():
+    res = run("""
+        import jax
+
+        def f(key, init_fn, derive_fn):
+            params = init_fn(key)
+            other = derive_fn(key)
+            return params, other
+    """, ["RPL001"])
+    assert codes(res) == ["RPL001"]
+
+
+# ---------------------------------------------------------------------------
+# RPL002 — issue-key lineage
+# ---------------------------------------------------------------------------
+
+
+def test_rpl002_flags_fold_in_product_stored_in_slot():
+    res = run("""
+        import jax
+        from repro.strategy import PipelinedRehearsalCarry
+
+        def issue(buffer, pipe, batch, key, sample):
+            k_issue = jax.random.fold_in(pipe.key, 0)
+            reps, valid = sample(buffer, k_issue)
+            return PipelinedRehearsalCarry(reps, valid, k_issue)
+    """, ["RPL002"])
+    assert codes(res) == ["RPL002"]
+    assert "fold_in" in res.findings[0].message
+
+
+def test_rpl002_flags_frozen_pipe_key():
+    res = run("""
+        from repro.strategy import PipelinedRehearsalCarry
+
+        def issue(pipe, new_reps, new_valid):
+            return PipelinedRehearsalCarry(new_reps, new_valid, pipe.key)
+    """, ["RPL002"])
+    assert codes(res) == ["RPL002"]
+
+
+def test_rpl002_fresh_incoming_key_is_clean():
+    res = run("""
+        from repro.strategy import PipelinedRehearsalCarry
+
+        def issue(pending, key):
+            return PipelinedRehearsalCarry(pending.reps, pending.valid, key)
+    """, ["RPL002"])
+    assert codes(res) == []
+
+
+def test_rpl002_wholesale_relayout_is_exempt():
+    # all three fields come off the same pipe: a pass-through/reshard, not a
+    # lineage decision
+    res = run("""
+        from repro.strategy import PipelinedRehearsalCarry
+
+        def relayout(pipe, shard):
+            return PipelinedRehearsalCarry(
+                shard(pipe.reps), shard(pipe.valid), pipe.key)
+    """, ["RPL002"])
+    assert codes(res) == []
+
+
+# ---------------------------------------------------------------------------
+# RPL010 — use-after-donate
+# ---------------------------------------------------------------------------
+
+
+def test_rpl010_flags_read_after_donating_call():
+    res = run("""
+        import jax
+
+        def body(carry, batch):
+            return carry, 0.0
+
+        step = jax.jit(body, donate_argnums=(0,))
+
+        def loop(carry, batch, history):
+            new_carry, m = step(carry, batch)
+            history.append(carry["loss"])
+            return new_carry
+    """, ["RPL010"])
+    assert codes(res) == ["RPL010"]
+    assert "donated" in res.findings[0].message
+
+
+def test_rpl010_rebinding_the_carry_is_clean():
+    res = run("""
+        import jax
+
+        def body(carry, batch):
+            return carry, 0.0
+
+        step = jax.jit(body, donate_argnums=(0,))
+
+        def loop(carry, batch):
+            carry, m = step(carry, batch)
+            return carry["loss"]
+    """, ["RPL010"])
+    assert codes(res) == []
+
+
+def test_rpl010_conditional_donate_argnums_resolves_literals():
+    # `(0,) if donate else ()` must resolve to the may-donate set {0}
+    res = run("""
+        import functools
+        import jax
+
+        donate = True
+
+        @functools.partial(jax.jit, donate_argnums=(0,) if donate else ())
+        def step(carry, batch):
+            return carry, 0.0
+
+        def loop(carry, batch):
+            out, m = step(carry, batch)
+            return carry, out
+    """, ["RPL010"])
+    assert codes(res) == ["RPL010"]
+
+
+# ---------------------------------------------------------------------------
+# RPL020 / RPL021 — jit purity
+# ---------------------------------------------------------------------------
+
+
+def test_rpl020_flags_host_effects_in_jit():
+    res = run("""
+        import time
+
+        import jax
+
+        @jax.jit
+        def step(x):
+            t = time.time()
+            print("stepping")
+            return x * t
+    """, ["RPL020"])
+    assert sorted(codes(res)) == ["RPL020", "RPL020"]
+
+
+def test_rpl020_host_effects_outside_jit_are_fine():
+    res = run("""
+        import time
+
+        def wall_clock():
+            return time.time()
+    """, ["RPL020"])
+    assert codes(res) == []
+
+
+def test_rpl020_follows_the_call_graph():
+    # the helper is not decorated, but the jit root calls it by name
+    res = run("""
+        import jax
+
+        def helper(x):
+            print(x)
+            return x
+
+        @jax.jit
+        def step(x):
+            return helper(x)
+    """, ["RPL020"])
+    assert codes(res) == ["RPL020"]
+
+
+def test_rpl021_flags_traced_truthiness():
+    res = run("""
+        import jax
+        import jax.numpy as jnp
+
+        @jax.jit
+        def f(x):
+            if jnp.any(x > 0):
+                return x
+            return -x
+    """, ["RPL021"])
+    assert codes(res) == ["RPL021"]
+
+
+def test_rpl021_config_flags_are_fine():
+    res = run("""
+        import jax
+        import jax.numpy as jnp
+
+        @jax.jit
+        def f(x, donate=False):
+            if donate:
+                return x
+            return jnp.where(x > 0, x, -x)
+    """, ["RPL021"])
+    assert codes(res) == []
+
+
+# ---------------------------------------------------------------------------
+# RPL030 / RPL031 / RPL032 — aux-field rideability
+# ---------------------------------------------------------------------------
+
+
+def test_rpl030_policy_with_aux_must_reshard():
+    res = run("""
+        from repro.buffer import Policy
+
+        class Fifo(Policy):
+            def init_aux(self, spec):
+                return {"cursor": 0}
+    """, ["RPL030"])
+    assert codes(res) == ["RPL030"]
+
+
+def test_rpl030_reshard_aux_override_is_clean():
+    res = run("""
+        from repro.buffer import Policy
+
+        class Fifo(Policy):
+            def init_aux(self, spec):
+                return {"cursor": 0}
+
+            def reshard_aux(self, aux, plan):
+                return aux
+    """, ["RPL030"])
+    assert codes(res) == []
+
+
+def test_rpl030_stateless_policy_needs_no_reshard():
+    res = run("""
+        from repro.buffer import Policy
+
+        class Reservoir(Policy):
+            def init_aux(self, spec):
+                return {}
+    """, ["RPL030"])
+    assert codes(res) == []
+
+
+def test_rpl031_params_only_checkpoint_in_rehearsal_module():
+    res = run("""
+        from repro.strategy import init_carry
+
+        def save_ckpt(mgr, params):
+            spec = {"params": params}
+            mgr.save(0, spec)
+    """, ["RPL031"])
+    assert codes(res) == ["RPL031"]
+
+
+def test_rpl031_buffer_in_spec_or_update_is_clean():
+    res = run("""
+        from repro.strategy import init_carry
+
+        def save_full(mgr, params, buffer):
+            spec = {"params": params, "buffer": buffer}
+            mgr.save(0, spec)
+
+        def save_augmented(mgr, params, carry):
+            spec = {"params": params}
+            spec.update(buffer=carry.buffer, reps=carry.pipe.reps)
+            mgr.save(0, spec)
+    """, ["RPL031"])
+    assert codes(res) == []
+
+
+def test_rpl031_silent_outside_rehearsal_modules():
+    # a params-only save in a module with no rehearsal imports is legitimate
+    res = run("""
+        def save_ckpt(mgr, params):
+            mgr.save(0, {"params": params})
+    """, ["RPL031"])
+    assert codes(res) == []
+
+
+def test_rpl032_declared_fields_need_on_store():
+    res = run("""
+        from repro.strategy import Strategy
+
+        class Der(Strategy):
+            def record_fields(self, item_spec, outputs_spec, scfg):
+                return {"logits": outputs_spec["logits"]}
+    """, ["RPL032"])
+    assert codes(res) == ["RPL032"]
+
+
+def test_rpl032_on_store_override_is_clean():
+    res = run("""
+        from repro.strategy import Strategy
+
+        class Der(Strategy):
+            def record_fields(self, item_spec, outputs_spec, scfg):
+                return {"logits": outputs_spec["logits"]}
+
+            def on_store(self, batch, outputs):
+                return {"logits": outputs["logits"]}
+    """, ["RPL032"])
+    assert codes(res) == []
+
+
+# ---------------------------------------------------------------------------
+# RPL040 / RPL041 — obs neutrality
+# ---------------------------------------------------------------------------
+
+
+def test_rpl040_obs_value_into_state_constructor():
+    res = run("""
+        from repro.obs.metrics import step_metrics
+        from repro.strategy import TrainCarry
+
+        def step(carry, batch):
+            gauges = step_metrics(carry)
+            return TrainCarry(carry.params, gauges), gauges
+    """, ["RPL040"])
+    assert codes(res) == ["RPL040"]
+
+
+def test_rpl040_obs_into_metrics_output_is_clean():
+    res = run("""
+        from repro.obs.metrics import step_metrics
+        from repro.strategy import TrainCarry
+
+        def step(carry, batch, new_params):
+            gauges = step_metrics(carry)
+            metrics = {"loss": 0.0, **gauges}
+            return TrainCarry(new_params, carry.opt), metrics
+    """, ["RPL040"])
+    assert codes(res) == []
+
+
+def test_rpl041_rng_in_obs_function():
+    res = run("""
+        import jax
+
+        def obs_gauges(state, key):
+            noise = jax.random.uniform(key)
+            return {"fill": noise}
+    """, ["RPL041"])
+    assert codes(res) == ["RPL041"]
+
+
+def test_rpl041_prngkey_and_non_obs_functions_are_fine():
+    res = run("""
+        import jax
+
+        def obs_gauges(state):
+            base = jax.random.PRNGKey(0)
+            return {"fill": 0.0}
+
+        def sample(key):
+            return jax.random.uniform(key)
+    """, ["RPL041"])
+    assert codes(res) == []
+
+
+# ---------------------------------------------------------------------------
+# Suppressions
+# ---------------------------------------------------------------------------
+
+_VIOLATION = """
+import jax
+
+
+def f(key):
+    a = jax.random.normal(key, (4,))
+    b = jax.random.normal(key, (4,)){trailer}
+    return a + b
+"""
+
+
+def test_line_level_suppression():
+    src = _VIOLATION.format(trailer="  # replint: disable=RPL001")
+    res = lint_source(src, "fixture.py", select=["RPL001"])
+    assert codes(res) == []
+    assert res.suppressed == 1
+
+
+def test_line_suppression_only_covers_its_line():
+    src = _VIOLATION.format(trailer="") + textwrap.dedent("""
+        def g(rng):
+            x = jax.random.normal(rng, ())
+            y = jax.random.normal(rng, ())  # replint: disable=RPL001
+            return x + y + jax.random.normal(rng, ())
+    """)
+    res = lint_source(src, "fixture.py", select=["RPL001"])
+    # f's reuse and g's *last* reuse still fire; the annotated line is quiet
+    assert codes(res) == ["RPL001", "RPL001"]
+    assert res.suppressed == 1
+
+
+def test_file_level_suppression():
+    src = ("# replint: disable=RPL001\n"
+           + _VIOLATION.format(trailer="")
+           + _VIOLATION.format(trailer="").replace("def f", "def f2"))
+    res = lint_source(src, "fixture.py", select=["RPL001"])
+    assert codes(res) == []
+    assert res.suppressed == 2
+
+
+def test_parse_suppressions_distinguishes_scopes():
+    file_codes, line_codes = parse_suppressions([
+        "# replint: disable=RPL001, RPL020",
+        "x = f(key)  # replint: disable=RPL002",
+        "y = 1",
+    ])
+    assert file_codes == {"RPL001", "RPL020"}
+    assert line_codes == {2: {"RPL002"}}
+
+
+# ---------------------------------------------------------------------------
+# Output schema / driver / CLI
+# ---------------------------------------------------------------------------
+
+
+def test_json_schema():
+    res = run(_VIOLATION.format(trailer=""), ["RPL001"])
+    doc = json.loads(json.dumps(res.to_json()))
+    assert doc["version"] == 1
+    assert doc["files_checked"] == 1
+    assert doc["counts"] == {"RPL001": 1}
+    assert doc["suppressed"] == 0 and doc["errors"] == []
+    (f,) = doc["findings"]
+    assert set(f) == {"path", "line", "col", "code", "rule", "message"}
+    assert f["code"] == "RPL001" and f["path"] == "fixture.py"
+    assert isinstance(f["line"], int) and f["line"] > 0
+
+
+def test_finding_format_is_path_line_col():
+    f = Finding(code="RPL001", message="msg", path="a.py", line=3, col=7)
+    assert f.format() == "a.py:3:7: RPL001 msg"
+
+
+def test_syntax_error_is_reported_not_raised():
+    res = lint_source("def f(:\n", "broken.py")
+    assert res.findings == []
+    assert len(res.errors) == 1 and "broken.py" in res.errors[0]
+
+
+def test_unknown_rule_code_raises():
+    with pytest.raises(ValueError, match="RPL999"):
+        lint_source("x = 1\n", select=["RPL999"])
+
+
+def test_rule_catalog_registered():
+    lint_source("x = 1\n")  # force registration
+    expected = {"RPL001", "RPL002", "RPL010", "RPL020", "RPL021",
+                "RPL030", "RPL031", "RPL032", "RPL040", "RPL041"}
+    assert expected <= set(RULES)
+    for code in expected:
+        assert RULES[code].rationale  # every rule documents its why
+
+
+def test_lint_paths_and_cli_exit_codes(tmp_path, capsys):
+    clean = tmp_path / "clean.py"
+    clean.write_text("x = 1\n")
+    dirty = tmp_path / "dirty.py"
+    dirty.write_text(textwrap.dedent("""
+        import jax
+
+        def f(key):
+            a = jax.random.normal(key, (4,))
+            return a + jax.random.normal(key, (4,))
+    """))
+    res = lint_paths([str(tmp_path)])
+    assert res.files_checked == 2
+    assert codes(res) == ["RPL001"]
+
+    assert lint_main([str(clean)]) == 0
+    capsys.readouterr()
+    assert lint_main([str(tmp_path)]) == 1
+    out = capsys.readouterr().out
+    assert "dirty.py" in out and "RPL001" in out
+    assert lint_main([str(clean), "--select", "RPL999"]) == 2
+    capsys.readouterr()
+    assert lint_main(["--list-rules"]) == 0
+    listing = capsys.readouterr().out
+    assert "RPL001" in listing and "RPL041" in listing
+
+
+def test_cli_json_output(tmp_path, capsys):
+    clean = tmp_path / "clean.py"
+    clean.write_text("x = 1\n")
+    assert lint_main([str(clean), "--json"]) == 0
+    doc = json.loads(capsys.readouterr().out)
+    assert doc["version"] == 1 and doc["findings"] == []
+
+
+def test_repo_source_tree_is_clean():
+    """The shipping gate: src/ + tests/ lint clean (suppressions allowed)."""
+    res = lint_paths(["src", "tests"])
+    assert res.errors == []
+    assert codes(res) == [], "\n".join(f.format() for f in res.findings)

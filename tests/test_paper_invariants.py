@@ -85,7 +85,7 @@ def test_exchange_is_permutation():
     mesh = make_mesh((N,), ("data",))
 
     def body(items, valid):
-        recv, rvalid = _exchange(items, valid, None, "data")
+        recv, rvalid = _exchange(items, valid, "data")
         return recv, rvalid
 
     fn = shard_map(body, mesh=mesh,

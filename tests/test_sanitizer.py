@@ -1,0 +1,305 @@
+"""Pipeline race sanitizer (repro.runtime.sanitizer) — DESIGN.md §13.
+
+Three layers: the epoch model itself (alternation, staleness, rewind,
+donation liveness), the wrapped step factories (an injected wrong-order /
+same-step drive trips SanitizerError; the disciplined drive is silent), and
+the neutrality contract (fingerprints are bit-identical sanitize on/off,
+because the sanitizer is host-side bookkeeping that never touches values).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import RehearsalConfig, RunConfig
+from repro.core import init_carry, make_cl_step, make_pipelined_halves
+from repro.runtime import InjectedFailure, ResilientLoop
+from repro.runtime.sanitizer import (PipelineRaceSanitizer, SanitizerError,
+                                     sanitize_enabled)
+from repro.strategy.step import make_stale_step
+
+
+def _spec(d=8):
+    return {
+        "x": jax.ShapeDtypeStruct((d,), jnp.float32),
+        "label": jax.ShapeDtypeStruct((), jnp.int32),
+        "task": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def _linear_loss(params, batch):
+    logits = batch["x"] @ params["w"]
+    onehot = jax.nn.one_hot(jnp.maximum(batch["label"], 0), logits.shape[-1])
+    mask = (batch["label"] >= 0).astype(jnp.float32)
+    ce = -jnp.sum(jax.nn.log_softmax(logits) * onehot, axis=-1)
+    return jnp.sum(ce * mask) / jnp.maximum(mask.sum(), 1.0), {}
+
+
+def _sgd(grads, opt, params):
+    return jax.tree_util.tree_map(lambda p, g: p - 0.1 * g, params, grads), opt, {}
+
+
+def _batch(step, b=16, d=8, n_classes=4):
+    r = np.random.default_rng(step)
+    lab = r.integers(0, n_classes, b).astype(np.int32)
+    return {
+        "x": jnp.asarray(r.normal(size=(b, d)).astype(np.float32)),
+        "label": jnp.asarray(lab),
+        "task": jnp.asarray(lab % 2),
+    }
+
+
+PIPE = RehearsalConfig(num_buckets=2, slots_per_bucket=8, num_representatives=3,
+                       num_candidates=6, mode="sync", pipelined=True)
+
+
+# ---------------------------------------------------------------------------
+# The epoch model
+# ---------------------------------------------------------------------------
+
+
+def test_legal_alternation_is_silent():
+    san = PipelineRaceSanitizer()
+    for _ in range(5):  # consume the bootstrap, issue the next, repeat
+        san.consume()
+        san.issue()
+        san.tick()
+    assert san.races == 0
+    assert san.step == 5
+
+
+def test_double_issue_is_a_lost_sample_race():
+    san = PipelineRaceSanitizer()
+    san.consume()
+    san.issue()
+    with pytest.raises(SanitizerError, match="issued twice"):
+        san.issue()
+    assert san.races == 1
+
+
+def test_wrong_order_drive_trips_at_step_zero():
+    # the bootstrap slot is already in the issued state: a driver that issues
+    # before the first consume overwrote a never-read sample
+    san = PipelineRaceSanitizer()
+    with pytest.raises(SanitizerError, match="issued twice"):
+        san.issue()
+
+
+def test_double_consume_is_a_race_but_stale_reread_is_not():
+    san = PipelineRaceSanitizer()
+    san.consume()
+    with pytest.raises(SanitizerError, match="consumed twice"):
+        san.consume()
+    san2 = PipelineRaceSanitizer()
+    san2.consume()
+    san2.consume(stale=True)  # bounded-staleness re-read: allowed
+    san2.consume(stale=True)
+    san2.issue()  # the slot still alternates correctly afterwards
+    assert san2.races == 0
+
+
+def test_same_step_issue_then_consume_race():
+    # consuming the sample issued in the SAME step breaks one-step staleness
+    san = PipelineRaceSanitizer()
+    san.consume()
+    san.issue()
+    with pytest.raises(SanitizerError, match="one step stale"):
+        san.consume()
+
+
+def test_error_carries_the_epoch_log():
+    san = PipelineRaceSanitizer("fused")
+    san.consume()
+    san.issue()
+    san.tick()
+    with pytest.raises(SanitizerError) as exc:
+        san.issue()
+    msg = str(exc.value)
+    assert "[fused]" in msg and "recent epochs" in msg and "issue@0" in msg
+
+
+def test_rewind_resets_to_ready_to_consume():
+    san = PipelineRaceSanitizer()
+    for _ in range(4):
+        san.consume(); san.issue(); san.tick()
+    san.rewind(2)
+    assert san.step == 2
+    san.consume()  # the restored slot is freshly issued: consume is legal
+    san.issue()
+    assert san.races == 0
+
+
+def test_check_live_flags_deleted_arrays():
+    san = PipelineRaceSanitizer()
+    x = jnp.ones((4,))
+    san.check_live({"w": x})  # live: silent
+    san.note_donated({"w": x}, tag="fused step")
+    x.delete()
+    with pytest.raises(SanitizerError, match="use-after-donate"):
+        san.check_live({"w": x}, "carry")
+    assert san.races == 1
+
+
+def test_sanitize_enabled_env_and_config(monkeypatch):
+    monkeypatch.delenv("REPRO_SANITIZE", raising=False)
+    assert not sanitize_enabled()
+    assert sanitize_enabled(RunConfig(sanitize=True))
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    assert sanitize_enabled()
+    monkeypatch.setenv("REPRO_SANITIZE", "0")
+    assert not sanitize_enabled()
+
+
+# ---------------------------------------------------------------------------
+# Wrapped step factories: injected races vs the disciplined drive
+# ---------------------------------------------------------------------------
+
+
+def _halves(sanitize=True):
+    return make_pipelined_halves(_linear_loss, _sgd, PIPE, exchange="local",
+                                 label_field="label", sanitize=sanitize)
+
+
+def test_split_halves_wrong_order_trips_sanitizer():
+    """The injected race: a driver that runs the issue half before the first
+    train half overwrites the never-consumed bootstrap sample. Without the
+    sanitizer this is silent (the numbers are just wrong — the normal suite
+    can't see it); with it, step 0 raises."""
+    train_half, issue_half = _halves()
+    params = {"w": jnp.zeros((8, 4))}
+    carry = init_carry(params, None, _spec(), PIPE, label_field="label", seed=3)
+    key = jax.random.PRNGKey(0)
+    with pytest.raises(SanitizerError, match="issued twice"):
+        issue_half(carry.buffer, carry.pipe, _batch(0),
+                   jax.random.fold_in(key, 0))
+
+
+def test_split_halves_same_step_reuse_trips_sanitizer():
+    train_half, issue_half = _halves()
+    params = {"w": jnp.zeros((8, 4))}
+    carry = init_carry(params, None, _spec(), PIPE, label_field="label", seed=3)
+    p, opt = params, None
+    buf, pipe = carry.buffer, carry.pipe
+    p, opt, _ = train_half(p, opt, pipe, _batch(0))
+    # same-step slot reuse: the pending sample is consumed a second time
+    # within the same step (the issue half never ran in between)
+    with pytest.raises(SanitizerError, match="consumed twice"):
+        train_half(p, opt, pipe, _batch(0))
+
+
+def test_split_halves_disciplined_drive_is_silent():
+    train_half, issue_half = _halves()
+    params = {"w": jnp.zeros((8, 4))}
+    carry = init_carry(params, None, _spec(), PIPE, label_field="label", seed=3)
+    p, opt = params, None
+    buf, pipe = carry.buffer, carry.pipe
+    key = jax.random.PRNGKey(0)
+    for s in range(6):
+        p, opt, _ = train_half(p, opt, pipe, _batch(s))
+        buf, pipe = issue_half(buf, pipe, _batch(s), jax.random.fold_in(key, s))
+    assert train_half._sanitizer is issue_half._sanitizer
+    assert train_half._sanitizer.races == 0
+    assert train_half._sanitizer.step == 6
+
+
+def test_fused_step_clean_run_and_shared_stale_clock():
+    step = make_cl_step(_linear_loss, _sgd, PIPE, strategy="rehearsal",
+                        exchange="local", label_field="label", donate=False,
+                        sanitize=True)
+    san = step._sanitizer
+    stale = make_stale_step(_linear_loss, _sgd, PIPE, label_field="label",
+                            sanitize=san)
+    assert stale._sanitizer is san
+    params = {"w": jnp.zeros((8, 4))}
+    carry = init_carry(params, None, _spec(), PIPE, label_field="label", seed=3)
+    key = jax.random.PRNGKey(0)
+    for s in range(4):
+        fn = stale if s == 2 else step  # a stale dispatch mid-run is legal
+        carry, m = fn(carry, _batch(s), jax.random.fold_in(key, s))
+    assert san.races == 0
+    assert san.step == 4
+
+
+# ---------------------------------------------------------------------------
+# Neutrality: fingerprints bit-identical sanitize on/off
+# ---------------------------------------------------------------------------
+
+
+def _checksums(sanitize):
+    params = {"w": jnp.zeros((8, 4))}
+    step = make_cl_step(_linear_loss, _sgd, PIPE, strategy="rehearsal",
+                        exchange="local", label_field="label", donate=False,
+                        sanitize=sanitize)
+    carry = init_carry(params, None, _spec(), PIPE, label_field="label", seed=3)
+    key = jax.random.PRNGKey(0)
+    out = []
+    for s in range(8):
+        carry, m = step(carry, _batch(s), jax.random.fold_in(key, s))
+        out.append((float(m["rep_checksum"]), float(m["loss"]),
+                    float(m["buffer_fill"])))
+    return out, np.asarray(carry.params["w"])
+
+
+def test_fingerprints_bit_identical_on_off():
+    on, w_on = _checksums(True)
+    off, w_off = _checksums(False)
+    assert on == off  # float equality, not tolerance: bit-identical
+    np.testing.assert_array_equal(w_on, w_off)
+
+
+# ---------------------------------------------------------------------------
+# ResilientLoop integration
+# ---------------------------------------------------------------------------
+
+
+def _toy_loop(tmp_path, step_fn, **kw):
+    from repro.checkpoint import CheckpointManager
+    return ResilientLoop(step_fn=step_fn,
+                         ckpt=CheckpointManager(str(tmp_path)),
+                         checkpoint_every=2, max_restarts=3, **kw)
+
+
+def test_resilient_restore_rewinds_the_slot_clock(tmp_path):
+    san = PipelineRaceSanitizer("loop")
+
+    def step_fn(carry, batch, key):
+        san.consume()
+        out = jax.tree_util.tree_map(lambda a: a + 1.0, carry)
+        san.issue()
+        san.tick()
+        return out, {"loss": 0.0}
+
+    step_fn._sanitizer = san
+    fails = {4}
+
+    def hook(step):
+        if step in fails:
+            fails.discard(step)
+            raise InjectedFailure(f"boom@{step}")
+
+    loop = _toy_loop(tmp_path, step_fn)
+    carry = {"w": jnp.zeros((2,))}
+    carry, history, restarts = loop.run(
+        carry, lambda s: None, jax.random.PRNGKey(0), 6, failure_hook=hook)
+    assert restarts == 1
+    assert san.races == 0  # the rewind realigned the clock; no false race
+    # the failure hit at step 4, exactly the last checkpoint cursor: rewind(4)
+    # then the remaining 2 steps advance the clock to 6
+    assert san.step == 6
+    np.testing.assert_array_equal(np.asarray(carry["w"]), [6.0, 6.0])
+
+
+def test_sanitizer_error_is_never_retried(tmp_path):
+    calls = []
+
+    def step_fn(carry, batch, key):
+        calls.append(1)
+        raise SanitizerError("injected race")
+
+    # even with a retry_on that would match (RuntimeError covers
+    # SanitizerError), the loop must re-raise instead of burning restarts
+    loop = _toy_loop(tmp_path, step_fn, retry_on=(RuntimeError,))
+    with pytest.raises(SanitizerError, match="injected race"):
+        loop.run({"w": jnp.zeros((2,))}, lambda s: None,
+                 jax.random.PRNGKey(0), 3)
+    assert len(calls) == 1

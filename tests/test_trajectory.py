@@ -75,6 +75,39 @@ def test_gate_block_prefixes_split_exit_codes(tmp_path):
     assert len(out.read_text().strip().splitlines()) == 1
 
 
+def test_series_tolerance_longest_prefix_wins(tmp_path):
+    """Per-series tolerance: a 60% load_us blow-up passes under a loose
+    fig6/ override, still fails under the default, and the LONGEST matching
+    prefix decides when several apply."""
+    assert trajectory.resolve_tolerance("fig6/rows/load_us", 0.35) == 0.35
+    tols = {"fig6/": 0.9, "fig6/rows/": 0.5}
+    assert trajectory.resolve_tolerance("fig6/rows/load_us", 0.35, tols) == 0.5
+    assert trajectory.resolve_tolerance("fig6/other", 0.35, tols) == 0.9
+    assert trajectory.resolve_tolerance("fig7/rows/x", 0.35, tols) == 0.35
+
+    bench = tmp_path / "BENCH_fig6.json"
+    out = tmp_path / "trajectory.jsonl"
+    _write_bench(bench, load_us=100.0, acc=0.9, vs_sync=0.8)
+    trajectory.run(bench_glob=str(bench), out_path=str(out), now=1000.0)
+    _write_bench(bench, load_us=160.0, acc=0.9, vs_sync=0.8)
+    loose = trajectory.run(bench_glob=str(bench), out_path=str(out),
+                           series_tolerance={"fig6/": 0.9}, now=2000.0)
+    assert loose["regressions"] == []
+    _write_bench(bench, load_us=320.0, acc=0.9, vs_sync=0.8)
+    tight = trajectory.run(bench_glob=str(bench), out_path=str(out),
+                           series_tolerance={"fig7/": 0.9}, now=3000.0)
+    assert any("load_us" in r for r in tight["regressions"])
+
+
+def test_parse_series_tolerance():
+    assert trajectory.parse_series_tolerance("") == {}
+    assert trajectory.parse_series_tolerance(
+        "fig8/=0.6, obs/restore_s=0.8") == {"fig8/": 0.6,
+                                            "obs/restore_s": 0.8}
+    with pytest.raises(ValueError, match="prefix=tol"):
+        trajectory.parse_series_tolerance("fig8/")
+
+
 def test_metric_direction():
     assert trajectory.metric_direction("fig6/rows/load_us") == -1
     assert trajectory.metric_direction("fig5a/x/us_per_step") == -1
