@@ -106,12 +106,15 @@ def run(writer, smoke: bool = False, json_path: str = "BENCH_fig6.json"):
     writer.row("fig6/pipelined_step", f"{pipe_us:.0f}",
                f"vs_sync={pipe_us / sync_us:.3f}(<1=exchange_off_critical_path)")
 
+    kernel_rows = _kernel_breakdown(writer, smoke=smoke)
+
     payload = {"bench": "fig6", "smoke": smoke, "rows": {
         "load_us": round(load_us, 1), "train_us": round(train_us, 1),
         "populate_sample_us": round(pop_us, 1), "hideable": round(hideable, 4),
         "fused_async_us": round(async_us, 1), "sync_us": round(sync_us, 1),
         "pipelined_us": round(pipe_us, 1),
-        "pipelined_vs_sync": round(pipe_us / sync_us, 4)}}
+        "pipelined_vs_sync": round(pipe_us / sync_us, 4),
+        **kernel_rows}}
     with open(json_path, "w") as f:
         json.dump(payload, f, indent=2)
     writer.row("fig6/json", "0", os.path.abspath(json_path))
@@ -137,6 +140,123 @@ def run(writer, smoke: bool = False, json_path: str = "BENCH_fig6.json"):
     with open(obs_json, "w") as f:
         json.dump(obs_payload, f, indent=2)
     writer.row("obs/json", "0", os.path.abspath(obs_json))
+
+
+def _count_ops(jaxpr) -> int:
+    """Primitive count of a jaxpr with call-like primitives expanded — except
+    ``pallas_call``, which counts as ONE op (a single fused kernel launch).
+    This is the interpret-comparable cost model of DESIGN.md §14: each op is
+    (at least) one HBM round-trip for its operands, so fewer ops over the same
+    tensors == fewer full-width passes."""
+    n = 0
+    for eqn in jaxpr.eqns:
+        inner = eqn.params.get("jaxpr") or eqn.params.get("call_jaxpr")
+        if eqn.primitive.name != "pallas_call" and inner is not None:
+            n += _count_ops(getattr(inner, "jaxpr", inner))
+        else:
+            n += 1
+    return n
+
+
+def _kernel_breakdown(writer, smoke: bool = False):
+    """Tiered hot-path kernels (DESIGN.md §14): fused dequant-on-gather /
+    encode-on-scatter vs their unfused two-pass forms, plus the full tiered
+    step both ways.
+
+    Two measurements per pair: wall-clock (informational on CPU — interpret
+    mode serialises the per-row DMA emulation, so the TPU win does not show
+    here) and the *op count* of the traced computation (``_count_ops``), the
+    deterministic interpret-comparable metric the acceptance gate pins: the
+    fused form must need ≤ 1.0x the ops of the two-pass form, because it IS
+    the two-pass pipeline minus the intermediate materialisation."""
+    from repro.buffer import tiered as tiered_mod
+    from repro.kernels import ops
+
+    n = 5 if smoke else 15
+    r_rows, l = (256, 128) if smoke else (1024, 512)
+    s_rows, c_rows = 32, 24
+    key = jax.random.PRNGKey(42)
+    q_table = jax.random.randint(key, (r_rows, l), -127, 128, dtype=jnp.int8)
+    scales = jax.random.uniform(jax.random.fold_in(key, 1), (r_rows, 1),
+                                minval=1e-3, maxval=2.0)
+    rows_s = jax.random.randint(jax.random.fold_in(key, 2), (s_rows,), 0, r_rows)
+    x = jax.random.normal(jax.random.fold_in(key, 3), (c_rows, l))
+    rows_c = jax.random.randint(jax.random.fold_in(key, 4), (c_rows,), -1, r_rows)
+
+    # --- gather+dequant: two-pass (gather int8 -> full-width dequant) vs fused
+    @jax.jit
+    def gather_unfused(qt, st, rows):
+        idx = jnp.clip(rows, 0, qt.shape[0] - 1)
+        return ops.dequantize(qt[idx], st[idx])
+
+    gather_fused = ops.gather_dequant
+    g_un_us = _time(gather_unfused, q_table, scales, rows_s, n=n)
+    g_fu_us = _time(gather_fused, q_table, scales, rows_s, n=n)
+    g_un_ops = _count_ops(jax.make_jaxpr(gather_unfused)(q_table, scales, rows_s).jaxpr)
+    g_fu_ops = _count_ops(jax.make_jaxpr(gather_fused)(q_table, scales, rows_s).jaxpr)
+    g_ratio = g_fu_ops / g_un_ops
+
+    # --- encode+scatter: two-pass (quantize -> scatter both tables) vs fused
+    @jax.jit
+    def scatter_unfused(qt, st, xv, rows):
+        q, s = ops.quantize(xv)
+        safe = jnp.where(rows >= 0, rows, qt.shape[0])
+        return (qt.at[safe].set(q, mode="drop"),
+                st.at[safe].set(s, mode="drop"))
+
+    scatter_fused = ops.encode_scatter
+    s_un_us = _time(lambda *a: scatter_unfused(*a)[0], q_table, scales, x, rows_c, n=n)
+    s_fu_us = _time(lambda *a: scatter_fused(*a)[0], q_table, scales, x, rows_c, n=n)
+    s_un_ops = _count_ops(jax.make_jaxpr(scatter_unfused)(q_table, scales, x, rows_c).jaxpr)
+    s_fu_ops = _count_ops(jax.make_jaxpr(scatter_fused)(q_table, scales, x, rows_c).jaxpr)
+    s_ratio = s_fu_ops / s_un_ops
+
+    # the acceptance pin: fusion must never need MORE passes than two-pass
+    for name, ratio in (("gather+dequant", g_ratio), ("encode+scatter", s_ratio)):
+        if ratio > 1.0:
+            raise RuntimeError(
+                f"fused {name} needs {ratio:.2f}x the ops of its unfused "
+                f"two-pass form — fusion is supposed to REMOVE the "
+                f"intermediate pass (DESIGN.md §14)")
+
+    # --- full tiered step, XLA chain vs fused dispatch (bit-identical results)
+    spec = {"x": jax.ShapeDtypeStruct((l,), jnp.float32),
+            "labels": jax.ShapeDtypeStruct((), jnp.int32),
+            "task": jax.ShapeDtypeStruct((), jnp.int32)}
+    state = tiered_mod.init_tiered(spec, num_buckets=4, hot_slots=8,
+                                   cold_slots=32, stage_rows=c_rows)
+    items = {"x": x, "labels": jnp.zeros((c_rows,), jnp.int32),
+             "task": jnp.zeros((c_rows,), jnp.int32)}
+    labels = jax.random.randint(jax.random.fold_in(key, 5), (c_rows,), 0, 4)
+    step_xla = jax.jit(lambda st, k: tiered_mod.tiered_update(
+        st, items, labels, k, c_rows))
+    step_fused = jax.jit(lambda st, k: tiered_mod.tiered_update(
+        st, items, labels, k, c_rows, fused=True))
+    # warm the cold tier so the flush actually encodes
+    for i in range(3):
+        state = step_xla(state, jax.random.PRNGKey(i))
+    t_xla_us = _time(lambda st, k: step_xla(st, k).cold.counts, state, key, n=n)
+    t_fu_us = _time(lambda st, k: step_fused(st, k).cold.counts, state, key, n=n)
+
+    writer.row("fig6/kernel_gather_unfused", f"{g_un_us:.0f}", f"ops={g_un_ops}")
+    writer.row("fig6/kernel_gather_fused", f"{g_fu_us:.0f}",
+               f"ops={g_fu_ops},vs_unfused={g_ratio:.3f}(gate<=1.0)")
+    writer.row("fig6/kernel_scatter_unfused", f"{s_un_us:.0f}", f"ops={s_un_ops}")
+    writer.row("fig6/kernel_scatter_fused", f"{s_fu_us:.0f}",
+               f"ops={s_fu_ops},vs_unfused={s_ratio:.3f}(gate<=1.0)")
+    writer.row("fig6/kernel_tiered_step_xla", f"{t_xla_us:.0f}", "")
+    writer.row("fig6/kernel_tiered_step_fused", f"{t_fu_us:.0f}",
+               f"vs_xla={t_fu_us / t_xla_us:.3f}(informational_on_cpu)")
+    return {
+        "kernel_gather_unfused_us": round(g_un_us, 1),
+        "kernel_gather_fused_us": round(g_fu_us, 1),
+        "kernel_gather_ops_vs_unfused": round(g_ratio, 4),
+        "kernel_scatter_unfused_us": round(s_un_us, 1),
+        "kernel_scatter_fused_us": round(s_fu_us, 1),
+        "kernel_scatter_ops_vs_unfused": round(s_ratio, 4),
+        "kernel_tiered_step_xla_us": round(t_xla_us, 1),
+        "kernel_tiered_step_fused_us": round(t_fu_us, 1),
+    }
 
 
 def _sync_vs_pipelined(h, rcfg, params, key, n=30):

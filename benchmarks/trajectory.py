@@ -34,7 +34,8 @@ from typing import Dict, List, Optional, Tuple
 DEFAULT_TOLERANCE = 0.35
 
 _LOWER_IS_BETTER = ("_us", "us_per_step", "vs_sync", "vs_device", "hideable",
-                    "overhead_n", "reshard_", "restore_s", "obs_overhead")
+                    "overhead_n", "reshard_", "restore_s", "obs_overhead",
+                    "vs_unfused", "vs_xla")
 _HIGHER_IS_BETTER = ("accuracy", "acc")
 
 

@@ -12,10 +12,18 @@ the whole train carry on every step, so the classic bug is::
 The check is module-local and name-based: collect callables known to donate
 (``name = jax.jit(f, donate_argnums=...)`` bindings and functions decorated
 with ``@functools.partial(jax.jit, donate_argnums=...)``), then linearly scan
-each function — after a bare name is passed at a donated position, any read of
-it before reassignment is flagged. ``donate_argnums`` expressions that cannot
-be resolved statically (``(0,) if donate else ()``) resolve to the union of
-int literals they contain, i.e. the may-donate set.
+each function — after a bare name is passed at a donated position, any later
+read of it before reassignment is flagged. ``donate_argnums`` expressions that
+cannot be resolved statically (``(0,) if donate else ()``) resolve to the
+union of int literals they contain, i.e. the may-donate set.
+
+``pl.pallas_call(..., input_output_aliases={i: o})`` is the kernel-level form
+of the same hazard: the aliased input buffer is reused for output ``o``, so
+reading it after the call observes the kernel's writes. Both shapes are
+covered — the immediate call ``pl.pallas_call(...)(buf, ...)`` and the
+name-bound ``op = pl.pallas_call(...); op(buf, ...)`` — with the donated
+positions taken from the *keys* of the alias dict (values are output indices,
+not argument positions).
 """
 from __future__ import annotations
 
@@ -34,19 +42,47 @@ def _donated_positions(call: ast.Call, ctx: FileContext) -> Set[int]:
     return set()
 
 
+def _is_pallas_call(call: ast.Call, ctx: FileContext) -> bool:
+    return qualname(call.func, ctx.imports).rsplit(".", 1)[-1] == "pallas_call"
+
+
+def _aliased_positions(call: ast.Call, ctx: FileContext) -> Set[int]:
+    """Input positions a ``pallas_call(..., input_output_aliases=...)`` reuses
+    for outputs. For a dict literal only the *keys* are argument positions
+    (values are output indices); anything unresolvable falls back to the
+    may-alias union of int literals."""
+    if not _is_pallas_call(call, ctx):
+        return set()
+    for kw in call.keywords:
+        if kw.arg != "input_output_aliases":
+            continue
+        if isinstance(kw.value, ast.Dict):
+            out: Set[int] = set()
+            for key in kw.value.keys:
+                if key is not None:
+                    out |= int_literals(key)
+            return out
+        return int_literals(kw.value)
+    return set()
+
+
 def _donating_callables(tree: ast.Module, ctx: FileContext) -> Dict[str, Set[int]]:
     """name -> donated positions, for module-visible donating callables."""
     out: Dict[str, Set[int]] = {}
     for node in ast.walk(tree):
-        # name = jax.jit(fn, donate_argnums=...)
+        # name = jax.jit(fn, donate_argnums=...) |
+        # name = pl.pallas_call(..., input_output_aliases=...)
         if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
             call = node.value
+            positions: Set[int] = set()
             if is_tracing_entry(qualname(call.func, ctx.imports)):
                 positions = _donated_positions(call, ctx)
-                if positions:
-                    for target in node.targets:
-                        if isinstance(target, ast.Name):
-                            out[target.id] = positions
+            elif _is_pallas_call(call, ctx):
+                positions = _aliased_positions(call, ctx)
+            if positions:
+                for target in node.targets:
+                    if isinstance(target, ast.Name):
+                        out[target.id] = positions
         # @jax.jit(donate_argnums=...) / @functools.partial(jax.jit, donate_argnums=...)
         if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
             for dec in node.decorator_list:
@@ -72,7 +108,10 @@ class UseAfterDonate(Rule):
 
     def check(self, tree: ast.Module, ctx: FileContext) -> Iterator[Finding]:
         donors = _donating_callables(tree, ctx)
-        if not donors:
+        has_aliased_pallas = any(
+            isinstance(node, ast.Call) and _aliased_positions(node, ctx)
+            for node in ast.walk(tree))
+        if not donors and not has_aliased_pallas:
             return
         for fn in ast.walk(tree):
             if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
@@ -103,6 +142,13 @@ class UseAfterDonate(Rule):
                 # donation happens after the args were read
                 if isinstance(node.func, ast.Name) and node.func.id in donors:
                     for pos in donors[node.func.id]:
+                        if pos < len(node.args) and \
+                                isinstance(node.args[pos], ast.Name):
+                            dead[node.args[pos].id] = node.lineno
+                # pl.pallas_call(..., input_output_aliases=...)(buf, ...):
+                # the aliased operands are dead the moment the kernel runs
+                if isinstance(node.func, ast.Call):
+                    for pos in _aliased_positions(node.func, ctx):
                         if pos < len(node.args) and \
                                 isinstance(node.args[pos], ast.Name):
                             dead[node.args[pos].id] = node.lineno

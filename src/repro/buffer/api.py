@@ -41,11 +41,16 @@ def init_from_config(item_spec, rcfg) -> AnyBufferState:
     return init_buffer(item_spec, rcfg.num_buckets, rcfg.slots_per_bucket, pol)
 
 
+def _fused_of(rcfg) -> bool:
+    return bool(getattr(rcfg, "fused_kernels", False)) if rcfg is not None else False
+
+
 def buffer_update(state: AnyBufferState, items, labels, key, rcfg) -> AnyBufferState:
     """Policy-driven Alg-1 push of a candidate mini-batch into either store."""
     pol = _policy_of(rcfg)
     if isinstance(state, TieredState):
-        return tiered_update(state, items, labels, key, rcfg.num_candidates, pol)
+        return tiered_update(state, items, labels, key, rcfg.num_candidates, pol,
+                             fused=_fused_of(rcfg))
     return local_update(state, items, labels, key, rcfg.num_candidates, pol)
 
 
@@ -53,7 +58,7 @@ def buffer_sample(state: AnyBufferState, key, n: int, rcfg=None):
     """Draw ``n`` representatives from either store under the configured policy."""
     pol = _policy_of(rcfg)
     if isinstance(state, TieredState):
-        return tiered_sample(state, key, n, pol)
+        return tiered_sample(state, key, n, pol, fused=_fused_of(rcfg))
     return local_sample(state, key, n, pol)
 
 

@@ -93,13 +93,25 @@ def local_update_with_evicted(
     return _local_update_traced(state, items, labels, key, num_candidates, policy)
 
 
-def _local_update_traced(state, items, labels, key, num_candidates, policy=None,
-                         accept_mask=None):
+def local_update_rows(state, labels, key, num_candidates, policy=None,
+                      accept_mask=None):
+    """Row-targeting core of Algorithm 1: which flat buffer rows this batch
+    writes, and the count bookkeeping — WITHOUT touching the record bytes.
+
+    Shared verbatim by the XLA scatter path (``_local_update_traced``) and the
+    fused Pallas encode-on-scatter path (``buffer.tiered`` with
+    ``fused_kernels=True``): both consume the key with the same
+    ``(k_accept, k_evict)`` split and emit the same target rows, which is what
+    makes the two paths bit-identical.
+
+    Returns ``(flat i32[b], accept bool[b], pos i32[b], slot i32[b],
+    new_counts, new_seen)`` where ``flat[i] == K*cap`` (OOB) marks a dropped
+    candidate.
+    """
     from repro.buffer.policies import resolve_policy
 
     pol = resolve_policy(policy)
     k_buckets, cap = buffer_dims(state)
-    b = labels.shape[0]
     k_accept, k_evict = jax.random.split(key)
 
     if accept_mask is None:
@@ -116,6 +128,23 @@ def _local_update_traced(state, items, labels, key, num_candidates, policy=None,
     pos = state.counts[labels] + rank
     slot = pol.evict(state, labels, pos, rank, k_evict)
     flat = jnp.where(accept, labels * cap + slot, k_buckets * cap)  # OOB ⇒ dropped
+    accepted_per_bucket = jnp.sum(onehot, axis=0)
+    new_counts = jnp.minimum(cap, state.counts + accepted_per_bucket)
+    new_seen = state.seen + jnp.sum(
+        jax.nn.one_hot(labels, k_buckets, dtype=jnp.int32), axis=0
+    )
+    return flat, accept, pos, slot, new_counts, new_seen
+
+
+def _local_update_traced(state, items, labels, key, num_candidates, policy=None,
+                         accept_mask=None):
+    from repro.buffer.policies import resolve_policy
+
+    pol = resolve_policy(policy)
+    k_buckets, cap = buffer_dims(state)
+    flat, accept, pos, slot, new_counts, new_seen = local_update_rows(
+        state, labels, key, num_candidates, pol, accept_mask
+    )
     # a true demotion displaces a slot that was filled BEFORE this batch; a slot
     # filled earlier within the same batch yields the pre-batch (empty) value, so
     # it must not be reported (the within-batch occupant is simply dropped)
@@ -133,11 +162,22 @@ def _local_update_traced(state, items, labels, key, num_candidates, policy=None,
         return out.reshape(buf.shape)
 
     new_data = jax.tree_util.tree_map(scatter, state.data, items)
-    accepted_per_bucket = jnp.sum(onehot, axis=0)
-    new_counts = jnp.minimum(cap, state.counts + accepted_per_bucket)
-    new_seen = state.seen + jnp.sum(jax.nn.one_hot(labels, k_buckets, dtype=jnp.int32), axis=0)
     new_aux = pol.update_aux(state, items, labels, accept, flat, new_counts)
     return BufferState(new_data, new_counts, new_seen, new_aux), evicted, evicted_valid
+
+
+def local_sample_rows(state: BufferState, key, n: int, policy=None):
+    """Row-selection core of sampling: the flat rows the policy draws, without
+    gathering the record bytes. Returns ``(flat i32[n], valid bool[n])`` with
+    ``flat`` always in-range (validity travels as the mask).
+
+    The gather hook of the fused dequant-on-gather path (``buffer.tiered`` with
+    ``fused_kernels=True``): the fused and XLA paths call this identically, so
+    they consume the same key and read the same rows.
+    """
+    from repro.buffer.policies import resolve_policy
+
+    return resolve_policy(policy).sample(state, key, n)
 
 
 def local_sample(state: BufferState, key, n: int, policy=None):
@@ -149,10 +189,8 @@ def local_sample(state: BufferState, key, n: int, policy=None):
     (Drawn with replacement; for n ≪ |B_n| this matches the paper's
     without-replacement sampling to O(n/|B_n|).)
     """
-    from repro.buffer.policies import resolve_policy
-
     k_buckets, cap = buffer_dims(state)
-    flat, valid = resolve_policy(policy).sample(state, key, n)
+    flat, valid = local_sample_rows(state, key, n, policy)
 
     def gather(buf):
         return buf.reshape((k_buckets * cap,) + buf.shape[2:])[flat]

@@ -36,7 +36,9 @@ from repro.buffer.state import (
     buffer_dims,
     init_buffer,
     local_sample,
+    local_sample_rows,
     local_update,
+    local_update_rows,
     local_update_with_evicted,
 )
 
@@ -105,16 +107,33 @@ def _pack_stage(evicted, labels, valid, stage_rows: int):
     return stage, labels[take], valid[take] & in_range
 
 
-def tiered_flush(state: TieredState, key) -> TieredState:
+def tiered_flush(state: TieredState, key, *, fused: bool = False) -> TieredState:
     """Flush the pending demotions (staged at step t−1) into the cold archive:
     one batched int8 encode + reservoir insert. Clears ``stage_valid`` so a
     standalone flush (the phase-decomposed form, repro.obs.pipeline) cannot
-    re-demote the same rows; ``tiered_update`` overwrites the stage anyway."""
+    re-demote the same rows; ``tiered_update`` overwrites the stage anyway.
+
+    ``fused=True`` routes through the encode-on-scatter Pallas kernel
+    (``compression.encode_scatter_batch``): the staged rows are quantized and
+    written into their cold target rows in one pass, with no intermediate
+    encoded batch. Row targeting and key use go through the same
+    ``local_update_rows`` as the XLA path, so both are bit-identical. The cold
+    tier always runs the default reservoir policy (stateless aux), which is
+    what lets the fused form skip the generic ``update_aux`` hook."""
     comp = _compression()
-    encoded = comp.encode_batch(state.stage, record_spec_of(state))
-    cold = local_update(state.cold, encoded, state.stage_labels, key,
-                        num_candidates=state.stage_labels.shape[0],
-                        accept_mask=state.stage_valid)
+    if fused:
+        flat, _, _, _, new_counts, new_seen = local_update_rows(
+            state.cold, state.stage_labels, key,
+            num_candidates=state.stage_labels.shape[0],
+            accept_mask=state.stage_valid)
+        new_data = comp.encode_scatter_batch(
+            state.cold.data, state.stage, record_spec_of(state), flat)
+        cold = BufferState(new_data, new_counts, new_seen, state.cold.aux)
+    else:
+        encoded = comp.encode_batch(state.stage, record_spec_of(state))
+        cold = local_update(state.cold, encoded, state.stage_labels, key,
+                            num_candidates=state.stage_labels.shape[0],
+                            accept_mask=state.stage_valid)
     return state._replace(cold=cold,
                           stage_valid=jnp.zeros_like(state.stage_valid))
 
@@ -134,7 +153,7 @@ def tiered_push(state: TieredState, items, labels, key, num_candidates: int,
 
 
 def tiered_update(state: TieredState, items, labels, key, num_candidates: int,
-                  policy=None) -> TieredState:
+                  policy=None, *, fused: bool = False) -> TieredState:
     """One tiered Alg-1 step: flush last step's staged demotions into the cold tier
     (batched int8 encode — off the critical path), update the hot tier under the
     policy, and stage whatever the hot tier evicted for the next flush.
@@ -144,19 +163,31 @@ def tiered_update(state: TieredState, items, labels, key, num_candidates: int,
     form (the flush touches only ``cold``/``stage_valid``; the push reads
     ``hot`` and replaces the stage wholesale)."""
     k_hot, k_flush = jax.random.split(key)
-    return tiered_push(tiered_flush(state, k_flush), items, labels, k_hot,
-                       num_candidates, policy)
+    return tiered_push(tiered_flush(state, k_flush, fused=fused), items, labels,
+                       k_hot, num_candidates, policy)
 
 
-def tiered_sample(state: TieredState, key, n: int, policy=None):
+def tiered_sample(state: TieredState, key, n: int, policy=None, *,
+                  fused: bool = False):
     """Draw ``n`` records across both tiers, tier chosen ∝ fill (unbiased over the
     union); cold rows are dequantized back to the record dtypes. Returns
-    (items [n, ...], valid bool[n])."""
+    (items [n, ...], valid bool[n]).
+
+    ``fused=True`` reads the cold tier through the dequant-on-gather Pallas
+    kernel (``compression.decode_gather_batch``): int8 rows dequantize in VMEM
+    on the way out instead of materialising a full-width gathered batch first.
+    Row selection shares ``local_sample_rows`` with the XLA path — same key
+    use, same rows, bit-identical output."""
     comp = _compression()
     k_hot, k_cold, k_mix = jax.random.split(key, 3)
     hot_items, hot_valid = local_sample(state.hot, k_hot, n, policy)
-    cold_stored, cold_valid = local_sample(state.cold, k_cold, n)
-    cold_items = comp.decode_batch(cold_stored, record_spec_of(state))
+    if fused:
+        cold_rows, cold_valid = local_sample_rows(state.cold, k_cold, n)
+        cold_items = comp.decode_gather_batch(
+            state.cold.data, record_spec_of(state), cold_rows)
+    else:
+        cold_stored, cold_valid = local_sample(state.cold, k_cold, n)
+        cold_items = comp.decode_batch(cold_stored, record_spec_of(state))
 
     hot_total = jnp.sum(state.hot.counts)
     cold_total = jnp.sum(state.cold.counts)

@@ -201,6 +201,12 @@ class RehearsalConfig:
     hot_slots: int = 0  # tiered: hot (HBM) slots/bucket; 0 -> slots_per_bucket
     cold_slots: int = 0  # tiered: cold (host, int8) slots/bucket; 0 -> 3x hot
     demote_stage: int = 0  # tiered: demotion staging rows; 0 -> 2x num_candidates
+    # Fused Pallas hot path for the tiered store (DESIGN.md §14): cold sampling
+    # dequantizes int8 rows in VMEM on the gather, demotion flushes quantize +
+    # scatter in one kernel. Bit-identical to the default XLA op chain (the
+    # parity pin in tests/test_tiered_fused.py); off by default until it has
+    # soaked on TPU.
+    fused_kernels: bool = False
     # Record-field names, plumbed end to end (loss masking + Alg-1 bucketing).
     label_field: str = "labels"
     task_field: str = "task"

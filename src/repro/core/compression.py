@@ -69,6 +69,67 @@ def decode_batch(stored, item_spec):
     )
 
 
+def encode_scatter_batch(cold_data, batch, item_spec, rows):
+    """Fused demotion flush: quantize the [B, ...] staged ``batch`` and scatter it
+    straight into flat ``rows`` of the compressed store (``cold_data``: pytree of
+    ``{"q": [K, slots, flat], "scale": [K, slots, 1]}`` / ``{"raw": ...}`` blobs)
+    in one Pallas kernel per float leaf — no intermediate encoded batch
+    (``kernels.ops.encode_scatter``, DESIGN.md §14). ``rows[i] < 0`` or
+    ``>= K*slots`` drops candidate i. Returns the updated ``cold_data``.
+
+    Bit-identical to ``encode_batch`` + the XLA row scatter: same in-kernel
+    quantization math, same last-write-wins duplicate-row order.
+    """
+
+    def one(spec_leaf, blob, x):
+        k, slots = jax.tree_util.tree_leaves(blob)[0].shape[:2]
+        r = k * slots
+        safe = jnp.where(rows >= 0, rows, r)  # negative would wrap; OOB ⇒ dropped
+        if "raw" in blob:
+            flat_buf = blob["raw"].reshape((r,) + blob["raw"].shape[2:])
+            out = flat_buf.at[safe].set(x.astype(flat_buf.dtype), mode="drop")
+            return {"raw": out.reshape(blob["raw"].shape)}
+        b = x.shape[0]
+        q2 = blob["q"].reshape(r, -1)
+        s2 = blob["scale"].reshape(r, 1)
+        new_q, new_s = ops.encode_scatter(q2, s2, x.reshape(b, -1), safe)
+        return {"q": new_q.reshape(blob["q"].shape),
+                "scale": new_s.reshape(blob["scale"].shape)}
+
+    return jax.tree_util.tree_map(
+        one, item_spec, cold_data, batch,
+        is_leaf=lambda n: isinstance(n, jax.ShapeDtypeStruct),
+    )
+
+
+def decode_gather_batch(cold_data, item_spec, rows):
+    """Fused sampling read: gather flat ``rows`` of the compressed store and
+    dequantize them in VMEM on the way out — cold records never materialise at
+    fp width in HBM (``kernels.ops.gather_dequant``, DESIGN.md §14). ``rows``
+    must be in-range (sampling indices always are; validity is a mask).
+    Returns a [n, ...] record batch in the original dtypes/shapes.
+
+    Bit-identical to the XLA row gather + ``decode_batch``.
+    """
+
+    def one(spec_leaf, blob):
+        k, slots = jax.tree_util.tree_leaves(blob)[0].shape[:2]
+        r = k * slots
+        if "raw" in blob:
+            flat_buf = blob["raw"].reshape((r,) + blob["raw"].shape[2:])
+            return flat_buf[rows]
+        n = rows.shape[0]
+        x = ops.gather_dequant(blob["q"].reshape(r, -1),
+                               blob["scale"].reshape(r, 1),
+                               rows, dtype=spec_leaf.dtype)
+        return x.reshape((n,) + tuple(spec_leaf.shape))
+
+    return jax.tree_util.tree_map(
+        one, item_spec, cold_data,
+        is_leaf=lambda n: isinstance(n, jax.ShapeDtypeStruct),
+    )
+
+
 def compression_ratio(item_spec) -> float:
     """Bytes(original) / bytes(stored)."""
     import numpy as np

@@ -64,38 +64,37 @@ def ssd_scan(x, dt, a_head, bmat, cmat, *, chunk: int = 128, head_block: int = 8
     return y.reshape(b, s, h, p)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("row_tile", "interpret"))
 def rehearsal_update_sample(buffer, cands, cand_rows, samp_rows,
+                            row_tile: int = 8,
                             interpret: bool | None = None):
-    """buffer [R, L]; cands [C, L]; cand_rows i32[C]; samp_rows i32[S]."""
+    """buffer [R, L]; cands [C, L]; cand_rows i32[C]; samp_rows i32[S].
+    ``row_tile`` records move per grid step (sublane-aligned tiles; 1 = the
+    original one-record-per-step BlockSpec form)."""
     interpret = _default_interpret() if interpret is None else interpret
     return _ro.rehearsal_update_sample(buffer, cands, cand_rows, samp_rows,
-                                       interpret=interpret)
+                                       row_tile=row_tile, interpret=interpret)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("row_tile", "interpret"))
 def rehearsal_pipelined_step(buffer, pending_reps, cands, cand_rows, samp_rows,
+                             row_tile: int = 8,
                              interpret: bool | None = None):
     """One-step-stale rehearsal step: train on ``pending_reps`` (gathered last call)
     while issuing this call's scatter+gather. Returns (new_buffer, train_reps,
     next_pending)."""
     interpret = _default_interpret() if interpret is None else interpret
     return _ro.rehearsal_pipelined_step(buffer, pending_reps, cands, cand_rows,
-                                        samp_rows, interpret=interpret)
+                                        samp_rows, row_tile=row_tile,
+                                        interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
 def quantize(x, *, block_rows: int = 8, interpret: bool | None = None):
     """Row-wise int8 quantization: x [R, L] -> (q int8, scales f32 [R, 1]).
-    Rows padded to the block multiple internally."""
+    Ragged row counts are padded to the block multiple inside the kernel."""
     interpret = _default_interpret() if interpret is None else interpret
-    r, l = x.shape
-    br = min(block_rows, r) if r % min(block_rows, r) == 0 else 1
-    pad = (-r) % br
-    if pad:
-        x = jnp.concatenate([x, jnp.zeros((pad, l), x.dtype)])
-    q, s = _qz.quantize_rows(x, block_rows=br, interpret=interpret)
-    return q[:r], s[:r]
+    return _qz.quantize_rows(x, block_rows=block_rows, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("dtype", "block_rows", "interpret"))
@@ -103,11 +102,45 @@ def dequantize(q, scales, dtype=jnp.float32, *, block_rows: int = 8,
                interpret: bool | None = None):
     """Inverse of ``quantize``."""
     interpret = _default_interpret() if interpret is None else interpret
-    r, l = q.shape
-    br = min(block_rows, r) if r % min(block_rows, r) == 0 else 1
-    pad = (-r) % br
-    if pad:
-        q = jnp.concatenate([q, jnp.zeros((pad, l), q.dtype)])
-        scales = jnp.concatenate([scales, jnp.ones((pad, 1), scales.dtype)])
-    x = _qz.dequantize_rows(q, scales, dtype=dtype, block_rows=br, interpret=interpret)
-    return x[:r]
+    return _qz.dequantize_rows(q, scales, dtype=dtype, block_rows=block_rows,
+                               interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("dtype", "row_tile", "interpret"))
+def gather_dequant(q_table, scales_table, rows, dtype=jnp.float32, *,
+                   row_tile: int = 8, interpret: bool | None = None):
+    """Fused cold-row sampling: gather ``rows`` of the int8 table and dequantize
+    them in VMEM on the way out — bit-identical to gather-then-``dequantize``
+    but with no fp-width HBM intermediate (DESIGN.md §14).
+
+    q_table int8 [R, L]; scales_table f32 [R, 1]; rows i32[S] (clamped into
+    range — sampling indices are always in-range, validity travels as a mask).
+    Returns [S, L] ``dtype``."""
+    interpret = _default_interpret() if interpret is None else interpret
+    r = q_table.shape[0]
+    idx = jnp.clip(rows, 0, r - 1)
+    # per-row scales are S*4 bytes — gathered at XLA level; the wide int8 rows
+    # are what the kernel moves
+    row_scales = scales_table[idx]
+    return _ro.gather_dequant_rows(q_table, row_scales, idx, dtype,
+                                   row_tile=row_tile, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("row_tile", "interpret"))
+def encode_scatter(q_table, scales_table, x, rows, *, row_tile: int = 8,
+                   interpret: bool | None = None):
+    """Fused demotion flush: row-quantize the staged fp rows and scatter them
+    into their cold-table target rows in one kernel (``input_output_aliases``
+    keeps the table in place) — bit-identical to ``quantize``-then-scatter but
+    with no encoded-batch intermediate (DESIGN.md §14).
+
+    q_table int8 [R, L]; scales_table f32 [R, 1]; x fp [S, L];
+    rows i32[S] (<0 or >= R ⇒ dropped). Returns (new_q_table, new_scales_table).
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    new_q, row_scales = _ro.encode_scatter_rows(q_table, x, rows,
+                                                row_tile=row_tile,
+                                                interpret=interpret)
+    safe = jnp.where(rows >= 0, rows, q_table.shape[0])  # OOB ⇒ dropped
+    new_scales = scales_table.at[safe].set(row_scales, mode="drop")
+    return new_q, new_scales

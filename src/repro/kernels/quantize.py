@@ -30,13 +30,26 @@ def _dequant_kernel(q_ref, s_ref, x_ref):
     x_ref[...] = (q_ref[...].astype(jnp.float32) * s_ref[...]).astype(x_ref.dtype)
 
 
+def _pad_rows(x, block_rows: int, fill=0):
+    """Pad dim 0 up to the next ``block_rows`` multiple (ragged row counts —
+    e.g. stage_rows=6 — need no caller-side workarounds)."""
+    r = x.shape[0]
+    pad = (-r) % block_rows
+    if pad:
+        x = jnp.concatenate(
+            [x, jnp.full((pad,) + x.shape[1:], fill, x.dtype)])
+    return x
+
+
 def quantize_rows(x, *, block_rows: int = 8, interpret: bool = False):
-    """x [R, L] float -> (q int8 [R, L], scales f32 [R, 1])."""
+    """x [R, L] float -> (q int8 [R, L], scales f32 [R, 1]).
+    Ragged R is padded to the block multiple internally."""
     r, l = x.shape
-    block_rows = min(block_rows, r)
-    assert r % block_rows == 0, (r, block_rows)
-    grid = (r // block_rows,)
-    return pl.pallas_call(
+    block_rows = min(block_rows, max(r, 1))
+    x = _pad_rows(x, block_rows)
+    rp = x.shape[0]
+    grid = (rp // block_rows,)
+    q, s = pl.pallas_call(
         _quant_kernel,
         grid=grid,
         in_specs=[pl.BlockSpec((block_rows, l), lambda i: (i, 0))],
@@ -45,21 +58,25 @@ def quantize_rows(x, *, block_rows: int = 8, interpret: bool = False):
             pl.BlockSpec((block_rows, 1), lambda i: (i, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((r, l), jnp.int8),
-            jax.ShapeDtypeStruct((r, 1), jnp.float32),
+            jax.ShapeDtypeStruct((rp, l), jnp.int8),
+            jax.ShapeDtypeStruct((rp, 1), jnp.float32),
         ],
         interpret=interpret,
     )(x)
+    return q[:r], s[:r]
 
 
 def dequantize_rows(q, scales, dtype=jnp.float32, *, block_rows: int = 8,
                     interpret: bool = False):
-    """(q int8 [R, L], scales [R, 1]) -> x [R, L] ``dtype``."""
+    """(q int8 [R, L], scales [R, 1]) -> x [R, L] ``dtype``.
+    Ragged R is padded to the block multiple internally."""
     r, l = q.shape
-    block_rows = min(block_rows, r)
-    assert r % block_rows == 0, (r, block_rows)
-    grid = (r // block_rows,)
-    return pl.pallas_call(
+    block_rows = min(block_rows, max(r, 1))
+    q = _pad_rows(q, block_rows)
+    scales = _pad_rows(scales, block_rows, fill=1)
+    rp = q.shape[0]
+    grid = (rp // block_rows,)
+    x = pl.pallas_call(
         _dequant_kernel,
         grid=grid,
         in_specs=[
@@ -67,6 +84,7 @@ def dequantize_rows(q, scales, dtype=jnp.float32, *, block_rows: int = 8,
             pl.BlockSpec((block_rows, 1), lambda i: (i, 0)),
         ],
         out_specs=pl.BlockSpec((block_rows, l), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((r, l), dtype),
+        out_shape=jax.ShapeDtypeStruct((rp, l), dtype),
         interpret=interpret,
     )(q, scales)
+    return x[:r]

@@ -83,3 +83,30 @@ def quantize_rows_ref(x):
 
 def dequantize_rows_ref(q, scales, dtype=jnp.float32):
     return (q.astype(jnp.float32) * scales).astype(dtype)
+
+
+def gather_dequant_rows_ref(q_table, scales_table, rows, dtype=jnp.float32):
+    """Two-pass oracle for the fused dequant-on-gather kernel: gather the int8
+    rows and their scales, THEN dequantize the whole batch (the fp-width HBM
+    intermediate the fused kernel avoids).
+
+    q_table int8 [R, L]; scales_table f32 [R, 1]; rows i32[S] (clamped).
+    Returns [S, L] ``dtype``.
+    """
+    r = q_table.shape[0]
+    idx = jnp.clip(rows, 0, r - 1)
+    return dequantize_rows_ref(q_table[idx], scales_table[idx], dtype)
+
+
+def encode_scatter_rows_ref(q_table, scales_table, x, rows):
+    """Two-pass oracle for the fused encode-on-scatter kernel: quantize the
+    whole staged batch, THEN scatter rows + scales (the encoded-batch
+    intermediate the fused kernel avoids).
+
+    q_table int8 [R, L]; scales_table f32 [R, 1]; x fp [S, L];
+    rows i32[S] (<0 or >= R ⇒ dropped). Returns (new_q_table, new_scales_table).
+    """
+    q, s = quantize_rows_ref(x)
+    safe = jnp.where(rows >= 0, rows, q_table.shape[0])  # OOB ⇒ dropped
+    return (q_table.at[safe].set(q, mode="drop"),
+            scales_table.at[safe].set(s, mode="drop"))

@@ -67,8 +67,9 @@ class PhasePipeline:
         c = rcfg.num_candidates
 
         if rcfg.tiered:
+            fused = bool(getattr(rcfg, "fused_kernels", False))
             self._flush = jax.jit(
-                lambda buf, k: tiered_mod.tiered_flush(buf, k))
+                lambda buf, k: tiered_mod.tiered_flush(buf, k, fused=fused))
             self._push = jax.jit(
                 lambda buf, items, labels, k: tiered_mod.tiered_push(
                     buf, items, labels, k, c, pol))

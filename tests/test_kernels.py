@@ -133,3 +133,125 @@ def test_rehearsal_gather_sees_fresh_writes():
     np.testing.assert_allclose(np.asarray(reps[0]), 1.0)
     np.testing.assert_allclose(np.asarray(reps[1]), 1.0)
     np.testing.assert_allclose(np.asarray(reps[2]), 0.0)
+
+
+@settings(deadline=None, max_examples=15)
+@given(
+    r=st.integers(4, 32),
+    l=st.integers(4, 32),
+    c=st.integers(1, 12),
+    s=st.integers(1, 12),
+    tile=st.sampled_from([1, 4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_rehearsal_tiled_matches_single_row_path(r, l, c, s, tile, seed):
+    """The sublane-tiled scatter/gather == the original [1, L]-per-step form ==
+    the ref, bit-for-bit — including duplicate targets (serialized last-write-
+    wins) and dropped candidates."""
+    key = jax.random.PRNGKey(seed)
+    buf = jax.random.normal(key, (r, l))
+    cands = jax.random.normal(jax.random.fold_in(key, 1), (c, l))
+    cand_rows = jax.random.randint(jax.random.fold_in(key, 2), (c,), -1, r)
+    samp_rows = jax.random.randint(jax.random.fold_in(key, 3), (s,), 0, r)
+    nb_t, reps_t = ops.rehearsal_update_sample(buf, cands, cand_rows, samp_rows,
+                                               row_tile=tile)
+    nb_1, reps_1 = ops.rehearsal_update_sample(buf, cands, cand_rows, samp_rows,
+                                               row_tile=1)
+    np.testing.assert_array_equal(np.asarray(nb_t), np.asarray(nb_1))
+    np.testing.assert_array_equal(np.asarray(reps_t), np.asarray(reps_1))
+
+
+# ---------------------------------------------------------------------------
+# fused tiered hot path: dequant-on-gather + encode-on-scatter
+# ---------------------------------------------------------------------------
+
+
+@settings(deadline=None, max_examples=15)
+@given(
+    r=st.integers(1, 40),
+    l=st.integers(1, 40),
+    s=st.integers(1, 16),
+    tile=st.sampled_from([1, 4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gather_dequant_matches_ref(r, l, s, tile, seed):
+    """Fused gather+dequant == the two-pass oracle over ragged shapes (rows
+    clamp; duplicates are reads, so always well-defined)."""
+    key = jax.random.PRNGKey(seed)
+    q = jax.random.randint(key, (r, l), -127, 128, dtype=jnp.int8)
+    scales = jax.random.uniform(jax.random.fold_in(key, 1), (r, 1),
+                                minval=1e-4, maxval=4.0)
+    rows = jax.random.randint(jax.random.fold_in(key, 2), (s,), 0, r)
+    got = ops.gather_dequant(q, scales, rows, row_tile=tile)
+    want = ref.gather_dequant_rows_ref(q, scales, rows)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(deadline=None, max_examples=15)
+@given(
+    r=st.integers(1, 40),
+    l=st.integers(1, 40),
+    c=st.integers(1, 16),
+    tile=st.sampled_from([1, 4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_encode_scatter_matches_ref(r, l, c, tile, seed):
+    """Fused quantize+scatter == the two-pass oracle over ragged shapes and
+    dropped (-1 and positive-OOB) targets; int8 payload pinned exact, scales to
+    the kernel-vs-eager float tolerance (matching test_compression)."""
+    key = jax.random.PRNGKey(seed)
+    q = jax.random.randint(key, (r, l), -127, 128, dtype=jnp.int8)
+    scales = jax.random.uniform(jax.random.fold_in(key, 1), (r, 1),
+                                minval=1e-4, maxval=4.0)
+    x = jax.random.normal(jax.random.fold_in(key, 2), (c, l)) * 3
+    rows = jax.random.randint(jax.random.fold_in(key, 3), (c,), -1, r + 2)
+    gq, gs = ops.encode_scatter(q, scales, x, rows)
+    wq, ws = ref.encode_scatter_rows_ref(q, scales, x, rows)
+    vals = np.asarray(rows)
+    valid = vals[(vals >= 0) & (vals < r)]
+    if len(np.unique(valid)) == len(valid):
+        np.testing.assert_array_equal(np.asarray(gq), np.asarray(wq))
+        np.testing.assert_allclose(np.asarray(gs), np.asarray(ws), rtol=1e-6)
+    else:  # duplicate winners are order-defined; pin fused == fused-at-tile-1
+        gq1, gs1 = ops.encode_scatter(q, scales, x, rows, row_tile=1)
+        np.testing.assert_array_equal(np.asarray(gq), np.asarray(gq1))
+        np.testing.assert_array_equal(np.asarray(gs), np.asarray(gs1))
+    # untouched rows identical regardless
+    untouched = np.setdiff1d(np.arange(r), valid)
+    np.testing.assert_array_equal(np.asarray(gq)[untouched], np.asarray(wq)[untouched])
+    np.testing.assert_array_equal(np.asarray(gs)[untouched], np.asarray(ws)[untouched])
+
+
+def test_encode_scatter_all_invalid_stage_is_identity():
+    """An empty demotion stage (all rows dropped) must leave the cold table
+    bit-identical — the step-0 tiered flush."""
+    q = jax.random.randint(jax.random.PRNGKey(0), (16, 12), -127, 128, dtype=jnp.int8)
+    scales = jax.random.uniform(jax.random.PRNGKey(1), (16, 1))
+    x = jax.random.normal(jax.random.PRNGKey(2), (6, 12))
+    for bad in (jnp.full((6,), -1, jnp.int32), jnp.full((6,), 99, jnp.int32)):
+        gq, gs = ops.encode_scatter(q, scales, x, bad)
+        np.testing.assert_array_equal(np.asarray(gq), np.asarray(q))
+        np.testing.assert_array_equal(np.asarray(gs), np.asarray(scales))
+
+
+def test_encode_scatter_duplicate_rows_last_write_wins():
+    """Duplicate targets resolve in candidate order (the XLA scatter contract)."""
+    q = jnp.zeros((8, 4), jnp.int8)
+    scales = jnp.ones((8, 1))
+    x = jnp.stack([jnp.full((4,), 10.0), jnp.full((4,), 20.0), jnp.full((4,), 30.0)])
+    rows = jnp.array([5, 5, 5], jnp.int32)
+    gq, gs = ops.encode_scatter(q, scales, x, rows)
+    qr, sr = ref.quantize_rows_ref(x)
+    np.testing.assert_array_equal(np.asarray(gq[5]), np.asarray(qr[2]))
+    np.testing.assert_allclose(np.asarray(gs[5]), np.asarray(sr[2]), rtol=1e-6)
+
+
+def test_gather_dequant_preserves_record_dtype():
+    q = jax.random.randint(jax.random.PRNGKey(3), (10, 8), -127, 128, dtype=jnp.int8)
+    scales = jax.random.uniform(jax.random.PRNGKey(4), (10, 1))
+    rows = jnp.arange(4, dtype=jnp.int32)
+    out = ops.gather_dequant(q, scales, rows, dtype=jnp.bfloat16)
+    assert out.dtype == jnp.bfloat16
+    want = ref.gather_dequant_rows_ref(q, scales, rows, dtype=jnp.bfloat16)
+    np.testing.assert_array_equal(np.asarray(out, np.float32),
+                                  np.asarray(want, np.float32))

@@ -222,6 +222,56 @@ def test_rpl010_conditional_donate_argnums_resolves_literals():
     assert codes(res) == ["RPL010"]
 
 
+def test_rpl010_flags_read_after_aliased_pallas_call():
+    # the immediate-call form: input_output_aliases={2: 0} kills operand 2; the
+    # dict *value* 0 is an output index and must NOT kill operand 0
+    res = run("""
+        import jax
+        from jax.experimental import pallas as pl
+
+        def wrapper(rows, samp, buffer, cands, kernel, shapes):
+            new_buffer, reps = pl.pallas_call(
+                kernel,
+                out_shape=shapes,
+                input_output_aliases={2: 0},
+            )(rows, samp, buffer, cands)
+            stale = buffer[0]
+            fresh = rows[0] + cands[0]
+            return new_buffer, reps, stale, fresh
+    """, ["RPL010"])
+    assert codes(res) == ["RPL010"]
+    assert "buffer" in res.findings[0].message
+
+
+def test_rpl010_flags_read_after_name_bound_aliased_pallas_call():
+    res = run("""
+        import jax
+        from jax.experimental import pallas as pl
+
+        def make(kernel, shapes):
+            op = pl.pallas_call(kernel, out_shape=shapes,
+                                input_output_aliases={0: 0})
+
+            def apply(table, x):
+                out = op(table, x)
+                return out, table.shape
+            return apply
+    """, ["RPL010"])
+    assert codes(res) == ["RPL010"]
+
+
+def test_rpl010_unaliased_pallas_call_is_clean():
+    res = run("""
+        import jax
+        from jax.experimental import pallas as pl
+
+        def wrapper(x, kernel, shapes):
+            out = pl.pallas_call(kernel, out_shape=shapes)(x)
+            return out + x[0]
+    """, ["RPL010"])
+    assert codes(res) == []
+
+
 # ---------------------------------------------------------------------------
 # RPL020 / RPL021 — jit purity
 # ---------------------------------------------------------------------------
